@@ -1,0 +1,35 @@
+"""Paper Fig. 4 — silhouette score of k-means over W vs k, per scenario.
+
+Expected: monotone decrease for label shift (no cluster structure);
+peak at the true group count for covariate/concept shift.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks import common
+from repro.core import clustering, ucfl
+from repro.models import lenet
+
+
+def run(scale) -> list[str]:
+    rows = []
+    for scen in ["label_shift", "covariate_label_shift", "concept_shift"]:
+        key = jax.random.PRNGKey(11)
+        dkey, mkey = jax.random.split(key)
+        data = common.scenario_data(scen, dkey, scale)
+        params0 = common.make_params0(
+            mkey, scale, common.num_classes_for(scen, scale))
+        t0 = time.time()
+        collab = ucfl.compute_collaboration(lenet.apply, params0, data,
+                                            var_batch_size=scale.var_batch)
+        dt = (time.time() - t0) * 1e6
+        for k in range(2, min(scale.m, 9)):
+            res = clustering.kmeans(jax.random.PRNGKey(k), collab["W"], k)
+            s = float(clustering.silhouette_score(collab["W"], res.labels))
+            rows.append(common.csv_row(f"fig4/{scen}/k={k}", dt,
+                                       f"silhouette={s:.4f}"))
+            print(rows[-1], flush=True)
+    return rows

@@ -1,0 +1,21 @@
+"""Paper Fig. 6 — proposed UCFL vs parallel (exact Eq. 4) user-centric FL."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+
+ALGOS = ["ucfl", "ucfl_parallel", "fedavg", "local", "oracle"]
+
+
+def run(scale) -> list[str]:
+    rows = []
+    for algo in ALGOS:
+        t0 = time.time()
+        res = common.run_trials("concept_shift", algo, scale)
+        dt = (time.time() - t0) * 1e6 / max(scale.rounds * scale.trials, 1)
+        rows.append(common.csv_row(
+            f"fig6/concept_shift/{algo}", dt,
+            f"avg_acc={res['avg']:.4f}"))
+        print(rows[-1], flush=True)
+    return rows

@@ -1,0 +1,25 @@
+"""Paper Fig. 7 — effect of the variance-estimation minibatch size."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks import common
+
+
+def run(scale) -> list[str]:
+    rows = []
+    sizes = [10, 25, 50, 100]
+    for scen in ["label_shift", "covariate_label_shift"]:
+        for nb in sizes:
+            if nb > scale.n:
+                continue
+            t0 = time.time()
+            s2 = dataclasses.replace(scale, var_batch=nb)
+            res = common.run_trials(scen, "ucfl", s2)
+            dt = (time.time() - t0) * 1e6 / max(scale.rounds * scale.trials, 1)
+            rows.append(common.csv_row(
+                f"fig7/{scen}/var_batch={nb}", dt,
+                f"avg_acc={res['avg']:.4f}"))
+            print(rows[-1], flush=True)
+    return rows

@@ -1,0 +1,51 @@
+"""PS-kernel micro-benchmarks: mix_aggregate / pairwise_delta /
+kmeans_assign. CPU timings use the jnp reference path (the Pallas kernels
+target TPU; interpret-mode timing is not meaningful), plus the analytic
+HBM-bytes each kernel streams on TPU (the relevant roofline quantity)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(scale) -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for m, d in [(16, 1 << 20), (32, 1 << 22)]:
+        w = jnp.asarray(rng.normal(size=(m, m)).astype(np.float32))
+        t = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+        us = _time(lambda: ops.mix_aggregate(w, t, impl="ref"))
+        hbm = (m * d * 4 * 2 + m * m * 4)  # read Θ + write Θ' + W
+        rows.append(common.csv_row(
+            f"kernel/mix_aggregate/m{m}_d{d}", us,
+            f"tpu_hbm_bytes={hbm};tpu_roofline_us={hbm / 819e9 * 1e6:.1f}"))
+        print(rows[-1], flush=True)
+        us = _time(lambda: ops.pairwise_delta(t, impl="ref"))
+        hbm = m * d * 4 + m * m * 4
+        rows.append(common.csv_row(
+            f"kernel/pairwise_delta/m{m}_d{d}", us,
+            f"tpu_hbm_bytes={hbm};tpu_roofline_us={hbm / 819e9 * 1e6:.1f}"))
+        print(rows[-1], flush=True)
+    pts = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    cen = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    us = _time(lambda: ops.kmeans_assign(pts, cen, impl="ref"))
+    rows.append(common.csv_row("kernel/kmeans_assign/m128_k8", us,
+                               "fits_vmem=True"))
+    print(rows[-1], flush=True)
+    return rows

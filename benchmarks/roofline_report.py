@@ -1,0 +1,31 @@
+"""Aggregate the dry-run JSON artifacts into the §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+RESULT_GLOB = os.environ.get("DRYRUN_GLOB", "results/dryrun/*.json")
+
+
+def run(scale) -> list[str]:
+    rows = []
+    for path in sorted(glob.glob(RESULT_GLOB)):
+        with open(path) as f:
+            d = json.load(f)
+        name = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}/{d['agg']}"
+        derived = (
+            f"comp_ms={d['compute_s'] * 1e3:.2f};"
+            f"mem_ms={d['memory_s'] * 1e3:.2f};"
+            f"coll_ms={d['collective_s'] * 1e3:.2f};"
+            f"dom={d['dominant']};useful={d['useful_flops_ratio']:.3f}"
+        )
+        rows.append(common.csv_row(name, d.get("t_compile_s", 0) * 1e6,
+                                   derived))
+        print(rows[-1], flush=True)
+    if not rows:
+        print("roofline/NO_RESULTS,0.00,run repro.launch.dryrun first",
+              flush=True)
+    return rows

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (per the repo convention).
+
+  PYTHONPATH=src python -m benchmarks.run            # fast scale (CPU)
+  PYTHONPATH=src python -m benchmarks.run --full     # paper scale
+  PYTHONPATH=src python -m benchmarks.run --only table1,fig4
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale m/rounds/trials (slow)")
+    ap.add_argument("--only", default="all")
+    args = ap.parse_args()
+
+    from benchmarks import (common, fig4_silhouette, fig5_comm_efficiency,
+                            fig6_parallel_ucfl, fig7_minibatch, kernel_bench,
+                            roofline_report, table1_accuracy,
+                            table2_worst_user)
+
+    scale = common.FULL if args.full else common.FAST
+    suites = {
+        "kernel": kernel_bench,
+        "roofline": roofline_report,
+        "table1": table1_accuracy,
+        "table2": table2_worst_user,
+        "fig4": fig4_silhouette,
+        "fig5": fig5_comm_efficiency,
+        "fig6": fig6_parallel_ucfl,
+        "fig7": fig7_minibatch,
+    }
+    only = None if args.only == "all" else set(args.only.split(","))
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    all_rows = []
+    for name, mod in suites.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr, flush=True)
+        all_rows.extend(mod.run(scale))
+    print(f"# total {len(all_rows)} rows in {time.time() - t0:.1f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

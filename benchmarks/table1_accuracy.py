@@ -1,0 +1,26 @@
+"""Paper Table I — average test accuracy, 3 scenarios x algorithms."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+
+ALGOS = ["ucfl", "ucfl_k4", "fedavg", "fedprox", "scaffold", "ditto",
+         "pfedme", "local", "oracle"]
+SCENARIOS = ["label_shift", "covariate_label_shift", "concept_shift"]
+
+
+def run(scale) -> list[str]:
+    rows = []
+    for scen in SCENARIOS:
+        for algo in ALGOS:
+            if scen == "label_shift" and algo == "oracle":
+                continue  # paper: no oracle for label shift (no true groups)
+            t0 = time.time()
+            res = common.run_trials(scen, algo, scale)
+            dt = (time.time() - t0) * 1e6 / max(scale.rounds * scale.trials, 1)
+            rows.append(common.csv_row(
+                f"table1/{scen}/{algo}", dt,
+                f"avg_acc={res['avg']:.4f}±{res['avg_std']:.4f}"))
+            print(rows[-1], flush=True)
+    return rows

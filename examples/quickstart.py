@@ -1,0 +1,49 @@
+"""Quickstart: user-centric federated learning in ~60 lines.
+
+Builds a concept-shift federated problem (two groups of clients with
+permuted labels — collaboration across groups is poisonous), computes the
+paper's collaboration coefficients in one special round, trains with
+user-centric aggregation, and compares against FedAvg.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import FedConfig, REGISTRY, ucfl
+from repro.data import synthetic
+from repro.federated import simulation
+from repro.models import lenet
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    dkey, mkey, skey = jax.random.split(key, 3)
+
+    # 8 clients in 2 concept groups (label permutations), synthetic images
+    data = synthetic.concept_shift(dkey, m=8, n=200, n_test=50,
+                                   num_classes=8, groups=2, hw=(16, 16),
+                                   channels=1, noise=0.9)
+    params0 = lenet.init(mkey, input_hw=(16, 16), channels=1, num_classes=8)
+    cfg = FedConfig(lr=0.1, momentum=0.9, epochs=1, batch_size=50)
+
+    # ---- the paper's special round: gradient-similarity weights (Eq. 9/10)
+    collab = ucfl.compute_collaboration(lenet.apply, params0, data,
+                                        var_batch_size=50)
+    print("collaboration matrix W (rows = clients):")
+    print(np.array_str(np.asarray(collab["W"]), precision=2,
+                       suppress_small=True))
+
+    # ---- train: user-centric aggregation vs FedAvg
+    for name, strat in [
+        ("user-centric", ucfl.make_ucfl(lenet.apply, params0, cfg,
+                                        var_batch_size=50)),
+        ("fedavg", REGISTRY["fedavg"](lenet.apply, params0, cfg)),
+    ]:
+        h = simulation.run(strat, lenet.apply, data, skey, rounds=10,
+                           eval_every=5, verbose=True)
+        print(f"--> {name}: avg={h.final_avg:.3f} worst={h.final_worst:.3f}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Personalized batched serving (the decode path of the dry-run).
+
+Two federated clients each serve their own personalized gemma2-family
+model with batched requests, rolling-window + global KV caches.
+
+  PYTHONPATH=src python examples/serve_personalized.py
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    sys.argv = [
+        "serve", "--arch", "gemma2-9b", "--smoke", "--clients", "2",
+        "--batch", "2", "--prompt-len", "24", "--decode-tokens", "12",
+    ]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — User-Centric Federated Learning on multi-pod TPU meshes (JAX)."""
+__version__ = "1.0.0"

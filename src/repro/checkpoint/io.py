@@ -1,0 +1,59 @@
+"""Msgpack checkpointing for pytrees of jax/numpy arrays."""
+from __future__ import annotations
+
+import os
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _encode(obj):
+    if isinstance(obj, (np.ndarray, np.generic)):
+        return {
+            b"__nd__": True,
+            b"dtype": str(obj.dtype),
+            b"shape": list(np.shape(obj)),
+            b"data": np.ascontiguousarray(obj).tobytes(),
+        }
+    return obj
+
+
+def _decode(obj):
+    if isinstance(obj, dict) and obj.get(b"__nd__"):
+        arr = np.frombuffer(obj[b"data"], dtype=np.dtype(obj[b"dtype"].decode()
+                            if isinstance(obj[b"dtype"], bytes) else obj[b"dtype"]))
+        return arr.reshape(obj[b"shape"])
+    return obj
+
+
+def save(path: str, tree) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [np.asarray(l) for l in leaves],
+    }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, default=_encode))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (shapes/dtypes verified)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), object_hook=_decode,
+                                  strict_map_key=False)
+    leaves, treedef = jax.tree.flatten(like)
+    saved = payload["leaves"]
+    if len(saved) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(saved)} leaves, expected {len(leaves)}"
+        )
+    out = []
+    for l, s in zip(leaves, saved):
+        if tuple(np.shape(s)) != tuple(np.shape(l)):
+            raise ValueError(f"shape mismatch {np.shape(s)} vs {np.shape(l)}")
+        out.append(np.asarray(s).astype(l.dtype))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,39 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig  # noqa: F401
+
+from repro.configs.gemma2_9b import CONFIG as _gemma2
+from repro.configs.stablelm_1_6b import CONFIG as _stablelm
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.zamba2_2_7b import CONFIG as _zamba2
+from repro.configs.qwen2_7b import CONFIG as _qwen2
+from repro.configs.kimi_k2_1t_a32b import CONFIG as _kimi
+from repro.configs.phi3_medium_14b import CONFIG as _phi3
+from repro.configs.internvl2_1b import CONFIG as _internvl2
+from repro.configs.whisper_large_v3 import CONFIG as _whisper
+from repro.configs.mamba2_1_3b import CONFIG as _mamba2
+
+ARCHITECTURES = {
+    c.name: c
+    for c in (
+        _gemma2, _stablelm, _mixtral, _zamba2, _qwen2,
+        _kimi, _phi3, _internvl2, _whisper, _mamba2,
+    )
+}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in ARCHITECTURES:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(ARCHITECTURES)}"
+        )
+    return ARCHITECTURES[name]
+
+
+def applicable_shapes(cfg: ModelConfig):
+    """The input shapes this arch runs (DESIGN.md skip rules)."""
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.long_context_ok:
+        shapes.append("long_500k")
+    return [INPUT_SHAPES[s] for s in shapes]

@@ -1,0 +1,11 @@
+from repro.core import (  # noqa: F401
+    aggregation,
+    clustering,
+    comm_model,
+    pytree,
+    similarity,
+    strategy,
+    ucfl,
+)
+from repro.core import baselines  # noqa: F401  (registers all baselines)
+from repro.core.strategy import REGISTRY, FedConfig, Strategy  # noqa: F401

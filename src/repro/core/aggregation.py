@@ -1,0 +1,72 @@
+"""PS-side aggregation rules (paper Eq. 1/2/8 and §IV-B clustered variant).
+
+All rules operate on a *client-stacked* pytree (every leaf has leading axis
+m) and return a stacked pytree of the same structure:
+
+  * ``fedavg``        — Eq. 1: one convex combination, broadcast to all m.
+  * ``user_centric``  — Eq. 8: θ_i ← Σ_j W[i,j] θ_j (full personalization,
+                        m distinct downlink streams).
+  * ``clustered``     — §IV-B: only m_t centroid rules are materialized;
+                        every client in cluster C_n receives the centroid
+                        mix (group-cast, m_t streams).
+
+The heavy lifting per leaf is a (rules, m) × (m, d) matmul executed by the
+``mix_aggregate`` kernel (Pallas on TPU, jnp oracle on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _mix_tree(w, stacked, *, impl=None):
+    """Apply mixing matrix w (k, m) to each leaf of a client-stacked tree."""
+
+    def leaf(x):
+        m = x.shape[0]
+        flat = x.reshape(m, -1)
+        out = ops.mix_aggregate(w, flat, impl=impl)
+        return out.reshape((w.shape[0],) + x.shape[1:])
+
+    return jax.tree.map(leaf, stacked)
+
+
+def fedavg(stacked, n, *, impl=None):
+    """Eq. 1 with w_i = n_i / Σ n_j, result broadcast back to all clients."""
+    m = n.shape[0]
+    w = (n / jnp.sum(n)).astype(jnp.float32)[None, :]  # (1, m)
+    mixed = _mix_tree(w, stacked, impl=impl)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (m,) + x.shape[1:]), mixed)
+
+
+def user_centric(stacked, w, *, impl=None):
+    """Eq. 8 — full per-client personalization; w is the (m, m) matrix."""
+    return _mix_tree(w, stacked, impl=impl)
+
+
+def clustered(stacked, w, labels, num_clusters, *, impl=None):
+    """§IV-B — m_t centroid aggregation rules, group-cast to members.
+
+    Args:
+      stacked: client-stacked pytree of locally-optimized models.
+      w: (m, m) user-centric mixing matrix.
+      labels: (m,) int cluster assignment from K-means over rows of w.
+      num_clusters: static m_t.
+    Returns:
+      stacked tree where client i holds the mix of its cluster centroid.
+    """
+    m = w.shape[0]
+    onehot = jax.nn.one_hot(labels, num_clusters, dtype=jnp.float32)  # (m, mt)
+    counts = jnp.maximum(onehot.sum(axis=0), 1.0)  # (mt,)
+    centroid_w = (onehot.T @ w) / counts[:, None]  # (mt, m) — centroid rules
+    mixed = _mix_tree(centroid_w, stacked, impl=impl)  # (mt, ...)
+    return jax.tree.map(lambda x: jnp.take(x, labels, axis=0), mixed)
+
+
+def centroid_rules(w, labels, num_clusters):
+    """The (m_t, m) centroid mixing rows (the downlink streams)."""
+    onehot = jax.nn.one_hot(labels, num_clusters, dtype=jnp.float32)
+    counts = jnp.maximum(onehot.sum(axis=0), 1.0)
+    return (onehot.T @ w) / counts[:, None]

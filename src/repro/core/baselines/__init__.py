@@ -1,0 +1,15 @@
+"""All nine baselines the paper compares against (Tables I/II, Figs 2/5/6).
+
+Import side effects register each into ``repro.core.strategy.REGISTRY``.
+"""
+from repro.core.baselines import (  # noqa: F401
+    cfl,
+    ditto,
+    fedavg,
+    fedfomo,
+    fedprox,
+    local,
+    oracle,
+    pfedme,
+    scaffold,
+)

@@ -1,0 +1,28 @@
+"""Helpers shared by the baseline strategies."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation
+
+
+def broadcast_params(params0, m):
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (m,) + x.shape) + 0.0, params0
+    )
+
+
+def group_mixing_matrix(assignment, n):
+    """Row-stochastic W implementing per-group FedAvg (CFL/Oracle).
+
+    W[i, j] = n_j · 1[a_i == a_j] / Σ_{a_k == a_i} n_k.
+    """
+    same = (assignment[:, None] == assignment[None, :]).astype(jnp.float32)
+    w = same * n.astype(jnp.float32)[None, :]
+    return w / jnp.sum(w, axis=1, keepdims=True)
+
+
+def group_average(stacked, assignment, n, *, impl=None):
+    w = group_mixing_matrix(assignment, n)
+    return aggregation.user_centric(stacked, w, impl=impl)

@@ -1,0 +1,56 @@
+"""Ditto (Li et al., 2021) — global FedAvg + per-client personal model
+trained with a proximal pull λ·(v_i − θ_global) toward the global model.
+Evaluation uses the personal models v_i.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import aggregation
+from repro.core.baselines.common import broadcast_params
+from repro.core.strategy import FedConfig, Strategy, register
+from repro.federated import client as fedclient
+
+
+@register("ditto")
+def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
+               lam: float = 0.5, kernel_impl=None):
+    # global-model update: plain FedAvg local training
+    local_global = fedclient.make_federated_local_sgd(
+        apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
+        batch_size=cfg.batch_size,
+    )
+
+    def ditto_hook(grads, params, center):
+        g = jax.tree.map(lambda gg, p, c: gg + lam * (p - c), grads, params,
+                         center)
+        return g, center
+
+    local_personal = fedclient.make_federated_local_sgd(
+        apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
+        batch_size=cfg.batch_size, grad_hook=ditto_hook,
+    )
+
+    def init(key, data):
+        m = data.num_clients
+        return {
+            "params": broadcast_params(params0, m),  # global (stacked)
+            "personal": broadcast_params(params0, m),
+        }
+
+    @jax.jit
+    def _round(params, personal, n, x, y, key):
+        k1, k2 = jax.random.split(key)
+        updated, _ = local_global(params, x, y, k1)
+        new_global = aggregation.fedavg(updated, n, impl=kernel_impl)
+        # personal solver runs against the *received* global model
+        new_personal, _ = local_personal(personal, x, y, k2, params)
+        return new_global, new_personal
+
+    def round(state, data, key):
+        g, p = _round(state["params"], state["personal"], data.n, data.x,
+                      data.y, key)
+        return {"params": g, "personal": p}, {"streams": 1}
+
+    return Strategy(f"ditto_lam{lam}", init, round, lambda s: s["personal"],
+                    comm_scheme="broadcast", num_streams=1)

@@ -1,0 +1,33 @@
+"""FedAvg (McMahan et al., 2017) — Eq. 1."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import aggregation
+from repro.core.baselines.common import broadcast_params
+from repro.core.strategy import FedConfig, Strategy, register
+from repro.federated import client as fedclient
+
+
+@register("fedavg")
+def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
+                kernel_impl=None):
+    local = fedclient.make_federated_local_sgd(
+        apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
+        batch_size=cfg.batch_size,
+    )
+
+    def init(key, data):
+        return {"params": broadcast_params(params0, data.num_clients)}
+
+    @jax.jit
+    def _round(params, n, x, y, key):
+        updated, _ = local(params, x, y, key)
+        return aggregation.fedavg(updated, n, impl=kernel_impl)
+
+    def round(state, data, key):
+        new = _round(state["params"], data.n, data.x, data.y, key)
+        return {"params": new}, {"streams": 1}
+
+    return Strategy("fedavg", init, round, lambda s: s["params"],
+                    comm_scheme="broadcast", num_streams=1)

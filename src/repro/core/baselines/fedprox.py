@@ -1,0 +1,38 @@
+"""FedProx (Li et al., 2018) — FedAvg + proximal term μ/2·||θ − θ_global||²."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import aggregation
+from repro.core.baselines.common import broadcast_params
+from repro.core.strategy import FedConfig, Strategy, register
+from repro.federated import client as fedclient
+
+
+@register("fedprox")
+def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
+                 mu: float = 0.1, kernel_impl=None):
+    def prox_hook(grads, params, center):
+        g = jax.tree.map(lambda gg, p, c: gg + mu * (p - c), grads, params,
+                         center)
+        return g, center
+
+    local = fedclient.make_federated_local_sgd(
+        apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
+        batch_size=cfg.batch_size, grad_hook=prox_hook,
+    )
+
+    def init(key, data):
+        return {"params": broadcast_params(params0, data.num_clients)}
+
+    @jax.jit
+    def _round(params, n, x, y, key):
+        updated, _ = local(params, x, y, key, params)  # center = round start
+        return aggregation.fedavg(updated, n, impl=kernel_impl)
+
+    def round(state, data, key):
+        new = _round(state["params"], data.n, data.x, data.y, key)
+        return {"params": new}, {"streams": 1}
+
+    return Strategy(f"fedprox_mu{mu}", init, round, lambda s: s["params"],
+                    comm_scheme="broadcast", num_streams=1)

@@ -1,0 +1,31 @@
+"""Local training — no collaboration (reference lower/upper bound)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.baselines.common import broadcast_params
+from repro.core.strategy import FedConfig, Strategy, register
+from repro.federated import client as fedclient
+
+
+@register("local")
+def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
+    local = fedclient.make_federated_local_sgd(
+        apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
+        batch_size=cfg.batch_size,
+    )
+
+    def init(key, data):
+        return {"params": broadcast_params(params0, data.num_clients)}
+
+    @jax.jit
+    def _round(params, x, y, key):
+        updated, _ = local(params, x, y, key)
+        return updated
+
+    def round(state, data, key):
+        return ({"params": _round(state["params"], data.x, data.y, key)},
+                {"streams": 0})
+
+    return Strategy("local", init, round, lambda s: s["params"],
+                    comm_scheme="broadcast", num_streams=0)

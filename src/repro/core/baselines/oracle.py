@@ -1,0 +1,33 @@
+"""Oracle — per-ground-truth-cluster FedAvg (the paper's upper bound)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.baselines.common import broadcast_params, group_average
+from repro.core.strategy import FedConfig, Strategy, register
+from repro.federated import client as fedclient
+
+
+@register("oracle")
+def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
+                kernel_impl=None):
+    local = fedclient.make_federated_local_sgd(
+        apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
+        batch_size=cfg.batch_size,
+    )
+
+    def init(key, data):
+        return {"params": broadcast_params(params0, data.num_clients)}
+
+    @jax.jit
+    def _round(params, group, n, x, y, key):
+        updated, _ = local(params, x, y, key)
+        return group_average(updated, group, n, impl=kernel_impl)
+
+    def round(state, data, key):
+        new = _round(state["params"], data.group, data.n, data.x, data.y, key)
+        num_groups = int(jax.numpy.max(data.group)) + 1
+        return {"params": new}, {"streams": num_groups}
+
+    return Strategy("oracle", init, round, lambda s: s["params"],
+                    comm_scheme="groupcast")

@@ -1,0 +1,78 @@
+"""pFedMe (Dinh et al., 2020) — Moreau-envelope personalization.
+
+Per batch, the client approximately solves the proximal inner problem
+  φ ≈ argmin_φ f̃_i(φ; batch) + (λ/2)||φ − w_i||²
+with S gradient steps, then moves its local copy w_i ← w_i − η·λ·(w_i − φ).
+The server averages the w_i. Evaluation uses the personalized φ_i.
+Paper footnote 2: η_global = η_local = 0.01, S = 15, E = 1, batch 20.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import aggregation
+from repro.core.baselines.common import broadcast_params
+from repro.core.strategy import FedConfig, Strategy, register
+from repro.data.loader import epoch_batches
+from repro.federated.client import make_loss
+
+
+@register("pfedme")
+def make_pfedme(apply_fn, params0,
+                cfg: FedConfig = FedConfig(lr=0.01, momentum=0.0, epochs=1,
+                                           batch_size=20), *,
+                lam: float = 15.0, inner_steps: int = 15,
+                inner_lr: float = 0.01, beta: float = 1.0, kernel_impl=None):
+    loss = make_loss(apply_fn)
+    grad_fn = jax.grad(loss)
+
+    def client_update(w, x, y, key):
+        def one_epoch(carry, ekey):
+            w, phi = carry
+            xb, yb = epoch_batches(ekey, x, y, cfg.batch_size)
+
+            def step(c, batch):
+                w, _ = c
+                bx, by = batch
+
+                def inner(_, phi):
+                    g = grad_fn(phi, bx, by)
+                    return jax.tree.map(
+                        lambda p, gg, ww: p - inner_lr * (gg + lam * (p - ww)),
+                        phi, g, w,
+                    )
+
+                phi = jax.lax.fori_loop(0, inner_steps, inner, w)
+                w = jax.tree.map(lambda ww, p: ww - cfg.lr * lam * (ww - p),
+                                 w, phi)
+                return (w, phi), None
+
+            (w, phi), _ = jax.lax.scan(step, (w, w), (xb, yb))
+            return (w, phi), None
+
+        (w, phi), _ = jax.lax.scan(one_epoch, (w, w),
+                                   jax.random.split(key, cfg.epochs))
+        return w, phi
+
+    def init(key, data):
+        m = data.num_clients
+        return {
+            "params": broadcast_params(params0, m),  # local copies w_i
+            "personal": broadcast_params(params0, m),  # φ_i
+        }
+
+    @jax.jit
+    def _round(w, n, x, y, key):
+        m = x.shape[0]
+        keys = jax.random.split(key, m)
+        new_w, phi = jax.vmap(client_update)(w, x, y, keys)
+        avg = aggregation.fedavg(new_w, n, impl=kernel_impl)
+        mixed = jax.tree.map(lambda a, b: (1 - beta) * a + beta * b, new_w, avg)
+        return mixed, phi
+
+    def round(state, data, key):
+        w, phi = _round(state["params"], data.n, data.x, data.y, key)
+        return {"params": w, "personal": phi}, {"streams": 1}
+
+    return Strategy("pfedme", init, round, lambda s: s["personal"],
+                    comm_scheme="broadcast", num_streams=1)

@@ -1,0 +1,66 @@
+"""SCAFFOLD (Karimireddy et al., 2019) — stochastic controlled averaging.
+
+Local step: θ ← θ − η(∇f_i(θ) − c_i + c). Control update (option II):
+c_i⁺ = c_i − c + (θ_global − θ_i⁺)/(K·η); with full participation the
+server sets c ← mean_i c_i⁺ and θ ← mean_i θ_i⁺. Paper footnote 2 uses
+η=0.01, E=5, no momentum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation
+from repro.core.baselines.common import broadcast_params
+from repro.core.strategy import FedConfig, Strategy, register
+from repro.core.pytree import tree_zeros_like
+from repro.federated import client as fedclient
+
+
+@register("scaffold")
+def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentum=0.0, epochs=5), *,
+                  kernel_impl=None):
+    def control_hook(grads, params, ctrl):
+        # ctrl = (c_i, c): correction −c_i + c
+        c_i, c = ctrl
+        g = jax.tree.map(lambda gg, ci, cg: gg - ci + cg, grads, c_i, c)
+        return g, ctrl
+
+    local = fedclient.make_federated_local_sgd(
+        apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
+        batch_size=cfg.batch_size, grad_hook=control_hook,
+    )
+
+    def init(key, data):
+        m = data.num_clients
+        stacked = broadcast_params(params0, m)
+        return {
+            "params": stacked,
+            "c_i": tree_zeros_like(stacked),
+            "c": tree_zeros_like(stacked),  # stacked copy of the global c
+        }
+
+    @jax.jit
+    def _round(params, c_i, c, n, x, y, key):
+        steps = (x.shape[1] // cfg.batch_size) * cfg.epochs
+        updated, _ = local(params, x, y, key, (c_i, c))
+        inv = 1.0 / (steps * cfg.lr)
+        new_c_i = jax.tree.map(
+            lambda ci, cg, start, end: ci - cg + inv * (start - end),
+            c_i, c, params, updated,
+        )
+        new_params = aggregation.fedavg(updated, n, impl=kernel_impl)
+        new_c = jax.tree.map(
+            lambda ci: jnp.broadcast_to(jnp.mean(ci, axis=0),
+                                        ci.shape) + 0.0,
+            new_c_i,
+        )
+        return new_params, new_c_i, new_c
+
+    def round(state, data, key):
+        p, ci, c = _round(state["params"], state["c_i"], state["c"],
+                          data.n, data.x, data.y, key)
+        return {"params": p, "c_i": ci, "c": c}, {"streams": 1}
+
+    return Strategy("scaffold", init, round, lambda s: s["params"],
+                    comm_scheme="broadcast", num_streams=1)

@@ -1,0 +1,149 @@
+"""JAX K-means + silhouette scoring over collaboration vectors (Alg. 2).
+
+Everything is jit-able: K-means++ seeding with a fixed PRNG key, Lloyd
+iterations under ``lax.fori_loop``, assignment via the ``kmeans_assign``
+kernel, and the exact (O(m²)) silhouette score of the paper's §IV-C.
+``choose_num_streams`` implements Algorithm 2: sweep k, score each
+clustering with a communication/personalization trade-off function
+c(k, s_k), return the argmax.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array  # (k, f)
+    labels: jax.Array  # (m,) int32
+    inertia: jax.Array  # scalar — Eq. 11 objective
+
+
+def _plusplus_init(key, points, k):
+    """K-means++ seeding (greedy D² sampling)."""
+    m = points.shape[0]
+    first = jax.random.randint(key, (), 0, m)
+    centroids = jnp.zeros((k, points.shape[1]), points.dtype)
+    centroids = centroids.at[0].set(points[first])
+
+    def body(i, carry):
+        centroids, key = carry
+        key, sub = jax.random.split(key)
+        # distance to nearest of the first i centroids; mask the rest.
+        d = (
+            jnp.sum((points[:, None, :] - centroids[None, :, :]) ** 2, axis=-1)
+        )  # (m, k)
+        d = jnp.where(jnp.arange(k)[None, :] < i, d, jnp.inf)
+        dmin = jnp.min(d, axis=1)
+        probs = dmin / jnp.maximum(jnp.sum(dmin), 1e-12)
+        idx = jax.random.choice(sub, m, p=probs)
+        return centroids.at[i].set(points[idx]), key
+
+    centroids, _ = jax.lax.fori_loop(1, k, body, (centroids, key))
+    return centroids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "impl"))
+def kmeans(key, points, k: int, *, iters: int = 50, impl=None) -> KMeansResult:
+    """Lloyd's algorithm on (m, f) points with K-means++ init."""
+    points = points.astype(jnp.float32)
+    centroids = _plusplus_init(key, points, k)
+
+    def step(_, centroids):
+        labels, _ = ops.kmeans_assign(points, centroids, impl=impl)
+        onehot = jax.nn.one_hot(labels, k, dtype=jnp.float32)  # (m, k)
+        counts = onehot.sum(axis=0)  # (k,)
+        sums = onehot.T @ points  # (k, f)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # keep empty clusters where they were
+        return jnp.where(counts[:, None] > 0, new, centroids)
+
+    centroids = jax.lax.fori_loop(0, iters, step, centroids)
+    labels, sqd = ops.kmeans_assign(points, centroids, impl=impl)
+    # Paper's Eq. 11 uses the (non-squared) distance sum; report that.
+    inertia = jnp.sum(jnp.sqrt(jnp.maximum(sqd, 0.0)))
+    return KMeansResult(centroids, labels, inertia)
+
+
+@jax.jit
+def silhouette_score(points, labels):
+    """Exact mean silhouette over (m, f) points with int labels.
+
+    s(i) = (b_i − a_i) / max(a_i, b_i); a = mean intra-cluster distance
+    (excluding self), b = smallest mean distance to another cluster.
+    Singleton clusters get s(i) = 0 (sklearn convention).
+    """
+    points = points.astype(jnp.float32)
+    m = points.shape[0]
+    d = jnp.sqrt(
+        jnp.maximum(
+            jnp.sum(points**2, 1)[:, None]
+            + jnp.sum(points**2, 1)[None, :]
+            - 2 * points @ points.T,
+            0.0,
+        )
+    )  # (m, m) euclidean
+    same = labels[:, None] == labels[None, :]  # (m, m)
+    not_self = ~jnp.eye(m, dtype=bool)
+    intra_cnt = jnp.sum(same & not_self, axis=1)
+    a = jnp.where(
+        intra_cnt > 0,
+        jnp.sum(jnp.where(same & not_self, d, 0.0), axis=1)
+        / jnp.maximum(intra_cnt, 1),
+        0.0,
+    )
+    # mean distance to each other cluster: use segment trick over labels
+    k = m  # labels < m always
+    onehot = jax.nn.one_hot(labels, k, dtype=jnp.float32)  # (m, k)
+    cnt = onehot.sum(0)  # (k,)
+    sums = d @ onehot  # (m, k) — Σ_{j in cluster c} d(i, j)
+    mean_to = sums / jnp.maximum(cnt[None, :], 1.0)
+    own = jax.nn.one_hot(labels, k, dtype=bool)
+    mean_to = jnp.where(own | (cnt[None, :] == 0), jnp.inf, mean_to)
+    b = jnp.min(mean_to, axis=1)
+    s = jnp.where(
+        (intra_cnt > 0) & jnp.isfinite(b),
+        (b - a) / jnp.maximum(jnp.maximum(a, b), 1e-12),
+        0.0,
+    )
+    return jnp.mean(s)
+
+
+def default_tradeoff(k: int, s: float, *, comm_penalty: float = 0.02) -> float:
+    """A typical c(k, s): increasing in silhouette, decreasing in #streams."""
+    return float(s) - comm_penalty * k
+
+
+def choose_num_streams(
+    key,
+    w_vectors,
+    *,
+    k_max: int | None = None,
+    tradeoff: Callable[[int, float], float] = default_tradeoff,
+    iters: int = 50,
+    impl=None,
+):
+    """Algorithm 2 — silhouette-based selection of m_t.
+
+    Sweeps k = 2..k_max, computes the silhouette of each K-means clustering
+    of the collaboration vectors, scores with ``tradeoff`` and returns
+    (best_k, {k: (silhouette, score, KMeansResult)}).
+    """
+    m = w_vectors.shape[0]
+    k_max = k_max or m - 1
+    results = {}
+    best_k, best_score = 1, -jnp.inf
+    for k in range(2, k_max + 1):
+        key, sub = jax.random.split(key)
+        res = kmeans(sub, w_vectors, k, iters=iters, impl=impl)
+        s = float(silhouette_score(w_vectors, res.labels))
+        score = tradeoff(k, s)
+        results[k] = (s, score, res)
+        if score > best_score:
+            best_k, best_score = k, score
+    return best_k, results

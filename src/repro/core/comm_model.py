@@ -1,0 +1,108 @@
+"""Communication/straggler timing model of §V-D.
+
+Round time of a federated system with m clients served by m_t downlink
+streams, parametrized by
+
+  * ρ = T_ul / T_dl — UL/DL model-transmission-time asymmetry (base station
+    transmits faster than edge devices; typical wireless ρ ∈ [2, 4]);
+  * shifted-exponential per-client compute time
+      P[T_i > t] = 1 − 1(t ≥ T_min)(1 − e^{−μ(t−T_min)}),
+    whose m-way max has mean  T_comp = T_min + H_m / μ;
+  * scheme — who transmits what:
+      - "broadcast"      (FedAvg):        1 DL stream, m UL uploads
+                                          (UL is parallel on orthogonal
+                                          resources, so counted once);
+      - "groupcast"      (clustered UCFL): m_t DL streams;
+      - "unicast"        (full UCFL):      m DL streams;
+      - "client_mixing"  (FedFomo):        every client downloads all m
+                                           models ⇒ m DL streams *per
+                                           client*; we charge m·T_dl like
+                                           the paper's Fig. 5 does.
+
+TPU-adaptation note (DESIGN.md §2): on a pod these DL streams become ICI
+collective volume; this module keeps the paper's analytic wireless model so
+the Fig. 5 benchmark can be reproduced, while the measured ICI counterpart
+lives in launch/roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+def harmonic(m: int) -> float:
+    return sum(1.0 / i for i in range(1, m + 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemParams:
+    m: int  # number of clients
+    rho: float = 4.0  # T_ul / T_dl
+    t_dl: float = 1.0  # downlink transmission time of one model
+    t_min: float = 1.0  # minimum compute time (in units of t_dl)
+    inv_mu: float = 1.0  # mean extra straggler delay 1/μ (0 ⇒ reliable)
+
+
+def expected_compute_time(p: SystemParams) -> float:
+    """E[max(T_1..T_m)] = T_min + H_m/μ for shifted exponentials."""
+    if p.inv_mu == 0.0:
+        return p.t_min
+    return p.t_min + harmonic(p.m) * p.inv_mu
+
+
+def round_time(p: SystemParams, scheme: str, num_streams: int | None = None) -> float:
+    """Wall-clock time of one communication round under §V-D."""
+    t_ul = p.rho * p.t_dl
+    t_comp = expected_compute_time(p)
+    if scheme == "broadcast":
+        dl = p.t_dl
+    elif scheme == "groupcast":
+        assert num_streams is not None
+        dl = num_streams * p.t_dl
+    elif scheme == "unicast":
+        dl = p.m * p.t_dl
+    elif scheme == "client_mixing":  # FedFomo-style client-side aggregation
+        dl = p.m * p.t_dl
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return dl + t_comp + t_ul
+
+
+def rounds_to_time(p: SystemParams, scheme: str, num_rounds: int,
+                   num_streams: int | None = None):
+    """Cumulative time axis (length num_rounds) for accuracy-vs-time plots."""
+    rt = round_time(p, scheme, num_streams)
+    return [rt * (t + 1) for t in range(num_rounds)]
+
+
+def downlink_bytes_per_round(model_bytes: int, scheme: str, m: int,
+                             num_streams: int | None = None) -> int:
+    """Raw DL payload per round — the wireless quantity the paper trades."""
+    if scheme == "broadcast":
+        return model_bytes
+    if scheme == "groupcast":
+        assert num_streams is not None
+        return num_streams * model_bytes
+    if scheme in ("unicast", "client_mixing"):
+        return m * model_bytes
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def ici_collective_bytes(model_bytes: int, scheme: str, m: int,
+                         num_streams: int | None = None) -> int:
+    """TPU counterpart: mixing-collective volume over the client axis.
+
+    FedAvg  = all-reduce           ≈ 2·model_bytes (ring),
+    UCFL    = all-gather + local mix ≈ (m−1)/m·m·model_bytes ≈ m·model_bytes,
+    cluster = m_t weighted reduce+bcast ≈ 2·m_t·model_bytes.
+    These closed forms are sanity checks for the HLO-parsed numbers in
+    launch/roofline.py.
+    """
+    if scheme == "broadcast":
+        return 2 * model_bytes
+    if scheme == "groupcast":
+        assert num_streams is not None
+        return 2 * num_streams * model_bytes
+    if scheme in ("unicast", "client_mixing"):
+        return m * model_bytes
+    raise ValueError(f"unknown scheme {scheme!r}")

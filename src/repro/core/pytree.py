@@ -1,0 +1,103 @@
+"""Pytree utilities used across the federated runtime.
+
+Stacked-client convention: a "client-stacked" pytree has every leaf with a
+leading axis of size ``m`` (number of clients). The PS-side aggregation
+rules in :mod:`repro.core.aggregation` operate on stacked trees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+def tree_stack(trees):
+    """Stack a list of identically-structured pytrees along a new axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree, m: int):
+    """Inverse of :func:`tree_stack`."""
+    return [jax.tree.map(lambda x, i=i: x[i], tree) for i in range(m)]
+
+
+def tree_ravel(tree):
+    """Flatten a pytree to a 1-D vector; returns (vector, unravel_fn)."""
+    return ravel_pytree(tree)
+
+
+def tree_stacked_ravel(stacked):
+    """Ravel a client-stacked tree to an (m, d) matrix.
+
+    Returns (matrix, unravel_fn) where unravel_fn maps an (m, d) matrix back
+    to the stacked tree.
+    """
+    leaves = jax.tree.leaves(stacked)
+    m = leaves[0].shape[0]
+    one = jax.tree.map(lambda x: x[0], stacked)
+    _, unravel_one = ravel_pytree(one)
+    mat = jax.vmap(lambda i: ravel_pytree(jax.tree.map(lambda x: x[i], stacked))[0])(
+        jnp.arange(m)
+    )
+
+    def unravel(matrix):
+        return jax.vmap(unravel_one)(matrix)
+
+    return mat, unravel
+
+
+def stacked_ravel(tree, lead: int = 1):
+    """Ravel a tree whose leaves share ``lead`` leading axes into a matrix.
+
+    Leaves (L0,..,L_{lead-1}, ...) are flattened and concatenated on the
+    last axis -> (L0,..,L_{lead-1}, d). No unravel is provided; use this
+    for similarity/distance computations only.
+    """
+    leaves = jax.tree.leaves(tree)
+    head = leaves[0].shape[:lead]
+    return jnp.concatenate(
+        [l.reshape(head + (-1,)) for l in leaves], axis=-1
+    )
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    """Inner product between two pytrees."""
+    parts = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, parts)
+
+
+def tree_sq_norm(a):
+    return tree_dot(a, a)
+
+
+def tree_weighted_sum(trees_stacked, w):
+    """``out = sum_j w[j] * stacked[j]`` for a client-stacked tree."""
+    return jax.tree.map(
+        lambda x: jnp.tensordot(w, x, axes=([0], [0])), trees_stacked
+    )
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a
+    )
+
+
+def tree_count_params(a) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(a))

@@ -1,0 +1,85 @@
+"""Collaboration-coefficient computation (paper §IV-A, Eq. 9-10).
+
+The special pre-training round: the PS broadcasts θ⁰; every client k
+uploads (i) its full local gradient ∇ℓ(θ⁰, D_k) and (ii) a variance
+estimate σ_k² computed by partitioning D_k into K minibatches (Eq. 10).
+The PS forms pairwise squared gradient distances Δ_{i,j} and the
+normalized-Gaussian-kernel mixing weights (Eq. 9):
+
+    w_{i,j} ∝ (n_j / n_i) · exp(−Δ_{i,j} / (2 σ_i σ_j)),   Σ_j w_{i,j} = 1.
+
+Properties encoded here and verified by tests/property tests:
+  * rows are stochastic (non-negative, sum to 1);
+  * for homogeneous clients (Δ→0, equal n) the rule degenerates to FedAvg;
+  * as σ_i → 0 (infinite local data) it degenerates to local training
+    (w_{i,i} → 1), matching the paper's limit discussion.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def sigma_sq(minibatch_grads, full_grad):
+    """Eq. 10 — gradient variance estimate for ONE client.
+
+    Args:
+      minibatch_grads: (K, d) per-minibatch full gradients of client i.
+      full_grad: (d,) gradient over the client's entire local dataset.
+    Returns:
+      scalar σ_i².
+    """
+    diff = minibatch_grads.astype(jnp.float32) - full_grad.astype(jnp.float32)[None, :]
+    return jnp.mean(jnp.sum(diff * diff, axis=-1))
+
+
+def pairwise_delta(grads, *, impl=None):
+    """Δ_{i,j} = ||g_i − g_j||² over stacked (m, d) client gradients."""
+    return ops.pairwise_delta(grads, impl=impl)
+
+
+def mixing_weights(delta, sigma_sq_vec, n, *, eps=1e-12):
+    """Eq. 9 — normalized Gaussian-kernel collaboration coefficients.
+
+    Args:
+      delta: (m, m) pairwise squared gradient distances.
+      sigma_sq_vec: (m,) per-client variance estimates σ_i².
+      n: (m,) local dataset sizes.
+    Returns:
+      (m, m) row-stochastic mixing matrix W.
+    """
+    delta = delta.astype(jnp.float32)
+    sig = jnp.sqrt(jnp.maximum(sigma_sq_vec.astype(jnp.float32), 0.0))
+    n = n.astype(jnp.float32)
+    # 2 σ_i σ_j denominator; guard σ→0: exponent → −inf off-diagonal,
+    # 0 on the diagonal (Δ_ii = 0), recovering local training.
+    denom = 2.0 * sig[:, None] * sig[None, :]
+    expo = jnp.where(denom > eps, -delta / jnp.maximum(denom, eps),
+                     jnp.where(delta <= eps, 0.0, -jnp.inf))
+    # Row-wise max-subtraction for numerical stability (softmax-style);
+    # the n_j/n_i prefactor folds into log-space. The 1/n_i factor cancels
+    # in the normalization but is kept for faithfulness to Eq. 9.
+    logits = expo + jnp.log(n)[None, :] - jnp.log(n)[:, None]
+    logits = logits - jnp.max(logits, axis=1, keepdims=True)
+    un = jnp.exp(logits)
+    return un / jnp.sum(un, axis=1, keepdims=True)
+
+
+def collaboration_round(per_client_minibatch_grads, n, *, impl=None):
+    """Run the full special round on stacked arrays.
+
+    Args:
+      per_client_minibatch_grads: (m, K, d) minibatch gradients, K batches
+        per client (the paper's variance-estimation partition).
+      n: (m,) dataset sizes.
+    Returns:
+      dict with full_grads (m, d), sigma_sq (m,), delta (m, m), W (m, m).
+    """
+    g = per_client_minibatch_grads
+    full = jnp.mean(g, axis=1)  # client full gradient = mean of partition grads
+    sig = jax.vmap(sigma_sq)(g, full)
+    delta = pairwise_delta(full, impl=impl)
+    w = mixing_weights(delta, sig, n)
+    return {"full_grads": full, "sigma_sq": sig, "delta": delta, "W": w}

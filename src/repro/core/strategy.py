@@ -1,0 +1,49 @@
+"""Strategy protocol shared by the proposed method and all baselines.
+
+A strategy owns three callables:
+
+  * ``init(key, data) -> state`` — build the initial server/client state
+    (including any pre-training round, e.g. the paper's collaboration
+    round or nothing for FedAvg);
+  * ``round(state, data, key) -> (state, metrics)`` — one communication
+    round (local training + PS aggregation); jitted internally;
+  * ``eval_params(state) -> stacked params`` — the per-client models that
+    should be evaluated (personalized where the method has them).
+
+``metrics`` may include per-round diagnostics (e.g. downlink stream
+count, which feeds the §V-D comm model in the Fig. 5 benchmark).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+REGISTRY: Dict[str, Callable[..., "Strategy"]] = {}
+
+
+@dataclasses.dataclass
+class Strategy:
+    name: str
+    init: Callable[..., Any]
+    round: Callable[..., Any]
+    eval_params: Callable[[Any], Any]
+    # downlink streams per round, for the comm model ("broadcast",
+    # "groupcast", "unicast", "client_mixing") and the stream count.
+    comm_scheme: str = "broadcast"
+    num_streams: int | None = None
+
+
+def register(name):
+    def deco(fn):
+        REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """Paper §V-A hyperparameters."""
+    lr: float = 0.1
+    momentum: float = 0.9
+    epochs: int = 1
+    batch_size: int = 50

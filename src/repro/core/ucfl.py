@@ -1,0 +1,156 @@
+"""The paper's proposed method: User-Centric Federated Learning.
+
+Algorithm 1 end-to-end:
+  1. special round — broadcast θ⁰; clients upload full gradients + σ_k²
+     (Eq. 10) on a fixed minibatch partition of size ``var_batch_size``
+     (a hyperparameter, §V-F);
+  2. PS computes Δ and the mixing matrix W (Eq. 9);
+  3. optionally K-means over rows of W to m_t centroid rules (§IV-B),
+     picked by silhouette (Alg. 2) when ``num_streams="auto"``;
+  4. every round: clients run ClientUpdate from their personalized model;
+     PS applies the user-centric (or clustered) aggregation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation, clustering, similarity
+from repro.core.pytree import stacked_ravel
+from repro.core.strategy import FedConfig, Strategy, register
+from repro.data.loader import fixed_partition
+from repro.federated import client as fedclient
+
+
+def compute_collaboration(apply_fn, params0, data, *, var_batch_size=100,
+                          impl=None):
+    """Run the special pre-training round; returns the dict of §IV-A."""
+    m = data.num_clients
+    stacked0 = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (m,) + x.shape), params0
+    )
+    xb, yb = jax.vmap(lambda x, y: fixed_partition(x, y, var_batch_size))(
+        data.x, data.y
+    )
+    mb_grads = fedclient.minibatch_gradients(apply_fn, stacked0, xb, yb)
+    gmat = stacked_ravel(mb_grads, lead=2)  # (m, K, d)
+    return similarity.collaboration_round(gmat, data.n.astype(jnp.float32),
+                                          impl=impl)
+
+
+@register("ucfl")
+def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
+              num_streams=None, var_batch_size=100, silhouette_key=None,
+              kernel_impl=None):
+    """The proposed strategy.
+
+    num_streams: None -> full personalization (m streams, Eq. 8);
+                 int k -> clustered with k streams (§IV-B);
+                 "auto" -> Alg. 2 silhouette selection.
+    """
+    local = fedclient.make_federated_local_sgd(
+        apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
+        batch_size=cfg.batch_size,
+    )
+
+    def init(key, data):
+        m = data.num_clients
+        collab = compute_collaboration(
+            apply_fn, params0, data, var_batch_size=var_batch_size,
+            impl=kernel_impl,
+        )
+        w = collab["W"]
+        labels = None
+        k = num_streams
+        if k == "auto":
+            kkey = silhouette_key if silhouette_key is not None else key
+            k, _ = clustering.choose_num_streams(kkey, w, impl=kernel_impl)
+        if k is not None:
+            res = clustering.kmeans(key, w, int(k), impl=kernel_impl)
+            labels = res.labels
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (m,) + x.shape) + 0.0, params0
+        )
+        return {"params": stacked, "W": w, "labels": labels,
+                "streams": k, "collab": collab}
+
+    @functools.partial(jax.jit, static_argnames=("streams",))
+    def _round(params, w, labels, x, y, key, streams):
+        updated, _ = local(params, x, y, key)
+        if streams is None:
+            mixed = aggregation.user_centric(updated, w, impl=kernel_impl)
+        else:
+            mixed = aggregation.clustered(updated, w, labels, streams,
+                                          impl=kernel_impl)
+        return mixed
+
+    def round(state, data, key):
+        new = _round(state["params"], state["W"], state["labels"],
+                     data.x, data.y, key, state["streams"])
+        state = dict(state, params=new)
+        return state, {"streams": state["streams"] or data.num_clients}
+
+    scheme = "unicast" if num_streams is None else "groupcast"
+    return Strategy(
+        name="ucfl" if num_streams is None else f"ucfl_k{num_streams}",
+        init=init, round=round, eval_params=lambda s: s["params"],
+        comm_scheme=scheme,
+        num_streams=None if num_streams in (None, "auto") else num_streams,
+    )
+
+
+@register("ucfl_parallel")
+def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
+                       var_batch_size=100, kernel_impl=None):
+    """§V-E upper bound: m parallel FL instances solving Eq. 4 exactly.
+
+    Every client locally optimizes ALL m personalized models each round
+    (m× compute and uplink); the PS applies Eq. 12. Serves as the
+    fully-collaborative upper bound in Fig. 6.
+    """
+    local = fedclient.make_federated_local_sgd(
+        apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
+        batch_size=cfg.batch_size,
+    )
+
+    def init(key, data):
+        m = data.num_clients
+        collab = compute_collaboration(
+            apply_fn, params0, data, var_batch_size=var_batch_size,
+            impl=kernel_impl,
+        )
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (m,) + x.shape) + 0.0, params0
+        )
+        return {"params": stacked, "W": collab["W"]}
+
+    @jax.jit
+    def _round(params, w, x, y, key):
+        m = x.shape[0]
+
+        # θ_{i,j}: client j optimizes stream i's model on its local data.
+        def per_stream(stream_params, skey):
+            return local(
+                jax.tree.map(
+                    lambda p: jnp.broadcast_to(p, (m,) + p.shape), stream_params
+                ),
+                x, y, skey,
+            )[0]
+
+        keys = jax.random.split(key, m)
+        all_updates = jax.vmap(per_stream)(params, keys)  # leaves (i=m, j=m, ...)
+        # Eq. 12: θ_i ← Σ_j w_{i,j} θ_{i,j}
+        return jax.tree.map(
+            lambda u: jnp.einsum("ij,ij...->i...", w, u), all_updates
+        )
+
+    def round(state, data, key):
+        new = _round(state["params"], state["W"], data.x, data.y, key)
+        return dict(state, params=new), {"streams": data.num_clients}
+
+    return Strategy(
+        name="ucfl_parallel", init=init, round=round,
+        eval_params=lambda s: s["params"], comm_scheme="unicast",
+    )

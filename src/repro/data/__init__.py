@@ -1,0 +1,2 @@
+from repro.data import loader, synthetic  # noqa: F401
+from repro.data.synthetic import SCENARIOS, FederatedData  # noqa: F401

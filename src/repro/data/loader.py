@@ -1,0 +1,39 @@
+"""Jit-friendly federated batching.
+
+``epoch_batches`` reshapes each client's (n, ...) arrays into
+(steps, B, ...) after a per-epoch shuffle, so the local-update scan can
+iterate over the leading axis. Stacked over clients it becomes
+(m, steps, B, ...), consumed by the vmapped client update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def epoch_batches(key, x, y, batch_size):
+    """Shuffle one client's data and split into full batches."""
+    n = x.shape[0]
+    steps = n // batch_size
+    perm = jax.random.permutation(key, n)[: steps * batch_size]
+    xb = x[perm].reshape((steps, batch_size) + x.shape[1:])
+    yb = y[perm].reshape((steps, batch_size) + y.shape[1:])
+    return xb, yb
+
+
+def federated_epoch_batches(key, x, y, batch_size):
+    """Stacked version: x (m, n, ...), y (m, n) -> (m, steps, B, ...)."""
+    m = x.shape[0]
+    keys = jax.random.split(key, m)
+    return jax.vmap(lambda k, xc, yc: epoch_batches(k, xc, yc, batch_size))(
+        keys, x, y
+    )
+
+
+def fixed_partition(x, y, batch_size):
+    """Deterministic split into minibatches (Eq. 10 variance estimation)."""
+    n = x.shape[0]
+    steps = n // batch_size
+    xb = x[: steps * batch_size].reshape((steps, batch_size) + x.shape[1:])
+    yb = y[: steps * batch_size].reshape((steps, batch_size) + y.shape[1:])
+    return xb, yb

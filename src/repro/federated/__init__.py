@@ -1,0 +1,1 @@
+from repro.federated import client, simulation  # noqa: F401

@@ -1,0 +1,85 @@
+"""Federated simulation engine: rounds loop + per-round evaluation."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List
+
+import jax
+import numpy as np
+
+from repro.federated.client import evaluate
+
+
+@dataclasses.dataclass
+class History:
+    strategy: str
+    rounds: List[int]
+    avg_acc: List[float]
+    worst_acc: List[float]
+    metrics: List[Dict[str, Any]]
+    wall_s: float = 0.0
+
+    @property
+    def final_avg(self):
+        return self.avg_acc[-1]
+
+    @property
+    def final_worst(self):
+        return self.worst_acc[-1]
+
+    @property
+    def best_avg(self):
+        return max(self.avg_acc)
+
+
+def run(strategy, apply_fn, data, key, *, rounds: int, eval_every: int = 1,
+        verbose: bool = False) -> History:
+    t0 = time.time()
+    key, ikey = jax.random.split(key)
+    state = strategy.init(ikey, data)
+    hist = History(strategy.name, [], [], [], [])
+
+    def do_eval(rnd, metrics):
+        accs = np.asarray(
+            evaluate(apply_fn, strategy.eval_params(state), data.x_test,
+                     data.y_test)
+        )
+        hist.rounds.append(rnd)
+        hist.avg_acc.append(float(accs.mean()))
+        hist.worst_acc.append(float(accs.min()))
+        hist.metrics.append(metrics)
+        if verbose:
+            print(f"[{strategy.name}] round {rnd:4d} "
+                  f"avg={accs.mean():.4f} worst={accs.min():.4f}")
+
+    metrics: Dict[str, Any] = {}
+    for rnd in range(1, rounds + 1):
+        key, rkey = jax.random.split(key)
+        state, metrics = strategy.round(state, data, rkey)
+        if rnd % eval_every == 0 or rnd == rounds:
+            do_eval(rnd, metrics)
+    hist.wall_s = time.time() - t0
+    return hist
+
+
+def run_trials(make_strategy, apply_fn, data_fn, *, trials: int, rounds: int,
+               seed: int = 0, eval_every: int = 1):
+    """Average over independent trials (paper reports 5-trial means)."""
+    finals, worsts, hists = [], [], []
+    for t in range(trials):
+        key = jax.random.PRNGKey(seed + 1000 * t)
+        dkey, skey = jax.random.split(key)
+        data = data_fn(dkey)
+        strat = make_strategy(t)
+        h = run(strat, apply_fn, data, skey, rounds=rounds,
+                eval_every=eval_every)
+        finals.append(h.best_avg)
+        worsts.append(max(h.worst_acc))
+        hists.append(h)
+    return {
+        "avg_mean": float(np.mean(finals)),
+        "avg_std": float(np.std(finals)),
+        "worst_mean": float(np.mean(worsts)),
+        "histories": hists,
+    }

@@ -1,0 +1,134 @@
+"""Pallas TPU flash attention (forward) — the §Perf-identified next lever.
+
+The gemma2 train_4k §Roofline shows ~1.5 TB/chip of HBM traffic from
+materialized (S, S) f32 logits/probs tensors. This kernel computes
+softmax(q·kᵀ)·v block-wise with the online-softmax recurrence so the S×S
+matrix never leaves VMEM: per (batch, q-head, q-block) the kv sequence is
+streamed in (BK × Dh) tiles with running (m, l, acc) carried in VMEM
+scratch.
+
+GQA without materialized KV expansion: the k/v BlockSpec index_map sends
+q-head h to kv-head h // q_groups. Causal, sliding-window and logit
+softcap masks are applied from block indices.
+
+Forward-only by design: the backward pass at training time uses XLA remat
+of the reference path (a flash backward is future work and is listed as
+such in EXPERIMENTS.md); the serving/prefill paths are forward-only and
+benefit directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q, block_k, seq_k, causal, window, softcap, scale):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, ...].astype(jnp.float32)  # (BQ, Dh)
+    k = k_ref[0, 0, ...].astype(jnp.float32)  # (BK, Dh)
+    v = v_ref[0, 0, ...].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = cols < seq_k
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (BQ, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _finish():
+        o_ref[0, 0, ...] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_k",
+                     "interpret"),
+)
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    block_q=128, block_k=128, interpret=False):
+    """q: (B, Hq, Sq, Dh); k/v: (B, Hkv, Sk, Dh); Hq % Hkv == 0.
+
+    Returns (B, Hq, Sq, Dh) in q.dtype. Sq/Sk are zero-padded to block
+    multiples internally; masked via seq_k so padding never contributes.
+    """
+    b, hq, sq, dh = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = dh ** -0.5
+
+    sq_p = _round_up(sq, block_q)
+    sk_p = _round_up(sk, block_k)
+    dh_p = _round_up(dh, 128)
+    qp = jnp.zeros((b, hq, sq_p, dh_p), q.dtype).at[:, :, :sq, :dh].set(q)
+    kp = jnp.zeros((b, hkv, sk_p, dh_p), k.dtype).at[:, :, :sk, :dh].set(k)
+    vp = jnp.zeros((b, hkv, sk_p, dh_p), v.dtype).at[:, :, :sk, :dh].set(v)
+
+    grid = (b, hq, sq_p // block_q, sk_p // block_k)
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_k=sk,
+        causal=causal, window=window, softcap=softcap, scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh_p),
+                         lambda bb, h, qi, ki: (bb, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, dh_p),
+                         lambda bb, h, qi, ki, g=g: (bb, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, dh_p),
+                         lambda bb, h, qi, ki, g=g: (bb, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh_p),
+                               lambda bb, h, qi, ki: (bb, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, dh_p), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh_p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :sq, :dh]

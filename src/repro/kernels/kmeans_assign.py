@@ -1,0 +1,67 @@
+"""Pallas TPU kernel for the K-means assignment step (Alg. 2 inner loop).
+
+Collaboration vectors live in (m, f) with f = m <= a few thousand, so the
+whole problem fits VMEM; the kernel computes the (m, k) squared-distance
+matrix on the MXU in a single block and reduces to labels/min-distances.
+This exists mostly to keep the full Alg.2 path on-chip when it runs on the
+PS between rounds; the win over XLA is fusing the three terms of
+||p - c||^2 without materializing (m, k, f) broadcasts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_kernel(p_ref, c_ref, labels_ref, dist_ref):
+    p = p_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    d = (
+        jnp.sum(p * p, axis=1, keepdims=True)
+        + jnp.sum(c * c, axis=1)[None, :]
+        - 2.0 * jnp.dot(p, c.T, preferred_element_type=jnp.float32)
+    )
+    d = jnp.maximum(d, 0.0)
+    labels_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)
+    dist_ref[...] = jnp.min(d, axis=1)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return (x + mult - 1) // mult * mult
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kmeans_assign_pallas(points, centroids, *, interpret: bool = False):
+    """points (m, f), centroids (k, f) -> (labels (m,) i32, sqdist (m,) f32)."""
+    m, f = points.shape
+    k, f2 = centroids.shape
+    assert f == f2
+    m_pad = _round_up(m, 8)
+    k_pad = _round_up(k, 8)
+    f_pad = _round_up(f, 128)
+    # Pad centroids with +inf-ish sentinel rows so argmin never picks them.
+    p_p = jnp.zeros((m_pad, f_pad), points.dtype).at[:m, :f].set(points)
+    c_p = jnp.full((k_pad, f_pad), 1e30, centroids.dtype).at[:k, :f].set(centroids)
+    c_p = c_p.at[:k, f:].set(0.0)
+
+    labels, dist = pl.pallas_call(
+        _assign_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m_pad, f_pad), lambda i: (0, 0)),
+            pl.BlockSpec((k_pad, f_pad), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m_pad,), lambda i: (0,)),
+            pl.BlockSpec((m_pad,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((m_pad,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(p_p, c_p)
+    return labels[:m], dist[:m]

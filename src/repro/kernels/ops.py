@@ -1,0 +1,85 @@
+"""Jit'd dispatch layer over the Pallas kernels.
+
+Every op picks an implementation:
+  * ``impl="pallas"``      — compiled TPU kernel (requires a TPU backend),
+  * ``impl="interpret"``   — Pallas interpret mode (CPU, for validation),
+  * ``impl="ref"``         — pure-jnp oracle from :mod:`repro.kernels.ref`,
+  * ``impl=None`` (auto)   — pallas on TPU, ref elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.mix_aggregate import mix_aggregate_pallas
+from repro.kernels.pairwise_delta import gram_pallas
+from repro.kernels.kmeans_assign import kmeans_assign_pallas
+
+
+def _auto_impl(impl):
+    if impl is not None:
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def mix_aggregate(w, theta, *, impl=None, block_d=None):
+    """out[i] = sum_j w[i,j] theta[j];  w (k, m), theta (m, d) -> (k, d)."""
+    impl = _auto_impl(impl)
+    if impl == "ref":
+        return ref.mix_aggregate(w, theta)
+    kwargs = {} if block_d is None else {"block_d": block_d}
+    return mix_aggregate_pallas(w, theta, interpret=(impl == "interpret"), **kwargs)
+
+
+def pairwise_delta(g, *, impl=None, block_d=None):
+    """Pairwise squared distances between rows of g (m, d) -> (m, m)."""
+    impl = _auto_impl(impl)
+    if impl == "ref":
+        return ref.pairwise_delta(g)
+    kwargs = {} if block_d is None else {"block_d": block_d}
+    gr = gram_pallas(g, interpret=(impl == "interpret"), **kwargs)
+    sq = jnp.diag(gr)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gr, 0.0)
+
+
+def kmeans_assign(points, centroids, *, impl=None):
+    """Nearest-centroid assignment -> (labels (m,), sqdist (m,))."""
+    impl = _auto_impl(impl)
+    if impl == "ref":
+        return ref.kmeans_assign(points, centroids)
+    return kmeans_assign_pallas(points, centroids, interpret=(impl == "interpret"))
+
+
+def flash_attention(q, k, v, *, impl=None, **kw):
+    """Block-wise fused attention (B, H, S, Dh); see kernels.flash_attention.
+
+    ref path materializes the S×S matrix (what the kernel exists to avoid)
+    — used on CPU where Mosaic is unavailable.
+    """
+    from repro.kernels import flash_attention as fa
+
+    impl = _auto_impl(impl)
+    if impl == "ref":
+        import jax.numpy as _jnp
+
+        g = q.shape[1] // k.shape[1]
+        kx = _jnp.repeat(k, g, axis=1)
+        vx = _jnp.repeat(v, g, axis=1)
+        s = _jnp.einsum("bhqd,bhkd->bhqk", q.astype(_jnp.float32),
+                        kx.astype(_jnp.float32)) * q.shape[-1] ** -0.5
+        cap = kw.get("softcap")
+        if cap:
+            s = cap * _jnp.tanh(s / cap)
+        rows = _jnp.arange(q.shape[2])[:, None]
+        cols = _jnp.arange(k.shape[2])[None, :]
+        mask = _jnp.ones((q.shape[2], k.shape[2]), bool)
+        if kw.get("causal", True):
+            mask &= cols <= rows
+        if kw.get("window"):
+            mask &= cols > rows - kw["window"]
+        s = _jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return _jnp.einsum("bhqk,bhkd->bhqd", p,
+                           vx.astype(_jnp.float32)).astype(q.dtype)
+    return fa.flash_attention(q, k, v, interpret=(impl == "interpret"), **kw)

@@ -1,0 +1,154 @@
+"""Dry-run "profiler": attribute per-chip collective/HBM volume to ops.
+
+Since there is no real TPU to trace, the profile is the partitioned HLO:
+this tool loads a saved ``results/dryrun/*.hlo.zst``, walks the call graph
+with trip counts (same engine as the roofline), and prints the top
+contributors with their ``metadata op_name`` source markers — enough to
+form §Perf hypotheses ("the 42×4 f32 activation all-reduces from the
+attention out-projection dominate", etc).
+
+  PYTHONPATH=src python -m repro.launch.attribute \
+      results/dryrun/gemma2-9b__train_4k__single__user_centric.hlo.zst
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from collections import defaultdict
+
+import zstandard
+
+from repro.launch import hlo_analysis as H
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def load_hlo(path: str) -> str:
+    with open(path, "rb") as f:
+        data = f.read()
+    if path.endswith(".zst"):
+        data = zstandard.ZstdDecompressor().decompress(data)
+    return data.decode()
+
+
+def attribute(text: str, *, total_chips: int = 256, top: int = 25):
+    comps = H.parse_module(text)
+    colls = defaultdict(lambda: [0.0, 0])  # key -> [moved_bytes, count]
+    bytes_by = defaultdict(lambda: [0.0, 0])
+    flops_by = defaultdict(lambda: [0.0, 0])
+
+    def meta_of(inst):
+        m = _META_RE.search(inst.rest)
+        name = m.group(1) if m else "(no-metadata)"
+        return name[:110]
+
+    def visit(comp, mult, depth=0):
+        if depth > 12:
+            return
+        for inst in comp.instrs:
+            op = inst.op
+            base = op[:-6] if op.endswith("-start") else op
+            key = f"{base:20s} {meta_of(inst)}"
+            if base in H.COLLECTIVE_OPS:
+                _, res_b = H._shape_elems_bytes(inst.type_str)
+                s = H._group_size(inst.rest, total_chips)
+                if base == "all-gather":
+                    moved = res_b * (s - 1) / max(s, 1)
+                elif base == "all-reduce":
+                    moved = 2.0 * res_b * (s - 1) / max(s, 1)
+                elif base == "reduce-scatter":
+                    moved = float(res_b) * (s - 1)
+                elif base == "all-to-all":
+                    moved = res_b * (s - 1) / max(s, 1)
+                else:
+                    moved = float(res_b)
+                colls[key][0] += moved * mult
+                colls[key][1] += mult
+                continue
+            if op == "while":
+                body = H._BODY_RE.search(inst.rest)
+                mt = H._TRIP_COUNT_RE.search(inst.rest)
+                trips = int(mt.group(1)) if mt else 1
+                if body and body.group(1) in comps:
+                    visit(comps[body.group(1)], mult * trips, depth + 1)
+                continue
+            if op in ("fusion", "call"):
+                m = H._CALLS_RE.search(inst.rest)
+                sub = comps.get(m.group(1)) if m else None
+                if sub is not None:
+                    for sinst in sub.instrs:
+                        if sinst.op in ("dot", "convolution"):
+                            f = (H._dot_flops(sinst, sub) if sinst.op == "dot"
+                                 else H._conv_flops(sinst, sub))
+                            fk = f"{sinst.op:20s} {meta_of(sinst)}"
+                            flops_by[fk][0] += f * mult
+                            flops_by[fk][1] += mult
+                _, res_b = H._shape_elems_bytes(inst.type_str)
+                opd_b = 0.0
+                for i, o in enumerate(inst.operands):
+                    t = comp.symbols.get(o)
+                    if not t:
+                        continue
+                    full = H._shape_elems_bytes(t)[1]
+                    opd_b += (H._fusion_param_read_bytes(sub, i, full)
+                              if sub is not None else full)
+                bytes_by[key][0] += (res_b + opd_b) * mult
+                bytes_by[key][1] += mult
+                continue
+            if op == "dot":
+                f = H._dot_flops(inst, comp)
+                flops_by[key][0] += f * mult
+                flops_by[key][1] += mult
+            if op in H._SKIP_BYTES_OPS:
+                continue
+            _, res_b = H._shape_elems_bytes(inst.type_str)
+            if op in ("dynamic-slice", "gather", "slice"):
+                bytes_by[key][0] += 2.0 * res_b * mult
+                bytes_by[key][1] += mult
+                continue
+            if op == "dynamic-update-slice":
+                upd = (comp.symbols.get(inst.operands[1])
+                       if len(inst.operands) > 1 else None)
+                upd_b = H._shape_elems_bytes(upd)[1] if upd else res_b
+                bytes_by[key][0] += 2.0 * upd_b * mult
+                bytes_by[key][1] += mult
+                continue
+            opd_b = sum(
+                H._shape_elems_bytes(comp.symbols[o])[1]
+                for o in inst.operands if o in comp.symbols
+            )
+            bytes_by[key][0] += (res_b + opd_b) * mult
+            bytes_by[key][1] += mult
+
+    visit(comps["__entry__"], 1.0)
+    return colls, bytes_by, flops_by
+
+
+def report(path: str, *, total_chips=256, top=25, out=sys.stdout):
+    text = load_hlo(path)
+    colls, bytes_by, flops_by = attribute(text, total_chips=total_chips)
+    p = lambda *a: print(*a, file=out)
+    for title, table, unit, scale in (
+        ("COLLECTIVE moved bytes", colls, "GB", 1e9),
+        ("HBM bytes", bytes_by, "GB", 1e9),
+        ("dot FLOPs", flops_by, "GF", 1e9),
+    ):
+        total = sum(v[0] for v in table.values())
+        p(f"\n=== {title}: total {total / scale:.2f} {unit}/chip ===")
+        rows = sorted(table.items(), key=lambda kv: -kv[1][0])[:top]
+        for k, (val, cnt) in rows:
+            p(f"  {val / scale:10.2f} {unit} x{cnt:<6.0f} {k}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo_path")
+    ap.add_argument("--chips", type=int, default=256)
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    report(args.hlo_path, total_chips=args.chips, top=args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init); do not move them. This module is the ONLY place that
+forces 512 host devices — smoke tests and benchmarks see the real device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      --arch all --shape all --mesh both --agg user_centric \
+      --out results/dryrun
+
+Per combo: jit(step).lower(abstract inputs).compile(); record
+memory_analysis + cost_analysis + parsed collective bytes into a JSON
+artifact consumed by EXPERIMENTS.md §Dry-run/§Roofline.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.configs.base import INPUT_SHAPES  # noqa: E402
+from repro.launch import mesh as meshlib  # noqa: E402
+from repro.launch import roofline, sharding, steps  # noqa: E402
+
+
+def _mix_inputs(agg: str, m: int, num_streams: int):
+    if agg == "user_centric":
+        return jax.ShapeDtypeStruct((m, m), jnp.float32), P()
+    if agg == "clustered":
+        return (
+            (jax.ShapeDtypeStruct((num_streams, m), jnp.float32),
+             jax.ShapeDtypeStruct((m,), jnp.int32)),
+            (P(), P()),
+        )
+    return (), ()
+
+
+def lower_one(cfg, shape, mesh, *, agg: str, num_streams: int = 4,
+              donate: bool = True, sharding_mode: str = "tp",
+              remat_policy: str | None = None, expert_parallel: bool = True):
+    """Build + lower + compile one combo. Returns (compiled, meta)."""
+    from repro.models import moe as moelib
+
+    moelib.set_ep_mesh(mesh if (expert_parallel and cfg.expert_axis)
+                       else None)
+    chips = meshlib.num_chips(mesh)
+    m = meshlib.num_clients(mesh)
+    federated = cfg.regime == "federated"
+    ns = lambda spec_tree: sharding.named(mesh, spec_tree)
+    # true (unpadded) param count for MODEL_FLOPS, before deployment padding
+    abs_params_true = steps.abstract_params(cfg)
+    cfg = cfg.for_mesh(mesh.shape["model"])
+    if remat_policy is not None:
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, remat_policy=remat_policy)
+
+    if shape.kind == "decode" and shape.global_batch < m:
+        # long_500k: one request served by the whole pod (context parallel)
+        federated_step = False
+        n_clients = None
+    else:
+        federated_step = federated
+        n_clients = m if federated else None
+
+    abs_params = steps.abstract_params(cfg, n_clients=n_clients)
+    pspecs = sharding.param_specs(abs_params, cfg, mesh,
+                                  client_sharded=n_clients is not None,
+                                  mode=sharding_mode)
+
+    if shape.kind == "train":
+        abs_opt = steps.abstract_opt(abs_params, momentum=cfg.momentum)
+        ospecs = jax.tree.map(lambda s: s, pspecs) if cfg.momentum else ()
+        batch = steps.input_specs(cfg, shape, n_clients=n_clients)
+        bspecs = sharding.batch_specs(batch, mesh,
+                                      client_sharded=n_clients is not None,
+                                      mode=sharding_mode)
+        gather_specs = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(*((None,) + tuple(s)[1:]))),
+            pspecs, is_leaf=lambda x: isinstance(x, P),
+        ) if federated_step else None
+        fn = steps.build_train_step(
+            cfg, n_clients=m, agg=agg, lr=0.1, momentum=cfg.momentum,
+            mix_gather_shardings=gather_specs,
+        )
+        if federated_step:
+            mix_abs, mix_spec = _mix_inputs(agg, m, num_streams)
+            args = (abs_params, abs_opt, mix_abs, batch)
+            in_sh = (ns(pspecs), ns(ospecs), ns(mix_spec), ns(bspecs))
+        else:
+            args = (abs_params, abs_opt, batch)
+            in_sh = (ns(pspecs), ns(ospecs), ns(bspecs))
+        jfn = jax.jit(fn, in_shardings=in_sh,
+                      donate_argnums=(0, 1) if donate else ())
+    elif shape.kind == "prefill":
+        batch = steps.input_specs(cfg, shape, n_clients=n_clients)
+        bspecs = sharding.batch_specs(batch, mesh,
+                                      client_sharded=n_clients is not None)
+        fn = steps.build_prefill_step(cfg, federated=federated_step)
+        args = (abs_params, batch)
+        jfn = jax.jit(fn, in_shardings=(ns(pspecs), ns(bspecs)))
+    else:  # decode
+        batch = steps.input_specs(cfg, shape, n_clients=n_clients)
+        bspecs = sharding.batch_specs(
+            batch, mesh, client_sharded=n_clients is not None,
+            shard_batch=shape.global_batch >= mesh.shape["data"],
+        )
+        shard_b = (n_clients is None
+                   and shape.global_batch >= mesh.shape["data"])
+        caches = steps.abstract_cache(cfg, shape, n_clients=n_clients)
+        cspecs = sharding.cache_specs(
+            caches, cfg, mesh, client_sharded=n_clients is not None,
+            batch_axis=shard_b,
+            context_parallel=(n_clients is None and not shard_b),
+        )
+        fn = steps.build_serve_step(cfg, federated=federated_step)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (abs_params, caches, batch["tokens"], pos)
+        jfn = jax.jit(
+            fn,
+            in_shardings=(ns(pspecs), ns(cspecs), ns(bspecs["tokens"]),
+                          NamedSharding(mesh, P())),
+            donate_argnums=(1,) if donate else (),
+        )
+
+    t0 = time.time()
+    lowered = jfn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    meta = {
+        "chips": chips, "clients": m, "t_lower_s": t_lower,
+        "t_compile_s": t_compile, "abs_params_one": abs_params_true,
+        "federated_step": federated_step,
+    }
+    return compiled, meta
+
+
+def run_combo(arch: str, shape_name: str, mesh_name: str, *, agg: str,
+              num_streams: int, out_dir: str, skip_existing: bool,
+              sharding_mode: str = "tp", remat_policy: str | None = None):
+    tag = f"{arch}__{shape_name}__{mesh_name}__{agg}"
+    if sharding_mode != "tp":
+        tag += f"__{sharding_mode}"
+    if remat_policy:
+        tag += f"__{remat_policy}"
+    path = os.path.join(out_dir, tag + ".json")
+    if skip_existing and os.path.exists(path):
+        print(f"[skip] {tag}")
+        return True
+    cfg = configs.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.long_context_ok:
+        print(f"[n/a ] {tag} (full-attention arch; skip per DESIGN.md)")
+        return True
+    mesh = meshlib.make_production_mesh(multi_pod=(mesh_name == "multi"))
+    try:
+        compiled, meta = lower_one(cfg, shape, mesh, agg=agg,
+                                   num_streams=num_streams,
+                                   sharding_mode=sharding_mode,
+                                   remat_policy=remat_policy)
+        roof = roofline.analyze(
+            compiled, cfg, shape, mesh_name=mesh_name,
+            chips=meta["chips"], agg=agg,
+            abs_params_one=meta["abs_params_one"],
+        )
+        d = roof.to_dict()
+        d["t_lower_s"] = meta["t_lower_s"]
+        d["t_compile_s"] = meta["t_compile_s"]
+        d["clients"] = meta["clients"]
+        d["federated_step"] = meta["federated_step"]
+        os.makedirs(out_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(d, f, indent=2, default=str)
+        try:  # keep the partitioned HLO for offline re-analysis
+            import zstandard
+
+            hlo = compiled.as_text().encode()
+            with open(os.path.join(out_dir, tag + ".hlo.zst"), "wb") as f:
+                f.write(zstandard.ZstdCompressor(level=6).compress(hlo))
+        except Exception:
+            pass
+        print(f"[ok  ] {roofline.fmt_row(roof)} "
+              f"(lower {meta['t_lower_s']:.0f}s compile "
+              f"{meta['t_compile_s']:.0f}s)")
+        return True
+    except Exception as e:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, tag + ".FAILED"), "w") as f:
+            f.write(traceback.format_exc())
+        print(f"[FAIL] {tag}: {type(e).__name__}: {str(e)[:200]}")
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--agg", default="user_centric",
+                    choices=["user_centric", "clustered", "fedavg", "local"])
+    ap.add_argument("--num-streams", type=int, default=4)
+    ap.add_argument("--sharding", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--remat-policy", default=None,
+                    choices=[None, "full", "dots", "save_moe"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = (sorted(configs.ARCHITECTURES) if args.arch == "all"
+             else args.arch.split(","))
+    shapes = (list(INPUT_SHAPES) if args.shape == "all"
+              else args.shape.split(","))
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    ok = True
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                ok &= run_combo(arch, shape, mesh_name, agg=args.agg,
+                                num_streams=args.num_streams,
+                                out_dir=args.out,
+                                skip_existing=args.skip_existing,
+                                sharding_mode=args.sharding,
+                                remat_policy=args.remat_policy)
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,264 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), per the assignment:
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs          [s]
+  memory     = HLO_bytes_per_chip / HBM_bw              [s]
+  collective = collective_bytes_per_chip / link_bw      [s]
+
+``compiled.cost_analysis()`` (on the SPMD-partitioned module → per-chip
+numbers) supplies FLOPs and bytes; collective bytes come from parsing the
+partitioned HLO text and summing per-op moved bytes:
+
+  all-gather       result − operand  (received volume)
+  all-reduce       2 × operand       (ring reduce+broadcast)
+  reduce-scatter   operand − result
+  all-to-all       operand
+  collective-permute operand
+
+MODEL_FLOPS uses the textbook 6·N·D (train) / 2·N·D (fwd-only), with N
+replaced by N_active for MoE; the ratio MODEL_FLOPS/HLO_FLOPs exposes
+remat recompute, padding waste and dispatch overheads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+
+# TPU v5e-ish constants (assignment-specified)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return default  # replica_groups={} → all partitions
+
+
+def parse_collectives(hlo_text: str, *, total_chips: int = 1) -> Dict[str, dict]:
+    """Per-category {count, result_bytes, moved_bytes} (per-chip bytes).
+
+    Moved bytes follow ring-algorithm accounting over the op's group size S
+    (derived from replica_groups; result shapes are per-partition):
+      all-gather: res·(S−1)/S received;  all-reduce: 2·res·(S−1)/S;
+      reduce-scatter: res·(S−1) sent;    all-to-all: res·(S−1)/S;
+      collective-permute: res.
+    """
+    out = {
+        c: {"count": 0, "result_bytes": 0, "moved_bytes": 0.0}
+        for c in _COLLECTIVES
+    }
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        result_t, op, is_start = m.group(1), m.group(2), m.group(3)
+        res_b = _shape_bytes(result_t)
+        s = _group_size(line, total_chips)
+        rec = out[op]
+        rec["count"] += 1
+        rec["result_bytes"] += res_b
+        if op == "all-gather":
+            moved = res_b * (s - 1) / max(s, 1)
+        elif op == "all-reduce":
+            moved = 2.0 * res_b * (s - 1) / max(s, 1)
+        elif op == "reduce-scatter":
+            moved = float(res_b) * (s - 1)
+        elif op == "all-to-all":
+            moved = res_b * (s - 1) / max(s, 1)
+        else:  # collective-permute
+            moved = float(res_b)
+        rec["moved_bytes"] += moved
+    return out
+
+
+def collective_bytes(hlo_text: str, *, total_chips: int = 1) -> float:
+    return sum(
+        v["moved_bytes"]
+        for v in parse_collectives(hlo_text, total_chips=total_chips).values()
+    )
+
+
+# ------------------------------------------------------------ model FLOPs
+def param_count(abs_params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(abs_params))
+
+
+def active_param_count(cfg: ModelConfig, total: int) -> int:
+    """N_active: replace full expert FLOPs by top-k experts."""
+    if cfg.moe_num_experts == 0:
+        return total
+    per_expert = 3 * cfg.d_model * (cfg.moe_d_ff or cfg.d_ff)
+    moe_layers = cfg.num_layers - cfg.first_dense
+    inactive = moe_layers * (cfg.moe_num_experts - cfg.moe_top_k) * per_expert
+    return total - inactive
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape, n_active: int) -> float:
+    """6·N·D for train, 2·N·D forward-only (prefill/decode)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1  # decode: one token per request
+    return 2.0 * n_active * tokens
+
+
+# ------------------------------------------------------------ aggregation
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    agg: str
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collectives: Dict[str, dict]
+    model_flops_total: float
+    param_count: int
+    active_params: int
+    memory_analysis: dict
+
+    @property
+    def compute_s(self):
+        return self.hlo_flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self):
+        return self.hlo_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self):
+        return self.collective_bytes_per_chip / LINK_BW
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self):
+        total_hlo = self.hlo_flops_per_chip * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d.update(
+            compute_s=self.compute_s, memory_s=self.memory_s,
+            collective_s=self.collective_s, dominant=self.dominant,
+            useful_flops_ratio=self.useful_flops_ratio,
+        )
+        return d
+
+
+def analyze(compiled, cfg: ModelConfig, shape: InputShape, *, mesh_name: str,
+            chips: int, agg: str, abs_params_one) -> Roofline:
+    from repro.launch import hlo_analysis
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # some backends return [dict]
+        cost = cost[0]
+    text = compiled.as_text()
+    # Trip-count-aware analysis (xla cost_analysis visits scan bodies once)
+    ana = hlo_analysis.analyze_text(text, total_chips=chips)
+    flops = ana.dot_flops
+    byts = ana.hbm_bytes
+    coll_b = ana.collective_bytes
+    colls = dict(ana.collectives)
+    colls["_xla_cost_analysis"] = {
+        "flops_once": float(cost.get("flops", 0.0)),
+        "bytes_once": float(cost.get("bytes accessed", 0.0)),
+        "while_trip_counts": ana.while_trip_counts,
+    }
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes",
+                                            None),
+        }
+    except Exception as e:  # pragma: no cover - backend dependent
+        mem = {"error": str(e)}
+    n = param_count(abs_params_one)
+    na = active_param_count(cfg, n)
+    return Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        agg=agg,
+        hlo_flops_per_chip=flops, hlo_bytes_per_chip=byts,
+        collective_bytes_per_chip=float(coll_b), collectives=colls,
+        model_flops_total=model_flops(cfg, shape, na),
+        param_count=n, active_params=na, memory_analysis=mem,
+    )
+
+
+def save(path: str, roof: Roofline):
+    with open(path, "w") as f:
+        json.dump(roof.to_dict(), f, indent=2, default=str)
+
+
+def fmt_row(r: Roofline) -> str:
+    return (
+        f"{r.arch:18s} {r.shape:12s} {r.mesh:6s} {r.agg:13s} "
+        f"comp={r.compute_s*1e3:9.3f}ms mem={r.memory_s*1e3:9.3f}ms "
+        f"coll={r.collective_s*1e3:9.3f}ms dom={r.dominant:10s} "
+        f"useful={r.useful_flops_ratio:6.3f}"
+    )

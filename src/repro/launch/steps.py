@@ -1,0 +1,222 @@
+"""Step builders: the lowered programs of the dry-run and the drivers.
+
+The paper's technique lives INSIDE ``train_step``: one local SGD step per
+client (clients = slices of the mesh's client axes) followed by the PS
+aggregation expressed as a collective over the client axis:
+
+  * ``agg="fedavg"``       — Eq. 1: mean over clients (all-reduce);
+  * ``agg="user_centric"`` — Eq. 8: θ_i ← Σ_j W[i,j] θ_j (all-gather+mix);
+  * ``agg="clustered"``    — §IV-B: m_t centroid mixes then a gather back
+                             (collective volume ∝ m_t — the paper's
+                             communication saving, measured in ICI bytes);
+  * ``agg="local"``        — no mixing (for A/B collective accounting).
+
+Momentum buffers stay client-local (the paper resets the optimizer each
+round; here the buffer persists but is never mixed).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import registry
+from repro.models import transformer, whisper
+from repro.optim import sgd_init, sgd_update
+
+
+# ------------------------------------------------------------------ helpers
+def _mix_user_centric(stacked, w, gather_shardings=None):
+    """θ_i ← Σ_j W[i,j] θ_j on every leaf (leading client axis).
+
+    §Perf it1: keep the COMMUNICATED operand in its storage dtype (bf16)
+    and accumulate in f32 via preferred_element_type — halves the
+    all-gather volume vs pre-casting to f32.
+    §Perf it2: left alone, GSPMD partial-sums the contraction over the
+    client axis and all-reduces the (m, shard) f32 accumulator — 4× the
+    volume of gathering bf16 operands. ``gather_shardings`` (the param
+    specs with the client axis relaxed to None) forces the cheap schedule:
+    all-gather bf16 θ, mix locally, keep outputs client-sharded.
+    """
+    def mix_leaf(x, gshard=None):
+        if gshard is not None:
+            x = jax.lax.with_sharding_constraint(x, gshard)
+        return jnp.einsum(
+            "ij,j...->i...", w.astype(x.dtype), x,
+            preferred_element_type=jnp.float32,
+        ).astype(x.dtype)
+
+    if gather_shardings is None:
+        return jax.tree.map(mix_leaf, stacked)
+    return jax.tree.map(mix_leaf, stacked, gather_shardings)
+
+
+def _mix_clustered(stacked, centroid_w, labels):
+    """Two-step §IV-B mixing: m_t centroid mixes, then per-client gather."""
+    def leaf(x):
+        mixed = jnp.einsum(
+            "kj,j...->k...", centroid_w.astype(x.dtype), x,
+            preferred_element_type=jnp.float32,
+        ).astype(x.dtype)  # (m_t, ...)
+        return jnp.take(mixed, labels, axis=0)
+    return jax.tree.map(leaf, stacked)
+
+
+def _mix_fedavg(stacked):
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(
+            jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True),
+            x.shape,
+        ).astype(x.dtype),
+        stacked,
+    )
+
+
+# ------------------------------------------------------------------ train
+def build_train_step(cfg: ModelConfig, *, n_clients: int, agg: str,
+                     num_streams: int | None = None, lr: float = 0.1,
+                     momentum: float = 0.9, mix_gather_shardings=None):
+    """Returns train_step with signature depending on the regime.
+
+    federated:  (params, opt, mix, batch) -> (params, opt, metrics)
+                where mix = W (m,m) | (centroid_w (k,m), labels (m,)) | ()
+    fedsgd:     (params, opt, batch) -> (params, opt, metrics)
+    """
+    model = registry.build(cfg)
+
+    if cfg.regime == "fedsgd_sharded":
+        def train_step(params, opt, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            params, opt = sgd_update(grads, opt, params, lr=lr,
+                                     momentum=momentum)
+            return params, opt, {"loss": loss}
+        return train_step
+
+    def train_step(params, opt, mix, batch):
+        # per-client losses/grads — block-diagonal, communication-free
+        loss, grads = jax.vmap(jax.value_and_grad(model.loss))(params, batch)
+        params, opt = sgd_update(grads, opt, params, lr=lr, momentum=momentum)
+        if agg == "user_centric":
+            params = _mix_user_centric(params, mix, mix_gather_shardings)
+        elif agg == "clustered":
+            params = _mix_clustered(params, mix[0], mix[1])
+        elif agg == "fedavg":
+            params = _mix_fedavg(params)
+        elif agg != "local":
+            raise ValueError(agg)
+        return params, opt, {"loss": jnp.mean(loss)}
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, *, federated: bool):
+    model = registry.build(cfg)
+    mod = whisper if cfg.family == "audio" else transformer
+
+    def prefill_one(params, batch):
+        logits, _aux, caches = mod.forward(params, batch, cfg,
+                                           return_cache=True)
+        return logits[:, -1:], caches
+
+    if federated:
+        def prefill_step(params, batch):
+            return jax.vmap(prefill_one)(params, batch)
+        return prefill_step
+    return prefill_one
+
+
+def build_serve_step(cfg: ModelConfig, *, federated: bool):
+    """One-token decode with KV cache (the decode_* dry-run entry)."""
+    model = registry.build(cfg)
+
+    def serve_one(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos)
+
+    if federated:
+        def serve_step(params, caches, tokens, pos):
+            return jax.vmap(serve_one, in_axes=(0, 0, 0, None))(
+                params, caches, tokens, pos
+            )
+        return serve_step
+    return serve_one
+
+
+# ------------------------------------------------------------------ specs
+def abstract_params(cfg: ModelConfig, *, n_clients: int | None = None):
+    """ShapeDtypeStruct tree of the model params (no allocation)."""
+    model = registry.build(cfg)
+    one = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if n_clients is None:
+        return one
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((n_clients,) + x.shape, x.dtype), one
+    )
+
+
+def abstract_opt(abs_params, *, momentum: float):
+    return jax.eval_shape(
+        functools.partial(sgd_init, momentum=momentum), abs_params
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *,
+                n_clients: int | None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape.
+
+    n_clients=None → no client axis (fedsgd / single-request serving);
+    otherwise leading (m, per_client_batch, ...) layout.
+    """
+    fed = n_clients is not None
+    if fed:
+        assert shape.global_batch % n_clients == 0, (shape, n_clients)
+        b = shape.global_batch // n_clients
+        lead = (n_clients, b)
+    else:
+        lead = (shape.global_batch,)
+
+    i32 = jnp.int32
+    act = cfg.act_jdtype
+
+    def sds(*dims, dtype=i32):
+        return jax.ShapeDtypeStruct(lead + dims, dtype)
+
+    if shape.kind == "train":
+        batch = {"tokens": sds(shape.seq_len), "labels": sds(shape.seq_len)}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = sds(cfg.num_patches, cfg.patch_embed_dim,
+                                        dtype=act)
+        if cfg.family == "audio":
+            batch["frames"] = sds(cfg.encoder_seq, cfg.d_model, dtype=act)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds(shape.seq_len)}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = sds(cfg.num_patches, cfg.patch_embed_dim,
+                                        dtype=act)
+        if cfg.family == "audio":
+            batch["frames"] = sds(cfg.encoder_seq, cfg.d_model, dtype=act)
+        return batch
+    if shape.kind == "decode":
+        return {"tokens": sds(1)}
+    raise ValueError(shape.kind)
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape, *,
+                   n_clients: int | None):
+    """ShapeDtypeStruct tree for the serve-step KV/SSM caches."""
+    model = registry.build(cfg)
+    if n_clients is not None:
+        b = shape.global_batch // n_clients
+    else:
+        b = shape.global_batch
+    one = jax.eval_shape(
+        lambda: model.init_cache(b, shape.seq_len)
+    )
+    if n_clients is None:
+        return one
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((n_clients,) + x.shape, x.dtype), one
+    )

@@ -1,0 +1,96 @@
+"""End-to-end federated LM training driver (runs on CPU at smoke scale).
+
+Trains a reduced transformer-zoo architecture with m federated clients on
+heterogeneous synthetic LM tasks (per-group vocab-permutation chains), the
+collaboration round (Eq. 9/10) computed on real gradients, and the chosen
+aggregation each round. On TPU the same code runs the production mesh;
+here the mesh is whatever ``jax.devices()`` offers.
+
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-1.3b --smoke \
+      --clients 4 --groups 2 --rounds 30
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import similarity
+from repro.core.pytree import stacked_ravel
+from repro.data import lm_synthetic
+from repro.launch import steps as steplib
+from repro.models import registry
+from repro.optim import sgd_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--groups", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--agg", default="user_centric",
+                    choices=["user_centric", "fedavg", "local"])
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced(vocab_size=64, remat=False)
+    m = args.clients
+    model = registry.build(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    kinit, kchain, kdata, kcollab, ktrain = jax.random.split(key, 5)
+
+    params_one = model.init(kinit)
+    params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (m,) + x.shape) + 0.0, params_one
+    )
+    opt = sgd_init(params, momentum=cfg.momentum)
+    chains = lm_synthetic.make_group_chains(kchain, args.groups,
+                                            cfg.vocab_size)
+
+    # ---- collaboration round (Eq. 9/10) on real LM gradients
+    kparts = jax.random.split(kcollab, 4)
+    grads = []
+    for kp in kparts:
+        batch = lm_synthetic.federated_lm_batch(kp, chains, m, args.batch,
+                                                args.seq)
+        g = jax.vmap(jax.grad(model.loss))(params, batch)
+        grads.append(stacked_ravel(g))
+    gmat = jnp.stack(grads, axis=1)  # (m, K, d)
+    collab = similarity.collaboration_round(
+        gmat, jnp.full((m,), args.batch * args.seq, jnp.float32))
+    w = collab["W"]
+    print("collaboration matrix W:")
+    print(np.array_str(np.asarray(w), precision=3, suppress_small=True))
+
+    train_step = jax.jit(steplib.build_train_step(
+        cfg, n_clients=m, agg=args.agg, lr=args.lr, momentum=cfg.momentum,
+    ))
+    mix = w if args.agg == "user_centric" else ()
+
+    t0 = time.time()
+    for r in range(1, args.rounds + 1):
+        ktrain, kb = jax.random.split(ktrain)
+        batch = lm_synthetic.federated_lm_batch(kb, chains, m, args.batch,
+                                                args.seq)
+        params, opt, metrics = train_step(params, opt, mix, batch)
+        if r % max(args.rounds // 10, 1) == 0 or r == 1:
+            print(f"round {r:4d} loss={float(metrics['loss']):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+    print(f"done: final loss {float(metrics['loss']):.4f} "
+          f"in {time.time() - t0:.1f}s")
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import lenet  # noqa: F401

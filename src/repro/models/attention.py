@@ -1,0 +1,239 @@
+"""Grouped-query attention with RoPE, sliding windows, softcap, KV caches.
+
+Three entry points:
+  * ``forward``  — training / prefill self-attention (causal or windowed);
+  * ``decode``   — one new token against a (possibly rolling) KV cache;
+  * ``cross``    — encoder-decoder cross attention (whisper).
+
+Cache convention: ``{"k": (B, W, Hkv, Dh), "v": ..., "pos": (W,) int32}``
+where ``pos[w]`` is the absolute position stored in slot ``w`` (−1 = empty).
+Global-attention layers use W = max context; sliding-window layers use
+W = window and write at slot ``pos % W`` (rolling buffer, Mistral-style) —
+this is what makes `long_500k` affordable for SWA architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import fan_in_init, rope, softcap
+
+
+@functools.lru_cache(maxsize=None)
+def plan_heads(num_heads: int, num_kv: int, pad_to: int):
+    """Head-padding plan for tensor-parallel deployment.
+
+    jax requires explicitly-sharded dims to be divisible by the mesh axis,
+    so GQA head counts that don't divide the 16-way "model" axis must be
+    transformed EXACTLY:
+
+      * repeat-KV: replicate each kv head r times (identical attention
+        function, r× KV cache) when r = pad_to/gcd is cheap;
+      * zero-pad: append zero kv heads attended only by zero q heads
+        (their wo rows are zero ⇒ contribution is exactly 0).
+
+    Picks whichever wastes less KV cache. Returns
+      (hq_eff, hkv_eff, q_of_slot, kv_of_slot)
+    where *_of_slot map padded slots to original head indices (−1 = zero
+    slot). The waste is architecture-visible and shows up in §Roofline's
+    useful-FLOPs ratio — that is intentional.
+    """
+    if pad_to <= 1 or num_kv % pad_to == 0:
+        return (num_heads, num_kv, tuple(range(num_heads)),
+                tuple(range(num_kv)))
+    g0 = num_heads // num_kv
+    r_rep = pad_to // math.gcd(num_kv, pad_to)
+    cost_rep = r_rep  # cache multiplier
+    nkv_pad = -(-num_kv // pad_to) * pad_to
+    cost_pad = nkv_pad / num_kv
+    if cost_rep <= cost_pad:
+        hkv = num_kv * r_rep
+        g = -(-g0 // r_rep)
+        kv_of = tuple(j // r_rep for j in range(hkv))
+        q_of = [-1] * (hkv * g)
+        for k in range(num_kv):
+            for i in range(g0):
+                t, gg = i % r_rep, i // r_rep
+                q_of[(k * r_rep + t) * g + gg] = k * g0 + i
+    else:
+        hkv = nkv_pad
+        g = g0
+        kv_of = tuple(k if k < num_kv else -1 for k in range(hkv))
+        q_of = [-1] * (hkv * g)
+        for k in range(num_kv):
+            for gg in range(g0):
+                q_of[k * g + gg] = k * g0 + gg
+    return hkv * g, hkv, tuple(q_of), kv_of
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_base: float = 10000.0
+    rope_pct: float = 1.0  # stablelm2 uses partial rotary (25%)
+    logit_softcap: float | None = None
+    use_rope: bool = True
+    pad_to: int = 1  # model-axis size the deployment pads heads for
+
+    @property
+    def plan(self):
+        return plan_heads(self.num_heads, self.num_kv_heads, self.pad_to)
+
+    @property
+    def hq_eff(self):
+        return self.plan[0]
+
+    @property
+    def hkv_eff(self):
+        return self.plan[1]
+
+    @property
+    def q_groups(self):
+        return self.hq_eff // self.hkv_eff
+
+    @property
+    def rope_dim(self):
+        rd = int(self.head_dim * self.rope_pct)
+        return rd - rd % 2
+
+
+def _expand_heads(w, of_slot, axis):
+    """Scatter original heads into padded slots (−1 → zeros). Exact."""
+    slots = jnp.asarray([max(s, 0) for s in of_slot])
+    mask_shape = [1] * w.ndim
+    mask_shape[axis] = len(of_slot)
+    mask = jnp.asarray([s >= 0 for s in of_slot], w.dtype).reshape(mask_shape)
+    return jnp.take(w, slots, axis=axis) * mask
+
+
+def init(key, cfg: AttnConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    hq, hkv, q_of, kv_of = cfg.plan
+    wq = fan_in_init(ks[0], (cfg.d_model, cfg.num_heads, cfg.head_dim), dtype)
+    wk = fan_in_init(ks[1], (cfg.d_model, cfg.num_kv_heads, cfg.head_dim), dtype)
+    wv = fan_in_init(ks[2], (cfg.d_model, cfg.num_kv_heads, cfg.head_dim), dtype)
+    wo = fan_in_init(ks[3], (cfg.num_heads, cfg.head_dim, cfg.d_model), dtype)
+    p = {
+        "wq": _expand_heads(wq, q_of, 1),
+        "wk": _expand_heads(wk, kv_of, 1),
+        "wv": _expand_heads(wv, kv_of, 1),
+        "wo": _expand_heads(wo, q_of, 0).reshape(hq * cfg.head_dim,
+                                                 cfg.d_model),
+    }
+    if cfg.qkv_bias:
+        bq = jnp.zeros((cfg.num_heads, cfg.head_dim), dtype)
+        bkv = jnp.zeros((cfg.num_kv_heads, cfg.head_dim), dtype)
+        p["bq"] = _expand_heads(bq, q_of, 0)
+        p["bk"] = _expand_heads(bkv, kv_of, 0)
+        p["bv"] = _expand_heads(bkv, kv_of, 0)
+    return p
+
+
+def _qkv(p, x, cfg: AttnConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.use_rope:
+        q = rope(q, positions, base=cfg.rope_base, rope_dim=cfg.rope_dim)
+        k = rope(k, positions, base=cfg.rope_base, rope_dim=cfg.rope_dim)
+    return q, k, v
+
+
+def _attend(q, k, v, mask, cfg: AttnConfig):
+    """q: (B,S,Hq,Dh), k/v: (B,T,Hkv,Dh), mask: (B?,S,T) bool."""
+    b, s, hq, dh = q.shape
+    g = cfg.q_groups
+    qg = q.reshape(b, s, cfg.hkv_eff, g, dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits * (dh ** -0.5)
+    logits = softcap(logits, cfg.logit_softcap)
+    neg = jnp.finfo(jnp.float32).min
+    logits = jnp.where(mask[:, None, None, :, :], logits, neg)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, hq * dh)
+
+
+def forward(p, x, positions, cfg: AttnConfig, *, window: int | None = None):
+    """Training/prefill self-attention. Returns (out, (k, v))."""
+    q, k, v = _qkv(p, x, cfg, positions)
+    s = x.shape[1]
+    i = positions[:, :, None]  # (B,S,1)
+    j = positions[:, None, :]  # (B,1,S)
+    mask = j <= i
+    if window is not None:
+        mask &= j > i - window
+    out = _attend(q, k, v, mask, cfg)
+    return out @ p["wo"], (k, v)
+
+
+def bidirectional(p, x, positions, cfg: AttnConfig):
+    """Encoder self-attention (no mask). Returns out only."""
+    q, k, v = _qkv(p, x, cfg, positions)
+    mask = jnp.ones((x.shape[0], x.shape[1], x.shape[1]), bool)
+    return _attend(q, k, v, mask, cfg) @ p["wo"]
+
+
+def init_cache(batch, length, cfg: AttnConfig, dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, length, cfg.hkv_eff, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, length, cfg.hkv_eff, cfg.head_dim), dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),
+    }
+
+
+def decode(p, x, cache, pos, cfg: AttnConfig, *, window: int | None = None):
+    """One-token decode. x: (B, 1, D); pos: scalar int32 absolute position.
+
+    Returns (out (B,1,D), new_cache).
+    """
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)  # k/v: (B,1,Hkv,Dh)
+    length = cache["k"].shape[1]
+    slot = jnp.asarray(pos % length if window is not None else pos, jnp.int32)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    new_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], positions[0], slot, axis=0
+    )
+    # validity: slot filled, causal, and within window if rolling
+    valid = (new_pos >= 0) & (new_pos <= pos)
+    if window is not None:
+        valid &= new_pos > pos - window
+    mask = jnp.broadcast_to(valid[None, None, :], (x.shape[0], 1, length))
+    out = _attend(q, new_k, new_v, mask, cfg)
+    return out @ p["wo"], {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+def cross_init(key, cfg: AttnConfig, dtype=jnp.float32):
+    return init(key, cfg, dtype)
+
+
+def cross(p, x, enc_kv, cfg: AttnConfig):
+    """Cross-attention over precomputed encoder K/V (no mask, no rope)."""
+    positions = jnp.zeros(x.shape[:2], jnp.int32)
+    nocfg = dataclasses.replace(cfg, use_rope=False)
+    q, _, _ = _qkv(p, x, nocfg, positions)
+    k, v = enc_kv
+    mask = jnp.ones((x.shape[0], x.shape[1], k.shape[1]), bool)
+    out = _attend(q, k, v, mask, cfg)
+    return out @ p["wo"]
+
+
+def encode_kv(p, enc_out, cfg: AttnConfig):
+    """Precompute cross-attention K/V from encoder output."""
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v

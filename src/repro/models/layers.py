@@ -1,0 +1,130 @@
+"""Shared transformer building blocks (pure functional JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- init utils
+def normal_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def fan_in_init(key, shape, dtype=jnp.float32):
+    scale = shape[0] ** -0.5
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(p, x, *, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale): zero-init == identity
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, *, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    if kind == "layernorm":
+        return layernorm_init, layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope(x, positions, *, base=10000.0, rope_dim=None):
+    """Rotary embedding. x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    rd = rope_dim or dh
+    half = rd // 2
+    freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x_rot, x_pass = x[..., :rd], x[..., rd:]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if rd < dh else out
+
+
+# ---------------------------------------------------------------- MLPs
+def mlp_init(key, d_model, d_ff, kind, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": fan_in_init(k1, (d_model, d_ff), dtype),
+            "w_up": fan_in_init(k2, (d_model, d_ff), dtype),
+            "w_down": fan_in_init(k3, (d_ff, d_model), dtype),
+        }
+    if kind == "gelu":  # whisper-style 2-layer MLP with bias
+        return {
+            "w_up": fan_in_init(k1, (d_model, d_ff), dtype),
+            "b_up": jnp.zeros((d_ff,), dtype),
+            "w_down": fan_in_init(k2, (d_ff, d_model), dtype),
+            "b_down": jnp.zeros((d_model,), dtype),
+        }
+    raise ValueError(kind)
+
+
+def mlp_apply(p, x, kind):
+    if kind == "swiglu":
+        act = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        return act @ p["w_down"]
+    if kind == "geglu":
+        act = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+        return act @ p["w_down"]
+    if kind == "gelu":
+        return jax.nn.gelu(x @ p["w_up"] + p["b_up"], approximate=True) @ p[
+            "w_down"] + p["b_down"]
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------- softcap
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------- embedding
+def embed_init(key, vocab, d_model, dtype=jnp.float32):
+    return {"table": normal_init(key, (vocab, d_model), 0.02, dtype)}
+
+
+def embed_lookup(p, tokens, *, scale=None):
+    y = jnp.take(p["table"], tokens, axis=0)
+    if scale is not None:
+        y = y * jnp.asarray(scale, y.dtype)
+    return y
+
+
+def embed_logits(p, h):
+    """Tied read-out: (B, S, D) @ (V, D)^T."""
+    return jnp.einsum("...d,vd->...v", h, p["table"])
+
+
+def sinusoidal_positions(length, d_model, dtype=jnp.float32):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d_model))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

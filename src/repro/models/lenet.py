@@ -1,0 +1,63 @@
+"""LeNet-5 in pure JAX (paper §V-A: all experiments use LeNet-5).
+
+Functional: ``init(key, ...) -> params`` pytree, ``apply(params, x) -> logits``.
+Input is NHWC; the paper's 28×28×1 (EMNIST) and 32×32×3 (CIFAR) both work.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv(x, w, b, *, padding):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _avg_pool(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    ) / 4.0
+
+
+def _glorot(key, shape):
+    fan_in = int(jnp.prod(jnp.asarray(shape[:-1])))
+    fan_out = shape[-1]
+    limit = (6.0 / (fan_in + fan_out)) ** 0.5
+    return jax.random.uniform(key, shape, jnp.float32, -limit, limit)
+
+
+def init(key, *, input_hw=(28, 28), channels=1, num_classes=47):
+    h, w = input_hw
+    ks = jax.random.split(key, 5)
+    # flatten size after two valid 5x5 convs + 2x2 pools
+    h1, w1 = h - 4, w - 4
+    h2, w2 = h1 // 2 - 4, w1 // 2 - 4
+    flat = (h2 // 2) * (w2 // 2) * 16
+    return {
+        "c1_w": _glorot(ks[0], (5, 5, channels, 6)),
+        "c1_b": jnp.zeros((6,)),
+        "c2_w": _glorot(ks[1], (5, 5, 6, 16)),
+        "c2_b": jnp.zeros((16,)),
+        "f1_w": _glorot(ks[2], (flat, 120)),
+        "f1_b": jnp.zeros((120,)),
+        "f2_w": _glorot(ks[3], (120, 84)),
+        "f2_b": jnp.zeros((84,)),
+        "f3_w": _glorot(ks[4], (84, num_classes)),
+        "f3_b": jnp.zeros((num_classes,)),
+    }
+
+
+def apply(params, x):
+    """x: (batch, H, W, C) float32 -> logits (batch, num_classes)."""
+    y = jnp.tanh(_conv(x, params["c1_w"], params["c1_b"], padding="VALID"))
+    y = _avg_pool(y)
+    y = jnp.tanh(_conv(y, params["c2_w"], params["c2_b"], padding="VALID"))
+    y = _avg_pool(y)
+    y = y.reshape(y.shape[0], -1)
+    y = jnp.tanh(y @ params["f1_w"] + params["f1_b"])
+    y = jnp.tanh(y @ params["f2_w"] + params["f2_b"])
+    return y @ params["f3_w"] + params["f3_b"]

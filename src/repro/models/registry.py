@@ -1,0 +1,30 @@
+"""Build the functional model bundle for a ModelConfig."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer, whisper
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Any]  # (params, batch) -> (logits, aux)
+    loss: Callable[..., Any]  # (params, batch) -> scalar
+    init_cache: Callable[..., Any]  # (batch, max_len) -> caches
+    decode_step: Callable[..., Any]  # (params, caches, tokens, pos)
+
+
+def build(cfg: ModelConfig) -> Model:
+    mod = whisper if cfg.family == "audio" else transformer
+    return Model(
+        cfg=cfg,
+        init=lambda key: mod.init(key, cfg),
+        forward=lambda p, b: mod.forward(p, b, cfg),
+        loss=lambda p, b: mod.loss_fn(p, b, cfg),
+        init_cache=lambda batch, max_len: mod.init_cache(cfg, batch, max_len),
+        decode_step=lambda p, c, t, pos: mod.decode_step(p, c, t, pos, cfg),
+    )

@@ -1,0 +1,199 @@
+"""Mamba2 (SSD — state-space duality) block, chunked, TPU-friendly.
+
+Follows arXiv:2405.21060: scalar per-head decay a_t = exp(Δ_t·A_h), rank-1
+state update h_t = a_t·h_{t−1} + Δ_t·(x_t ⊗ B_t), readout y_t = C_t·h_t +
+D·x_t, with the SSD *chunked* evaluation: intra-chunk terms become a
+(Q × Q) masked matmul (MXU work, like attention), inter-chunk terms a
+recurrence over chunk states carried by ``lax.scan``. Sequence parallelism
+shards heads on the "model" axis; the scan carries only (B, H, P, N)
+states. Decode keeps {conv window, SSM state} as the cache — O(1) in
+context length, which is why `long_500k` is trivial for SSM archs.
+
+Structure per block: in_proj → short depthwise causal conv (width 4) on
+(x, B, C) → SSD → gated RMSNorm (silu(z)) → out_proj.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import fan_in_init, rmsnorm, rmsnorm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    state: int = 128  # N
+    headdim: int = 64  # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self):
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_channels(self):
+        return self.d_inner + 2 * self.state
+
+
+def init(key, cfg: SSMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    di, n, h = cfg.d_inner, cfg.state, cfg.num_heads
+    # in_proj emits [z, x, B, C, dt]
+    return {
+        "in_proj": fan_in_init(ks[0], (cfg.d_model, 2 * di + 2 * n + h), dtype),
+        "conv_w": fan_in_init(ks[1], (cfg.conv_width, cfg.conv_channels), dtype),
+        "conv_b": jnp.zeros((cfg.conv_channels,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log)
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": fan_in_init(ks[2], (di, cfg.d_model), dtype),
+    }
+
+
+def _split_proj(p, x, cfg: SSMConfig):
+    di, n, h = cfg.d_inner, cfg.state, cfg.num_heads
+    zxbcdt = x @ p["in_proj"]
+    z, xc, b, c, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (.., S, H)
+    return z, xc, b, c, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, *, prev=None):
+    """Depthwise causal conv along S. xbc: (B, S, C); prev: (B, W−1, C)."""
+    w = conv_w.shape[0]
+    pad = prev if prev is not None else jnp.zeros(
+        (xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype
+    )
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        full[:, i: i + xbc.shape[1], :] * conv_w[i][None, None, :]
+        for i in range(w)
+    )
+    return jax.nn.silu(out + conv_b), full[:, -(w - 1):, :]
+
+
+def _ssd_chunked(xh, b, c, dt, a_log, cfg: SSMConfig, h0=None):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P); b/c: (B, S, N); dt: (B, S, H).
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+
+    §Perf (mamba2 memory hillclimb): the intra-chunk tensors (decay mask M
+    is (B, nc, Q, Q, H) — B·S·Q·H elements, LINEAR in the chunk size Q)
+    dominate HBM traffic. They are therefore materialized in the model's
+    compute dtype (bf16 at scale) with f32 accumulation on the MXU; the
+    decay *cumsum* and the inter-chunk state recurrence stay f32 (the
+    recurrence is the numerically-sensitive part). Chunk=128 keeps the
+    matmuls lane-aligned while halving M traffic vs 256.
+    """
+    B, S, H, P = xh.shape
+    N, Q = cfg.state, min(cfg.chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    A = -jnp.exp(a_log)  # (H,)
+    cdt = xh.dtype  # compute dtype for the big intra-chunk tensors
+
+    def resh(t, tail):
+        return t.reshape((B, nc, Q) + tail)
+
+    xc_ = resh(xh, (H, P))
+    b_ = resh(b.astype(cdt), (N,))
+    c_ = resh(c.astype(cdt), (N,))
+    dt_ = resh(dt, (H,))  # f32 (from softplus)
+    l = dt_ * A[None, None, None, :]  # (B,nc,Q,H) log-decay, f32
+    cum = jnp.cumsum(l, axis=2)  # inclusive cumsum within chunk, f32
+
+    # intra-chunk: M[t,s] = exp(cum_t − cum_s)·(C_t·B_s)·dt_s, s ≤ t
+    cb = jnp.einsum("bqtn,bqsn->bqts", c_, b_,
+                    preferred_element_type=jnp.float32)  # (B,nc,Q,Q)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    m = jnp.where(causal[None, None, :, :, None], jnp.exp(decay), 0.0)
+    m = (m * cb[..., None] * dt_[:, :, None, :, :]).astype(cdt)
+    y_intra = jnp.einsum("bqtsh,bqshp->bqthp", m, xc_,
+                         preferred_element_type=jnp.float32)
+
+    # chunk summaries: S_c = Σ_s exp(cumQ − cum_s)·dt_s·(x_s ⊗ B_s)
+    tail_decay = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H) f32
+    s_chunk = jnp.einsum(
+        "bqsh,bqshp,bqsn->bqhpn", (tail_decay * dt_).astype(cdt), xc_, b_,
+        preferred_element_type=jnp.float32,
+    )  # (B,nc,H,P,N) f32
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H) f32
+
+    def scan_fn(h, inp):
+        s_c, dec = inp  # (B,H,P,N), (B,H)
+        h_new = h * dec[:, :, None, None] + s_c
+        return h_new, h
+
+    h_init = h0 if h0 is not None else jnp.zeros((B, H, P, N), jnp.float32)
+    h_last, h_prev = jax.lax.scan(
+        scan_fn,
+        h_init,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (B,nc,H,P,N) state entering chunk
+
+    # inter-chunk readout: y_t += C_t · (exp(cum_t)·h_prev)
+    y_inter = jnp.einsum(
+        "bqtn,bqth,bqhpn->bqthp", c_, jnp.exp(cum).astype(cdt),
+        h_prev.astype(cdt), preferred_element_type=jnp.float32,
+    )
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y.astype(xh.dtype), h_last
+
+
+def forward(p, x, cfg: SSMConfig, *, h0=None, conv_prev=None):
+    """Full-sequence SSD. x: (B, S, D) -> (y, cache)."""
+    z, xc, b, c, dt = _split_proj(p, x, cfg)
+    xbc = jnp.concatenate([xc, b, c], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], prev=conv_prev)
+    di, n = cfg.d_inner, cfg.state
+    xc, b, c = jnp.split(xbc, [di, di + n], axis=-1)
+    xh = xc.reshape(x.shape[0], x.shape[1], cfg.num_heads, cfg.headdim)
+    y, h = _ssd_chunked(xh, b, c, dt, p["A_log"], cfg, h0=h0)
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(x.shape[0], x.shape[1], di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"], {"h": h, "conv": conv_state}
+
+
+def init_cache(batch, cfg: SSMConfig, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.num_heads, cfg.headdim, cfg.state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_channels), dtype),
+    }
+
+
+def decode(p, x, cache, cfg: SSMConfig):
+    """One-token step. x: (B, 1, D) -> (y (B,1,D), new_cache)."""
+    z, xc, b, c, dt = _split_proj(p, x, cfg)
+    xbc = jnp.concatenate([xc, b, c], axis=-1)
+    xbc, conv_state = _causal_conv(
+        xbc, p["conv_w"], p["conv_b"], prev=cache["conv"].astype(xbc.dtype)
+    )
+    di, n = cfg.d_inner, cfg.state
+    xc, b, c = jnp.split(xbc, [di, di + n], axis=-1)
+    B = x.shape[0]
+    xh = xc.reshape(B, cfg.num_heads, cfg.headdim).astype(jnp.float32)
+    bt = b[:, 0].astype(jnp.float32)  # (B, N)
+    ct = c[:, 0].astype(jnp.float32)
+    dtt = dt[:, 0]  # (B, H)
+    a = jnp.exp(dtt * (-jnp.exp(p["A_log"]))[None, :])  # (B, H)
+    h = cache["h"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtt, xh, bt
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h, ct) + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"], {"h": h, "conv": conv_state}

@@ -1,0 +1,361 @@
+"""Config-driven decoder LM covering dense / MoE / SSM / hybrid / VLM.
+
+Layers are grouped into a repeating pattern (cfg.attn_pattern for dense/
+MoE, one SSM layer for ssm, (g−1)·mamba + 1 shared-attention slot for
+zamba2-style hybrids) and the group stack is executed with ``lax.scan`` so
+the HLO stays O(1) in depth — essential for CPU-hosted 512-device dry-run
+compiles. Weights of the hybrid's attention slot are SHARED (stored once,
+closed over), its KV caches are per-invocation (scanned).
+
+Params layout:
+  embed, (lm_head), final_norm, first_block?, shared_attn?, projector?,
+  blocks: every leaf stacked over num_groups on axis 0.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, moe, ssm
+from repro.models.attention import AttnConfig
+from repro.models.layers import (
+    embed_init,
+    embed_logits,
+    embed_lookup,
+    fan_in_init,
+    make_norm,
+    mlp_apply,
+    mlp_init,
+    softcap,
+)
+
+
+# --------------------------------------------------------------- sub-configs
+def attn_config(cfg: ModelConfig) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        qkv_bias=cfg.qkv_bias,
+        rope_base=cfg.rope_base,
+        rope_pct=cfg.rope_pct,
+        logit_softcap=cfg.attn_softcap,
+        pad_to=cfg.head_pad,
+    )
+
+
+def moe_config(cfg: ModelConfig) -> moe.MoEConfig:
+    return moe.MoEConfig(
+        d_model=cfg.d_model,
+        d_ff=cfg.moe_d_ff or cfg.d_ff,
+        num_experts=cfg.moe_num_experts,
+        top_k=cfg.moe_top_k,
+        capacity_factor=cfg.capacity_factor,
+        ep_axis=cfg.expert_axis,
+    )
+
+
+def ssm_config(cfg: ModelConfig) -> ssm.SSMConfig:
+    return ssm.SSMConfig(
+        d_model=cfg.d_model,
+        state=cfg.ssm_state,
+        headdim=cfg.ssm_headdim,
+        expand=cfg.ssm_expand,
+        chunk=cfg.ssm_chunk,
+    )
+
+
+def _group_slots(cfg: ModelConfig):
+    """The layer kinds inside one scanned group."""
+    if cfg.family == "ssm":
+        return ("mamba",)
+    if cfg.family == "hybrid":
+        return ("mamba",) * (cfg.hybrid_group - 1) + ("shared_attn",)
+    pat = []
+    for a in cfg.attn_pattern:
+        pat.append(f"attn_{a}")
+    return tuple(pat)
+
+
+# --------------------------------------------------------------- init
+def _init_attn_layer(key, cfg: ModelConfig, dtype, *, moe_mlp: bool):
+    ninit, _ = make_norm(cfg.norm)
+    ks = jax.random.split(key, 2)
+    p: Dict[str, Any] = {
+        "ln_attn": ninit(cfg.d_model, dtype),
+        "attn": attention.init(ks[0], attn_config(cfg), dtype),
+        "ln_mlp": ninit(cfg.d_model, dtype),
+    }
+    if moe_mlp:
+        p["moe"] = moe.init(ks[1], moe_config(cfg), dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    if cfg.post_norms:
+        p["ln_post_attn"] = ninit(cfg.d_model, dtype)
+        p["ln_post_mlp"] = ninit(cfg.d_model, dtype)
+    return p
+
+
+def _init_mamba_layer(key, cfg: ModelConfig, dtype):
+    ninit, _ = make_norm(cfg.norm)
+    return {
+        "ln": ninit(cfg.d_model, dtype),
+        "mamba": ssm.init(key, ssm_config(cfg), dtype),
+    }
+
+
+def _init_group(key, cfg: ModelConfig, dtype):
+    slots = _group_slots(cfg)
+    p = {}
+    keys = jax.random.split(key, len(slots))
+    moe_mlp = cfg.family == "moe"
+    for i, (slot, k) in enumerate(zip(slots, keys)):
+        if slot == "mamba":
+            p[f"l{i}"] = _init_mamba_layer(k, cfg, dtype)
+        elif slot == "shared_attn":
+            ninit, _ = make_norm(cfg.norm)
+            p[f"l{i}"] = {"ln": ninit(cfg.d_model, dtype)}  # weights shared
+        else:
+            p[f"l{i}"] = _init_attn_layer(k, cfg, dtype, moe_mlp=moe_mlp)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    dtype = cfg.param_jdtype
+    ninit, _ = make_norm(cfg.norm)
+    ks = jax.random.split(key, 6)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": ninit(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": fan_in_init(ks[1], (cfg.d_model, cfg.padded_vocab), dtype)
+        }
+    params["blocks"] = jax.vmap(
+        lambda k: _init_group(k, cfg, dtype)
+    )(jax.random.split(ks[2], cfg.num_groups))
+    if cfg.first_dense:
+        params["first_block"] = _init_attn_layer(ks[3], cfg, dtype,
+                                                 moe_mlp=False)
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _init_attn_layer(ks[4], cfg, dtype,
+                                                 moe_mlp=False)
+    if cfg.family == "vlm":
+        params["projector"] = {
+            "w": fan_in_init(ks[5], (cfg.patch_embed_dim, cfg.d_model), dtype),
+            "b": jnp.zeros((cfg.d_model,), dtype),
+        }
+    return params
+
+
+# --------------------------------------------------------------- forward
+def _apply_attn_layer(p, h, positions, cfg: ModelConfig, kind: str, *,
+                      cache=None, pos=None, shared=None):
+    """One attention(+mlp) layer; returns (h, new_cache)."""
+    _, napply = make_norm(cfg.norm)
+    acfg = attn_config(cfg)
+    window = cfg.window if kind.endswith("local") else None
+    wp = shared if shared is not None else p
+    x = napply(p["ln_attn"] if "ln_attn" in p else p["ln"], h)
+    if cache is None:
+        attn_out, kv = attention.forward(wp["attn"], x, positions, acfg,
+                                         window=window)
+        new_cache = {"k": kv[0], "v": kv[1]}
+    else:
+        attn_out, new_cache = attention.decode(wp["attn"], x, cache, pos,
+                                               acfg, window=window)
+    if cfg.post_norms:
+        attn_out = napply(wp["ln_post_attn"], attn_out)
+    h = h + attn_out
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in wp:
+        mlp_out, aux = moe.apply_auto(wp["moe"], napply(wp["ln_mlp"], h),
+                                      moe_config(cfg))
+        # §Perf: name the MoE output so remat_policy="save_moe" keeps it —
+        # recomputing it in the backward would repeat the EP dispatch
+        # round-trip (2 all_to_all + psum per layer).
+        from jax.ad_checkpoint import checkpoint_name
+
+        mlp_out = checkpoint_name(mlp_out, "moe")
+    else:
+        mlp_out = mlp_apply(wp["mlp"], napply(wp["ln_mlp"], h), cfg.mlp)
+    if cfg.post_norms:
+        mlp_out = napply(wp["ln_post_mlp"], mlp_out)
+    return h + mlp_out, new_cache, aux
+
+
+def _apply_group(group_p, h, positions, cfg: ModelConfig, *, caches=None,
+                 pos=None, shared_attn=None):
+    """Apply one scanned group. caches: dict keyed like group params."""
+    slots = _group_slots(cfg)
+    new_caches = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, slot in enumerate(slots):
+        p = group_p[f"l{i}"]
+        cache_i = None if caches is None else caches.get(f"l{i}")
+        if slot == "mamba":
+            _, napply = make_norm(cfg.norm)
+            x = napply(p["ln"], h)
+            if caches is None:
+                out, nc = ssm.forward(p["mamba"], x, ssm_config(cfg))
+                new_caches[f"l{i}"] = nc
+            else:
+                out, nc = ssm.decode(p["mamba"], x, cache_i, ssm_config(cfg))
+                new_caches[f"l{i}"] = nc
+            h = h + out
+        elif slot == "shared_attn":
+            h, nc, aux = _apply_attn_layer(
+                p, h, positions, cfg, "attn_global", cache=cache_i, pos=pos,
+                shared=shared_attn,
+            )
+            new_caches[f"l{i}"] = nc
+            aux_total += aux
+        else:
+            h, nc, aux = _apply_attn_layer(p, h, positions, cfg, slot,
+                                           cache=cache_i, pos=pos)
+            new_caches[f"l{i}"] = nc
+            aux_total += aux
+    return h, new_caches, aux_total
+
+
+def _remat(body, cfg: ModelConfig):
+    """Per-layer-group remat; policy="dots" saves matmul outputs so the
+    backward pass reloads instead of recomputing them (§Perf iteration)."""
+    if not cfg.remat:
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_saveable)
+    if cfg.remat_policy == "save_moe":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.save_only_these_names("moe"))
+    return jax.checkpoint(body)
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    scale = cfg.d_model ** 0.5 if cfg.emb_scale else None
+    h = embed_lookup(params["embed"], batch["tokens"], scale=scale)
+    h = h.astype(cfg.act_jdtype)
+    if cfg.family == "vlm":
+        proj = (batch["patch_embeds"].astype(cfg.act_jdtype)
+                @ params["projector"]["w"].astype(cfg.act_jdtype)
+                + params["projector"]["b"].astype(cfg.act_jdtype))
+        h = jnp.concatenate([proj, h], axis=1)
+    return h
+
+
+def _readout(params, h, cfg: ModelConfig):
+    _, napply = make_norm(cfg.norm)
+    h = napply(params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = embed_logits(params["embed"], h)
+    else:
+        logits = h @ params["lm_head"]["w"]
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask padded vocab rows exactly
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits
+
+
+def forward(params, batch, cfg: ModelConfig, *, return_cache: bool = False):
+    """Full-sequence forward -> (logits f32, aux_loss[, prefill caches])."""
+    h = _embed_inputs(params, batch, cfg)
+    b, s = h.shape[0], h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    shared = params.get("shared_attn")
+    aux_total = jnp.zeros((), jnp.float32)
+    out_caches = {}
+
+    if cfg.first_dense:
+        h, fc, _ = _apply_attn_layer(params["first_block"], h, positions,
+                                     cfg, "attn_global")
+        out_caches["first_block"] = fc
+
+    def body(carry, group_p):
+        h, aux = carry
+        h, caches_g, a = _apply_group(group_p, h, positions, cfg,
+                                      shared_attn=shared)
+        return (h, aux + a), (caches_g if return_cache else None)
+
+    body_fn = _remat(body, cfg)
+    (h, aux_total), block_caches = jax.lax.scan(
+        body_fn, (h, aux_total), params["blocks"]
+    )
+    if return_cache:
+        out_caches["blocks"] = block_caches
+        return _readout(params, h, cfg), aux_total, out_caches
+    return _readout(params, h, cfg), aux_total
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, aux_weight=0.01):
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # labels only cover the token positions
+        logits = logits[:, -labels.shape[1]:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + aux_weight * aux
+
+
+# --------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked (num_groups, ...) caches for the scanned blocks."""
+    acfg = attn_config(cfg)
+    slots = _group_slots(cfg)
+    cdtype = cfg.act_jdtype
+
+    def one_group(_):
+        c = {}
+        for i, slot in enumerate(slots):
+            if slot == "mamba":
+                c[f"l{i}"] = ssm.init_cache(batch, ssm_config(cfg), cdtype)
+            else:
+                kind = slot if slot != "shared_attn" else "attn_global"
+                length = (min(cfg.window, max_len)
+                          if kind.endswith("local") and cfg.window
+                          else max_len)
+                c[f"l{i}"] = attention.init_cache(batch, length, acfg, cdtype)
+        return c
+
+    caches = jax.vmap(one_group)(jnp.arange(cfg.num_groups))
+    out = {"blocks": caches}
+    if cfg.first_dense:
+        out["first_block"] = attention.init_cache(batch, max_len, acfg, cdtype)
+    return out
+
+
+def decode_step(params, caches, tokens, pos, cfg: ModelConfig):
+    """One-token decode. tokens: (B, 1) int32; pos: scalar int32.
+
+    Returns (logits (B, 1, V) f32, new_caches).
+    """
+    scale = cfg.d_model ** 0.5 if cfg.emb_scale else None
+    h = embed_lookup(params["embed"], tokens, scale=scale).astype(cfg.act_jdtype)
+    b = h.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    shared = params.get("shared_attn")
+    new_caches = dict(caches)
+
+    if cfg.first_dense:
+        h, nc, _ = _apply_attn_layer(params["first_block"], h, positions,
+                                     cfg, "attn_global",
+                                     cache=caches["first_block"], pos=pos)
+        new_caches["first_block"] = nc
+
+    def body(h, xs):
+        group_p, group_c = xs
+        h, nc, _ = _apply_group(group_p, h, positions, cfg, caches=group_c,
+                                pos=pos, shared_attn=shared)
+        return h, nc
+
+    h, block_caches = jax.lax.scan(body, h, (params["blocks"],
+                                             caches["blocks"]))
+    new_caches["blocks"] = block_caches
+    return _readout(params, h, cfg), new_caches

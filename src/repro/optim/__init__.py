@@ -1,0 +1,9 @@
+from repro.optim.sgd import sgd_init, sgd_update
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedules import constant, cosine, warmup_cosine
+
+__all__ = [
+    "sgd_init", "sgd_update",
+    "adamw_init", "adamw_update",
+    "constant", "cosine", "warmup_cosine",
+]

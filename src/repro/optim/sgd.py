@@ -1,0 +1,38 @@
+"""SGD with (heavy-ball) momentum — the paper's optimizer (η=0.1, β=0.9).
+
+Pure functions over pytrees; no optax in this offline container.
+``momentum_dtype`` lets large-model configs keep the buffer in bf16.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, *, momentum: float = 0.9, momentum_dtype=None):
+    if momentum == 0.0:
+        return ()
+    dt = momentum_dtype
+
+    def buf(p):
+        return jnp.zeros_like(p, dtype=dt or p.dtype)
+
+    return jax.tree.map(buf, params)
+
+
+def sgd_update(grads, state, params, *, lr, momentum: float = 0.9,
+               weight_decay: float = 0.0):
+    """Returns (new_params, new_state)."""
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    if momentum == 0.0:
+        new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return new_params, ()
+    new_state = jax.tree.map(
+        lambda v, g: (momentum * v.astype(g.dtype) + g).astype(v.dtype),
+        state, grads,
+    )
+    new_params = jax.tree.map(
+        lambda p, v: p - lr * v.astype(p.dtype), params, new_state
+    )
+    return new_params, new_state

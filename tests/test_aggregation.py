@@ -1,0 +1,100 @@
+"""Aggregation-rule tests (Eq. 1/8, §IV-B clustered group-cast)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation
+from repro.core.baselines.common import group_average, group_mixing_matrix
+
+
+def _stacked(seed, m):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(m, 3, 5)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(m, 7)).astype(np.float32)),
+    }
+
+
+def test_fedavg_is_weighted_mean():
+    m = 5
+    stacked = _stacked(0, m)
+    n = jnp.asarray([1.0, 2.0, 3.0, 4.0, 10.0])
+    out = aggregation.fedavg(stacked, n)
+    wts = np.asarray(n) / np.asarray(n).sum()
+    for key in stacked:
+        want = np.tensordot(wts, np.asarray(stacked[key]), axes=(0, 0))
+        got = np.asarray(out[key])
+        assert got.shape == stacked[key].shape  # broadcast back to clients
+        for i in range(m):
+            np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-6)
+
+
+def test_identity_w_is_local_training():
+    m = 4
+    stacked = _stacked(1, m)
+    out = aggregation.user_centric(stacked, jnp.eye(m))
+    for key in stacked:
+        np.testing.assert_allclose(np.asarray(out[key]),
+                                   np.asarray(stacked[key]), rtol=1e-6)
+
+
+def test_user_centric_matches_manual_einsum():
+    m = 6
+    stacked = _stacked(2, m)
+    rng = np.random.default_rng(3)
+    w = rng.dirichlet(np.ones(m), size=m).astype(np.float32)
+    out = aggregation.user_centric(stacked, jnp.asarray(w))
+    for key in stacked:
+        want = np.einsum("ij,j...->i...", w, np.asarray(stacked[key]))
+        np.testing.assert_allclose(np.asarray(out[key]), want,
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_clustered_with_m_clusters_equals_user_centric():
+    """m_t = m with singleton clusters reproduces full personalization."""
+    m = 5
+    stacked = _stacked(4, m)
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.dirichlet(np.ones(m), size=m).astype(np.float32))
+    labels = jnp.arange(m)
+    full = aggregation.user_centric(stacked, w)
+    clus = aggregation.clustered(stacked, w, labels, m)
+    for key in stacked:
+        np.testing.assert_allclose(np.asarray(clus[key]),
+                                   np.asarray(full[key]), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_clustered_members_share_models():
+    m = 6
+    stacked = _stacked(6, m)
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.dirichlet(np.ones(m), size=m).astype(np.float32))
+    labels = jnp.asarray([0, 0, 0, 1, 1, 1])
+    out = aggregation.clustered(stacked, w, labels, 2)
+    for key in stacked:
+        arr = np.asarray(out[key])
+        np.testing.assert_allclose(arr[0], arr[1], rtol=1e-6)
+        np.testing.assert_allclose(arr[3], arr[5], rtol=1e-6)
+        assert np.abs(arr[0] - arr[3]).max() > 1e-4
+
+
+def test_group_average_blockwise():
+    m = 4
+    stacked = _stacked(8, m)
+    assignment = jnp.asarray([0, 0, 1, 1])
+    n = jnp.ones((m,))
+    out = group_average(stacked, assignment, n)
+    for key in stacked:
+        arr = np.asarray(out[key])
+        src = np.asarray(stacked[key])
+        np.testing.assert_allclose(arr[0], (src[0] + src[1]) / 2, rtol=1e-5)
+        np.testing.assert_allclose(arr[2], (src[2] + src[3]) / 2, rtol=1e-5)
+
+
+def test_group_mixing_matrix_row_stochastic():
+    assignment = jnp.asarray([0, 1, 0, 2, 1])
+    n = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0])
+    w = np.asarray(group_mixing_matrix(assignment, n))
+    np.testing.assert_allclose(w.sum(1), 1.0, rtol=1e-6)
+    assert w[0, 1] == 0 and w[0, 2] > 0

@@ -1,0 +1,45 @@
+"""Checkpoint save/restore roundtrip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.models import lenet
+
+
+def test_roundtrip(tmp_path):
+    params = lenet.init(jax.random.PRNGKey(0), input_hw=(16, 16),
+                        channels=1, num_classes=5)
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    checkpoint.save(path, params)
+    like = jax.tree.map(jnp.zeros_like, params)
+    restored = checkpoint.restore(path, like)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    params = {"w": jnp.ones((3, 3))}
+    path = os.path.join(tmp_path, "c.msgpack")
+    checkpoint.save(path, params)
+    with pytest.raises(ValueError):
+        checkpoint.restore(path, {"w": jnp.ones((4, 4))})
+
+
+def test_restore_rejects_leaf_count_mismatch(tmp_path):
+    params = {"w": jnp.ones((3,)), "b": jnp.ones((2,))}
+    path = os.path.join(tmp_path, "c.msgpack")
+    checkpoint.save(path, params)
+    with pytest.raises(ValueError):
+        checkpoint.restore(path, {"w": jnp.ones((3,))})
+
+
+def test_atomic_overwrite(tmp_path):
+    path = os.path.join(tmp_path, "c.msgpack")
+    checkpoint.save(path, {"w": jnp.ones((2,))})
+    checkpoint.save(path, {"w": 2 * jnp.ones((2,))})
+    out = checkpoint.restore(path, {"w": jnp.zeros((2,))})
+    np.testing.assert_array_equal(np.asarray(out["w"]), [2.0, 2.0])

@@ -1,0 +1,71 @@
+"""K-means / silhouette / Alg-2 stream-selection tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clustering
+
+
+def _blobs(key, k, per, f=8, spread=0.05):
+    centers = jax.random.normal(key, (k, f)) * 3
+    pts = jnp.concatenate([
+        centers[i] + spread * jax.random.normal(
+            jax.random.fold_in(key, i), (per, f))
+        for i in range(k)
+    ])
+    labels = jnp.repeat(jnp.arange(k), per)
+    return pts, labels
+
+
+def test_kmeans_recovers_blobs():
+    key = jax.random.PRNGKey(0)
+    pts, true = _blobs(key, 3, 10)
+    res = clustering.kmeans(jax.random.PRNGKey(1), pts, 3)
+    got = np.asarray(res.labels)
+    # same-cluster iff same true label (up to relabeling)
+    for a in range(30):
+        for b in range(30):
+            assert (got[a] == got[b]) == (int(true[a]) == int(true[b]))
+
+
+def test_silhouette_high_for_separated_low_for_random():
+    key = jax.random.PRNGKey(2)
+    pts, true = _blobs(key, 4, 8)
+    s_good = float(clustering.silhouette_score(pts, true))
+    rand_labels = jax.random.randint(jax.random.PRNGKey(3), (32,), 0, 4)
+    s_bad = float(clustering.silhouette_score(pts, rand_labels))
+    assert -1.0 <= s_bad <= s_good <= 1.0
+    assert s_good > 0.8
+    assert s_good - s_bad > 0.3
+
+
+def test_silhouette_peaks_at_true_k():
+    """Fig. 4 behaviour: k-sweep silhouette peaks at the true cluster #."""
+    key = jax.random.PRNGKey(4)
+    pts, _ = _blobs(key, 4, 8)
+    scores = {}
+    for k in range(2, 8):
+        res = clustering.kmeans(jax.random.PRNGKey(k), pts, k)
+        scores[k] = float(clustering.silhouette_score(pts, res.labels))
+    assert max(scores, key=scores.get) == 4
+
+
+def test_choose_num_streams_alg2():
+    key = jax.random.PRNGKey(5)
+    pts, _ = _blobs(key, 3, 8)
+    best_k, results = clustering.choose_num_streams(
+        jax.random.PRNGKey(6), pts, k_max=6)
+    assert best_k == 3
+    assert set(results) == {2, 3, 4, 5, 6}
+
+
+def test_kmeans_inertia_decreases_with_k():
+    key = jax.random.PRNGKey(7)
+    pts = jax.random.normal(key, (40, 6))
+    prev = None
+    for k in (2, 4, 8, 16):
+        res = clustering.kmeans(jax.random.PRNGKey(k), pts, k, iters=30)
+        val = float(res.inertia)
+        if prev is not None:
+            assert val <= prev * 1.05  # monotone up to seeding noise
+        prev = val

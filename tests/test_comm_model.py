@@ -1,0 +1,63 @@
+"""§V-D communication/straggler model tests."""
+import math
+
+import pytest
+
+from repro.core import comm_model as cm
+
+
+def test_harmonic():
+    assert cm.harmonic(1) == 1.0
+    assert abs(cm.harmonic(4) - (1 + 0.5 + 1 / 3 + 0.25)) < 1e-12
+
+
+def test_straggler_penalty_grows_with_m():
+    t10 = cm.expected_compute_time(cm.SystemParams(m=10, inv_mu=1.0))
+    t100 = cm.expected_compute_time(cm.SystemParams(m=100, inv_mu=1.0))
+    assert t100 > t10
+    assert cm.expected_compute_time(cm.SystemParams(m=100, inv_mu=0.0)) == 1.0
+
+
+def test_round_time_scheme_ordering():
+    """broadcast ≤ groupcast(k) ≤ unicast for k ≤ m (paper Fig. 5 logic)."""
+    p = cm.SystemParams(m=20, rho=4.0)
+    b = cm.round_time(p, "broadcast")
+    g = cm.round_time(p, "groupcast", num_streams=4)
+    u = cm.round_time(p, "unicast")
+    assert b <= g <= u
+    assert u - b == (p.m - 1) * p.t_dl
+
+
+def test_asymmetric_uplink_amortizes_personalization():
+    """With slow UL (ρ=4), unicast overhead is relatively smaller —
+    the paper's core wireless argument."""
+    fast = cm.SystemParams(m=20, rho=1.0)
+    slow = cm.SystemParams(m=20, rho=4.0)
+    rel_fast = cm.round_time(fast, "unicast") / cm.round_time(fast, "broadcast")
+    rel_slow = cm.round_time(slow, "unicast") / cm.round_time(slow, "broadcast")
+    assert rel_slow < rel_fast
+
+
+def test_downlink_bytes():
+    mb = 10_000_000
+    assert cm.downlink_bytes_per_round(mb, "broadcast", 20) == mb
+    assert cm.downlink_bytes_per_round(mb, "groupcast", 20, 4) == 4 * mb
+    assert cm.downlink_bytes_per_round(mb, "unicast", 20) == 20 * mb
+    with pytest.raises(ValueError):
+        cm.downlink_bytes_per_round(mb, "nope", 20)
+
+
+def test_ici_counterpart_ordering():
+    mb = 10_000_000
+    fa = cm.ici_collective_bytes(mb, "broadcast", 16)
+    cl = cm.ici_collective_bytes(mb, "groupcast", 16, 4)
+    uc = cm.ici_collective_bytes(mb, "unicast", 16)
+    assert fa < cl < uc
+
+
+def test_rounds_to_time_cumulative():
+    p = cm.SystemParams(m=8)
+    ts = cm.rounds_to_time(p, "broadcast", 5)
+    assert len(ts) == 5
+    diffs = [b - a for a, b in zip(ts, ts[1:])]
+    assert all(abs(d - diffs[0]) < 1e-9 for d in diffs)

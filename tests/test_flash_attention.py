@@ -1,0 +1,80 @@
+"""Flash-attention Pallas kernel vs jnp reference: shape/dtype/mask sweep
+(interpret mode; TPU is the execution target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+
+
+def ref_attn(q, k, v, causal=True, window=None, softcap=None):
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    kx = jnp.repeat(k, g, axis=1)
+    vx = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * dh ** -0.5
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= cols <= rows
+    if window:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vx.astype(jnp.float32)).astype(q.dtype)
+
+
+CASES = [
+    (4, 2, 256, 64, True, None, None),   # GQA causal
+    (4, 4, 200, 64, True, None, 30.0),   # MHA + gemma softcap, ragged S
+    (8, 2, 384, 128, True, 128, None),   # sliding window
+    (2, 2, 100, 80, False, None, None),  # bidirectional, odd dims
+]
+
+
+@pytest.mark.parametrize("hq,hkv,sq,dh,causal,window,cap", CASES)
+def test_flash_matches_reference(hq, hkv, sq, dh, causal, window, cap):
+    rng = np.random.default_rng(hq * 1000 + sq)
+    q = jnp.asarray(rng.normal(size=(2, hq, sq, dh)).astype("float32"))
+    k = jnp.asarray(rng.normal(size=(2, hkv, sq, dh)).astype("float32"))
+    v = jnp.asarray(rng.normal(size=(2, hkv, sq, dh)).astype("float32"))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=cap, interpret=True)
+    want = ref_attn(q, k, v, causal, window, cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 64)).astype("float32")).astype(dtype)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)).astype("float32")).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)).astype("float32")).astype(dtype)
+    out = flash_attention(q, k, v, interpret=True)
+    want = ref_attn(q.astype(jnp.float32), k.astype(jnp.float32),
+                    v.astype(jnp.float32))
+    tol = 1e-3 if dtype == jnp.float32 else 3e-2
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_flash_block_sweep():
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(1, 2, 300, 64)).astype("float32"))
+    k = jnp.asarray(rng.normal(size=(1, 1, 300, 64)).astype("float32"))
+    v = jnp.asarray(rng.normal(size=(1, 1, 300, 64)).astype("float32"))
+    want = ref_attn(q, k, v)
+    for bq, bk in [(128, 128), (128, 256), (256, 128)]:
+        out = flash_attention(q, k, v, block_q=bq, block_k=bk,
+                              interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-4)

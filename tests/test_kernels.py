@@ -1,0 +1,111 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("ci")
+
+
+SHAPES_MIX = [(1, 1, 128), (4, 8, 300), (16, 16, 1024), (5, 7, 97),
+              (32, 32, 2048), (3, 20, 513)]
+
+
+@pytest.mark.parametrize("k,m,d", SHAPES_MIX)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mix_aggregate_matches_oracle(k, m, d, dtype):
+    rng = np.random.default_rng(k * 100 + m)
+    w = jnp.asarray(rng.normal(size=(k, m)).astype(np.float32))
+    t = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32)).astype(dtype)
+    got = ops.mix_aggregate(w, t, impl="interpret")
+    want = ref.mix_aggregate(w, t)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+    assert got.dtype == t.dtype
+
+
+@pytest.mark.parametrize("block_d", [128, 256, 2048])
+def test_mix_aggregate_block_sweep(block_d):
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(6, 6)).astype(np.float32))
+    t = jnp.asarray(rng.normal(size=(6, 777)).astype(np.float32))
+    got = ops.mix_aggregate(w, t, impl="interpret", block_d=block_d)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.mix_aggregate(w, t)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,d", [(2, 64), (8, 500), (16, 4096), (9, 129)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_delta_matches_oracle(m, d, dtype):
+    rng = np.random.default_rng(m)
+    g = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32)).astype(dtype)
+    got = ops.pairwise_delta(g, impl="interpret")
+    want = ref.pairwise_delta(g)
+    tol = 1e-3 * d if dtype == jnp.bfloat16 else 1e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=tol)
+
+
+@pytest.mark.parametrize("m,k,f", [(4, 2, 4), (20, 4, 20), (100, 7, 100),
+                                   (9, 3, 17)])
+def test_kmeans_assign_matches_oracle(m, k, f):
+    rng = np.random.default_rng(m + k)
+    p = jnp.asarray(rng.normal(size=(m, f)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(k, f)).astype(np.float32))
+    l1, d1 = ops.kmeans_assign(p, c, impl="interpret")
+    l2, d2 = ref.kmeans_assign(p, c)
+    assert np.array_equal(np.asarray(l1), np.asarray(l2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.given(
+    m=st.integers(2, 12), d=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_delta_properties(m, d, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    delta = np.asarray(ops.pairwise_delta(g, impl="interpret"))
+    assert delta.shape == (m, m)
+    # symmetric, nonnegative, zero diagonal
+    np.testing.assert_allclose(delta, delta.T, rtol=1e-4, atol=1e-4)
+    assert (delta >= 0).all()
+    np.testing.assert_allclose(np.diag(delta), 0.0, atol=1e-3 * d)
+
+
+@hypothesis.given(
+    k=st.integers(1, 8), m=st.integers(1, 8), seed=st.integers(0, 2**31 - 1)
+)
+def test_mix_aggregate_linearity(k, m, seed):
+    """Mixing is linear: mix(W, a+b) == mix(W, a) + mix(W, b)."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, m)).astype(np.float32))
+    a = jnp.asarray(rng.normal(size=(m, 130)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(m, 130)).astype(np.float32))
+    lhs = ops.mix_aggregate(w, a + b, impl="interpret")
+    rhs = (ops.mix_aggregate(w, a, impl="interpret")
+           + ops.mix_aggregate(w, b, impl="interpret"))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mix_aggregate_row_stochastic_preserves_constant():
+    """A row-stochastic W maps constant models to the same constant."""
+    m = 8
+    w = jnp.ones((m, m)) / m
+    t = jnp.full((m, 257), 3.25, jnp.float32)
+    out = ops.mix_aggregate(w, t, impl="interpret")
+    np.testing.assert_allclose(np.asarray(out), 3.25, rtol=1e-6)

@@ -1,0 +1,90 @@
+"""Property + unit tests for the collaboration-coefficient machinery
+(Eq. 9/10) — the paper's claimed limit behaviors are encoded here."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import similarity
+
+hypothesis.settings.register_profile("ci", deadline=None, max_examples=25)
+hypothesis.settings.load_profile("ci")
+
+
+def _rand_inputs(seed, m, d=32, k=4):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(m, k, d)).astype(np.float32))
+    n = jnp.asarray(rng.integers(10, 1000, size=(m,)).astype(np.float32))
+    return g, n
+
+
+@hypothesis.given(m=st.integers(2, 10), seed=st.integers(0, 2**31 - 1))
+def test_weights_row_stochastic(m, seed):
+    g, n = _rand_inputs(seed, m)
+    out = similarity.collaboration_round(g, n)
+    w = np.asarray(out["W"])
+    assert (w >= 0).all()
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, rtol=1e-5)
+
+
+def test_homogeneous_clients_fall_back_to_fedavg():
+    """Identical gradient distributions + equal n ⇒ near-uniform W."""
+    rng = np.random.default_rng(0)
+    m, k, d = 6, 8, 64
+    base = rng.normal(size=(1, 1, d)) * 0.01
+    g = jnp.asarray((base + rng.normal(size=(m, k, d))).astype(np.float32))
+    n = jnp.full((m,), 100.0)
+    out = similarity.collaboration_round(g, n)
+    w = np.asarray(out["W"])
+    # every entry close to 1/m (Δ between full grads ≈ within-client noise)
+    assert np.abs(w - 1.0 / m).max() < 0.15
+
+
+def test_zero_variance_degenerates_to_local():
+    """σ→0 (infinite data): client trusts only itself (paper §IV-A)."""
+    m, d = 4, 16
+    rng = np.random.default_rng(1)
+    full = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    delta = similarity.pairwise_delta(full, impl="ref")
+    w = similarity.mixing_weights(delta, jnp.zeros((m,)), jnp.full((m,), 10.0))
+    np.testing.assert_allclose(np.asarray(w), np.eye(m), atol=1e-6)
+
+
+def test_cluster_structure_detected():
+    """Two gradient clusters ⇒ block-diagonal-ish W."""
+    rng = np.random.default_rng(2)
+    m, k, d = 8, 6, 64
+    dir_a = rng.normal(size=d)
+    dir_b = -dir_a
+    g = np.zeros((m, k, d), np.float32)
+    for i in range(m):
+        center = dir_a if i < m // 2 else dir_b
+        g[i] = center + 0.05 * rng.normal(size=(k, d))
+    out = similarity.collaboration_round(jnp.asarray(g),
+                                         jnp.full((m,), 100.0))
+    w = np.asarray(out["W"])
+    same = w[:m // 2, :m // 2].sum() + w[m // 2:, m // 2:].sum()
+    cross = w[:m // 2, m // 2:].sum() + w[m // 2:, :m // 2].sum()
+    assert same > 10 * cross
+
+
+def test_dataset_size_bias():
+    """With identical distributions, larger-n clients get more weight."""
+    rng = np.random.default_rng(3)
+    m, k, d = 4, 6, 32
+    g = jnp.asarray(rng.normal(size=(m, k, d)).astype(np.float32) * 0.01
+                    + rng.normal(size=(1, 1, d)).astype(np.float32))
+    n = jnp.asarray([10.0, 10.0, 10.0, 1000.0])
+    out = similarity.collaboration_round(g, n)
+    w = np.asarray(out["W"])
+    assert (w[:, 3] > w[:, 0]).all()
+
+
+def test_sigma_sq_nonnegative_and_zero_for_identical():
+    d, k = 16, 4
+    g_same = jnp.ones((k, d))
+    assert float(similarity.sigma_sq(g_same, jnp.ones((d,)))) == 0.0
+    rng = np.random.default_rng(4)
+    g = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    assert float(similarity.sigma_sq(g, jnp.mean(g, 0))) >= 0.0

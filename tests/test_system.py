@@ -1,0 +1,104 @@
+"""End-to-end behaviour tests for the paper's system (small scale, CPU).
+
+These validate the paper's ordinal claims on synthetic federated tasks:
+under concept shift the proposed user-centric aggregation beats FedAvg,
+tracks the oracle, and the collaboration matrix recovers the ground-truth
+group structure.
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import FedConfig, REGISTRY, clustering, ucfl
+from repro.data import synthetic
+from repro.federated import simulation
+from repro.models import lenet
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    key = jax.random.PRNGKey(42)
+    dkey, mkey = jax.random.split(key)
+    data = synthetic.concept_shift(dkey, m=8, n=160, n_test=40,
+                                   num_classes=6, groups=2, hw=(16, 16),
+                                   channels=1, noise=1.0)
+    params0 = lenet.init(mkey, input_hw=(16, 16), channels=1, num_classes=6)
+    cfg = FedConfig(lr=0.1, momentum=0.9, epochs=1, batch_size=40)
+    return data, params0, cfg
+
+
+def _run(strategy, rounds=8):
+    data, params0, cfg = _setup()
+    return simulation.run(strategy, lenet.apply, data,
+                          jax.random.PRNGKey(7), rounds=rounds,
+                          eval_every=rounds)
+
+
+def test_ucfl_beats_fedavg_under_concept_shift():
+    data, params0, cfg = _setup()
+    h_ucfl = _run(ucfl.make_ucfl(lenet.apply, params0, cfg,
+                                 var_batch_size=40))
+    h_fa = _run(REGISTRY["fedavg"](lenet.apply, params0, cfg))
+    assert h_ucfl.final_avg > h_fa.final_avg + 0.2
+
+
+def test_ucfl_matches_oracle():
+    data, params0, cfg = _setup()
+    h_ucfl = _run(ucfl.make_ucfl(lenet.apply, params0, cfg,
+                                 var_batch_size=40))
+    h_or = _run(REGISTRY["oracle"](lenet.apply, params0, cfg))
+    assert h_ucfl.final_avg >= h_or.final_avg - 0.05
+
+
+def test_clustered_variant_matches_full_personalization():
+    data, params0, cfg = _setup()
+    h_k2 = _run(ucfl.make_ucfl(lenet.apply, params0, cfg, num_streams=2,
+                               var_batch_size=40))
+    h_full = _run(ucfl.make_ucfl(lenet.apply, params0, cfg,
+                                 var_batch_size=40))
+    assert h_k2.final_avg >= h_full.final_avg - 0.05
+
+
+def test_collaboration_matrix_recovers_groups():
+    data, params0, cfg = _setup()
+    collab = ucfl.compute_collaboration(lenet.apply, params0, data,
+                                        var_batch_size=40)
+    w = np.asarray(collab["W"])
+    groups = np.asarray(data.group)
+    same = (groups[:, None] == groups[None, :])
+    assert w[same].sum() > 5 * w[~same].sum()
+
+
+def test_silhouette_detects_two_groups():
+    data, params0, cfg = _setup()
+    collab = ucfl.compute_collaboration(lenet.apply, params0, data,
+                                        var_batch_size=40)
+    scores = {}
+    for k in range(2, 6):
+        res = clustering.kmeans(jax.random.PRNGKey(k), collab["W"], k)
+        scores[k] = float(clustering.silhouette_score(collab["W"],
+                                                      res.labels))
+    assert max(scores, key=scores.get) == 2
+
+
+def test_worst_user_improves_with_personalization():
+    data, params0, cfg = _setup()
+    h_ucfl = _run(ucfl.make_ucfl(lenet.apply, params0, cfg,
+                                 var_batch_size=40))
+    h_fa = _run(REGISTRY["fedavg"](lenet.apply, params0, cfg))
+    assert h_ucfl.final_worst > h_fa.final_worst
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_every_strategy_runs_and_is_finite(name):
+    data, params0, cfg = _setup()
+    make = REGISTRY[name]
+    if name in ("scaffold", "pfedme"):
+        strat = make(lenet.apply, params0)
+    else:
+        strat = make(lenet.apply, params0, cfg)
+    h = simulation.run(strat, lenet.apply, data, jax.random.PRNGKey(1),
+                       rounds=2, eval_every=2)
+    assert 0.0 <= h.final_avg <= 1.0
