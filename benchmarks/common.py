@@ -59,8 +59,9 @@ def make_params0(key, s: BenchScale, num_classes=None):
                       num_classes=num_classes or s.num_classes)
 
 
-def make_strategy(name: str, params0, s: BenchScale, **kw):
-    cfg = FedConfig(batch_size=s.batch_size)
+def make_strategy(name: str, params0, s: BenchScale, *, chunk_size=None,
+                  **kw):
+    cfg = FedConfig(batch_size=s.batch_size, chunk_size=chunk_size)
     if name == "ucfl":
         return ucfl.make_ucfl(lenet.apply, params0, cfg,
                               var_batch_size=s.var_batch, **kw)
@@ -83,8 +84,9 @@ def num_classes_for(scenario: str, s: BenchScale) -> int:
 
 
 def run_trials(scenario: str, strat_name: str, s: BenchScale, *, seed=0,
-               **kw):
-    """Mean/std of best avg-acc and best worst-acc over trials."""
+               participation=None, **kw):
+    """Mean/std over trials of the (avg, worst) pair at the argmax-avg
+    round (one model per trial, matching Tables 1/2)."""
     import numpy as np
 
     finals, worsts, hists = [], [], []
@@ -95,9 +97,11 @@ def run_trials(scenario: str, strat_name: str, s: BenchScale, *, seed=0,
         params0 = make_params0(mkey, s, num_classes_for(scenario, s))
         strat = make_strategy(strat_name, params0, s, **kw)
         h = simulation.run(strat, lenet.apply, data, skey, rounds=s.rounds,
-                           eval_every=max(s.rounds // 4, 1))
-        finals.append(h.best_avg)
-        worsts.append(max(h.worst_acc))
+                           eval_every=max(s.rounds // 4, 1),
+                           participation=participation)
+        avg, worst = h.paired_best
+        finals.append(avg)
+        worsts.append(worst)
         hists.append(h)
     return {
         "avg": float(np.mean(finals)), "avg_std": float(np.std(finals)),

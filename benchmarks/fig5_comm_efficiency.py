@@ -3,6 +3,10 @@
 Three systems: wireless slow-UL (rho=4, stragglers), wireless fast-UL
 (rho=2, reliable), wired (rho=1, reliable). Streams: FedAvg=1 broadcast,
 UCFL=m unicast, UCFL-k4=4 groupcast, FedFomo=client mixing (m models DL).
+
+Also emits the partial-participation comm sweep: round time and downlink
+bytes for each algorithm at several cohort fractions (the O(cohort) round
+cost the participation engine buys).
 """
 from __future__ import annotations
 
@@ -22,6 +26,30 @@ ALGOS = {
     "ucfl_k4": ("groupcast", 4),
     "fedfomo": ("client_mixing", None),
 }
+FRACTIONS = (1.0, 0.5, 0.25, 0.1)
+
+
+def sweep_participation(scale, *, model_bytes: int | None = None) -> list[str]:
+    """Round-time / DL-bytes rows for ≥3 participation fractions."""
+    if model_bytes is None:
+        import jax
+
+        from repro.core.pytree import tree_count_params
+        params0 = common.make_params0(jax.random.PRNGKey(0), scale)
+        model_bytes = 4 * tree_count_params(params0)
+    rows = []
+    p = cm.SystemParams(m=scale.m, rho=4.0, inv_mu=1.0)
+    for frac in FRACTIONS:
+        c = max(1, round(frac * scale.m))
+        for algo, (scheme, k) in ALGOS.items():
+            rt = cm.round_time(p, scheme, k, cohort_size=c)
+            dl = cm.downlink_bytes_per_round(model_bytes, scheme, scale.m, k,
+                                             cohort_size=c)
+            rows.append(common.csv_row(
+                f"fig5/participation/{algo}_f{frac}", 0.0,
+                f"cohort={c};t_round={rt:.2f}Tdl;dl_bytes={dl}"))
+            print(rows[-1], flush=True)
+    return rows
 
 
 def run(scale) -> list[str]:
@@ -48,4 +76,5 @@ def run(scale) -> list[str]:
                 f"fig5/{sysname}/{algo}", 0.0,
                 f"t90={t_hit:.1f}Tdl;final={h.avg_acc[-1]:.4f}"))
             print(rows[-1], flush=True)
+    rows.extend(sweep_participation(scale))
     return rows

@@ -22,8 +22,8 @@ def main() -> None:
 
     from benchmarks import (common, fig4_silhouette, fig5_comm_efficiency,
                             fig6_parallel_ucfl, fig7_minibatch, kernel_bench,
-                            roofline_report, table1_accuracy,
-                            table2_worst_user)
+                            participation_sweep, roofline_report,
+                            table1_accuracy, table2_worst_user)
 
     scale = common.FULL if args.full else common.FAST
     suites = {
@@ -35,6 +35,7 @@ def main() -> None:
         "fig5": fig5_comm_efficiency,
         "fig6": fig6_parallel_ucfl,
         "fig7": fig7_minibatch,
+        "participation": participation_sweep,
     }
     only = None if args.only == "all" else set(args.only.split(","))
     print("name,us_per_call,derived")

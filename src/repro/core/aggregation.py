@@ -10,6 +10,20 @@ m) and return a stacked pytree of the same structure:
                         every client in cluster C_n receives the centroid
                         mix (group-cast, m_t streams).
 
+Partial participation (cohort) variants operate on a *cohort-stacked*
+pytree (leading axis = cohort size c ≤ m) plus the sorted cohort index
+array. The (m, m) mixing matrix W is sliced to the cohort's rows/columns
+and **row-renormalized** so each participating client still applies a
+convex combination over the uploads that actually arrived; absent clients
+keep their last personalized model (the caller scatters the cohort result
+back into the full stacked state):
+
+  * ``fedavg_cohort``       — Eq. 1 restricted to the cohort, broadcast
+                              back to all m (global-model semantics).
+  * ``user_centric_cohort`` — Eq. 8 with W[cohort, cohort] renormalized.
+  * ``clustered_cohort``    — §IV-B with centroid rules rebuilt from the
+                              cohort members of each cluster.
+
 The heavy lifting per leaf is a (rules, m) × (m, d) matmul executed by the
 ``mix_aggregate`` kernel (Pallas on TPU, jnp oracle on CPU).
 """
@@ -63,6 +77,79 @@ def clustered(stacked, w, labels, num_clusters, *, impl=None):
     centroid_w = (onehot.T @ w) / counts[:, None]  # (mt, m) — centroid rules
     mixed = _mix_tree(centroid_w, stacked, impl=impl)  # (mt, ...)
     return jax.tree.map(lambda x: jnp.take(x, labels, axis=0), mixed)
+
+
+def renormalize_rows(w, eps: float = 1e-12):
+    """Rescale rows to sum to 1; all-zero rows stay zero (0/eps)."""
+    return w / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), eps)
+
+
+def cohort_mixing_matrix(w, cohort):
+    """Slice W to the cohort's rows/columns and renormalize rows.
+
+    The result is (c, c) row-stochastic (up to float error): participant i
+    redistributes the mass of the absent columns proportionally across the
+    uploads it did receive. A degenerate row — a participant whose W mass
+    lies entirely on absent clients (possible when Eq. 9 underflows the
+    off-diagonals) — falls back to the identity row, i.e. that client
+    keeps its own locally-updated model instead of a zeroed mix.
+    """
+    wc = w[cohort][:, cohort]
+    s = jnp.sum(wc, axis=1, keepdims=True)
+    eye = jnp.eye(wc.shape[0], dtype=wc.dtype)
+    return jnp.where(s > 1e-12, wc / jnp.maximum(s, 1e-12), eye)
+
+
+def cohort_column_mixing(w, cohort):
+    """Column-slice W to the cohort and renormalize every row.
+
+    Returns ``(wc, alive)``: wc is (m, c) with rows rescaled to sum to 1,
+    and alive is an (m,) bool marking rows that had any mass on the cohort
+    — degenerate rows (no mass) are the caller's cue to keep the previous
+    model rather than apply the (meaningless) zero mix. Shares the same
+    threshold/fallback semantics as :func:`cohort_mixing_matrix`.
+    """
+    cols = w[:, cohort]
+    s = jnp.sum(cols, axis=1, keepdims=True)
+    return cols / jnp.maximum(s, 1e-12), s[:, 0] > 1e-12
+
+
+def fedavg_cohort(stacked_cohort, n_cohort, m, *, impl=None):
+    """Eq. 1 over the cohort's uploads; new global broadcast to all m."""
+    w = (n_cohort / jnp.sum(n_cohort)).astype(jnp.float32)[None, :]  # (1, c)
+    mixed = _mix_tree(w, stacked_cohort, impl=impl)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (m,) + x.shape[1:]),
+                        mixed)
+
+
+def user_centric_cohort(stacked_cohort, w, cohort, *, impl=None):
+    """Eq. 8 restricted to the cohort; returns the cohort-stacked mix."""
+    return _mix_tree(cohort_mixing_matrix(w, cohort), stacked_cohort,
+                     impl=impl)
+
+
+def clustered_cohort(stacked_cohort, w, labels, num_clusters, cohort, *,
+                     impl=None):
+    """§IV-B with centroid rules rebuilt from the cohort.
+
+    Each centroid rule sums the W rows of its *participating* members and
+    is renormalized over the cohort columns (the per-cluster member-count
+    divide of :func:`clustered` would cancel against the renormalization,
+    so it is omitted); clusters with no sampled member produce a zero rule
+    that nobody receives. A participant whose centroid rule has no mass on
+    the cohort (Eq. 9 underflow onto absent clients) keeps its own
+    locally-updated model, mirroring ``cohort_mixing_matrix``'s fallback.
+    """
+    lc = jnp.take(labels, cohort)
+    onehot = jax.nn.one_hot(lc, num_clusters, dtype=jnp.float32)  # (c, mt)
+    raw = onehot.T @ w[cohort][:, cohort]  # (mt, c)
+    mixed = _mix_tree(renormalize_rows(raw), stacked_cohort, impl=impl)
+    alive = (jnp.sum(raw, axis=1) > 1e-12)[lc]  # (c,)
+    return jax.tree.map(
+        lambda x, own: jnp.where(
+            alive.reshape((-1,) + (1,) * (own.ndim - 1)),
+            jnp.take(x, lc, axis=0), own),
+        mixed, stacked_cohort)
 
 
 def centroid_rules(w, labels, num_clusters):

@@ -16,7 +16,8 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core.baselines.common import broadcast_params, group_average
+from repro.core.baselines.common import (broadcast_params, gather_rows,
+                                         group_average, scatter_rows)
 from repro.core.pytree import stacked_ravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
@@ -44,7 +45,7 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
              min_cluster: int = 4, kernel_impl=None):
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
     )
 
     def init(key, data):
@@ -62,31 +63,65 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         new_params = group_average(updated, assignment, n, impl=kernel_impl)
         return new_params, stacked_ravel(delta)
 
-    def round(state, data, key):
+    @jax.jit
+    def _train_agg_cohort(params, cohort, assignment_c, n, x, y, key):
+        # within-cluster FedAvg over the cohort members of each cluster;
+        # absent clients keep their last model.
+        pc = gather_rows(params, cohort)
+        updated, _ = local(pc, x[cohort], y[cohort], key)
+        delta = jax.tree.map(lambda a, b: a - b, updated, pc)
+        mixed = group_average(updated, assignment_c, n[cohort],
+                              impl=kernel_impl)
+        return scatter_rows(params, cohort, mixed), stacked_ravel(delta)
+
+    def _maybe_split(assignment, members_pool, dmat_rows):
+        """Recursive bipartition check over the clients in members_pool.
+
+        dmat_rows maps *global* client id -> update-delta row (only ids in
+        members_pool are present).
+        """
+        assignment = assignment.copy()
+        next_id = assignment.max() + 1
+        for c in np.unique(assignment[members_pool]):
+            members = members_pool[assignment[members_pool] == c]
+            if len(members) < min_cluster:
+                continue
+            d = np.stack([dmat_rows[i] for i in members])
+            norms = np.linalg.norm(d, axis=1)
+            mean_norm = np.linalg.norm(d.mean(axis=0))
+            if mean_norm < eps1_rel * norms.mean():
+                nd = d / np.maximum(norms[:, None], 1e-12)
+                side = _spectral_bipartition(nd @ nd.T)
+                if side.any() and (~side).any():
+                    assignment[members[side]] = next_id
+                    next_id += 1
+        return assignment
+
+    def round(state, data, key, cohort=None):
         assignment = state["assignment"]
-        new_params, dmat = _train_agg(
-            state["params"], jax.numpy.asarray(assignment), data.n,
-            data.x, data.y, key,
-        )
-        dmat = np.asarray(dmat)
+        if cohort is None:
+            new_params, dmat = _train_agg(
+                state["params"], jax.numpy.asarray(assignment), data.n,
+                data.x, data.y, key,
+            )
+            pool = np.arange(len(assignment))
+            dmat = np.asarray(dmat)
+            rows = {int(i): dmat[i] for i in pool}
+        else:
+            cohort = np.asarray(cohort)
+            new_params, dmat = _train_agg_cohort(
+                state["params"], jax.numpy.asarray(cohort),
+                jax.numpy.asarray(assignment[cohort]), data.n,
+                data.x, data.y, key,
+            )
+            pool = cohort
+            dmat = np.asarray(dmat)
+            rows = {int(g): dmat[j] for j, g in enumerate(cohort)}
         rnd = state["round"] + 1
         if rnd > warmup_rounds:
-            assignment = assignment.copy()
-            next_id = assignment.max() + 1
-            for c in np.unique(assignment):
-                members = np.where(assignment == c)[0]
-                if len(members) < min_cluster:
-                    continue
-                d = dmat[members]
-                norms = np.linalg.norm(d, axis=1)
-                mean_norm = np.linalg.norm(d.mean(axis=0))
-                if mean_norm < eps1_rel * norms.mean():
-                    nd = d / np.maximum(norms[:, None], 1e-12)
-                    side = _spectral_bipartition(nd @ nd.T)
-                    if side.any() and (~side).any():
-                        assignment[members[side]] = next_id
-                        next_id += 1
-        streams = len(np.unique(assignment))
+            assignment = _maybe_split(assignment, pool, rows)
+        streams = len(np.unique(assignment if cohort is None
+                                else assignment[cohort]))
         return ({"params": new_params, "assignment": assignment,
                  "round": rnd}, {"streams": streams})
 

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation
+from repro.core.pytree import gather_rows, scatter_rows  # noqa: F401  (re-export)
 
 
 def broadcast_params(params0, m):

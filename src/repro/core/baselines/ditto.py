@@ -7,7 +7,8 @@ from __future__ import annotations
 import jax
 
 from repro.core import aggregation
-from repro.core.baselines.common import broadcast_params
+from repro.core.baselines.common import (broadcast_params, gather_rows,
+                                         scatter_rows)
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 
@@ -18,7 +19,7 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     # global-model update: plain FedAvg local training
     local_global = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
     )
 
     def ditto_hook(grads, params, center):
@@ -29,6 +30,7 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     local_personal = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, grad_hook=ditto_hook,
+        chunk_size=cfg.chunk_size,
     )
 
     def init(key, data):
@@ -47,9 +49,27 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         new_personal, _ = local_personal(personal, x, y, k2, params)
         return new_global, new_personal
 
-    def round(state, data, key):
-        g, p = _round(state["params"], state["personal"], data.n, data.x,
-                      data.y, key)
+    @jax.jit
+    def _round_cohort(params, personal, cohort, n, x, y, key):
+        k1, k2 = jax.random.split(key)
+        pc = gather_rows(params, cohort)
+        xc, yc = x[cohort], y[cohort]
+        updated, _ = local_global(pc, xc, yc, k1)
+        new_global = aggregation.fedavg_cohort(updated, n[cohort], x.shape[0],
+                                               impl=kernel_impl)
+        # only participants advance their personal solver
+        new_pc, _ = local_personal(gather_rows(personal, cohort), xc, yc, k2,
+                                   pc)
+        return new_global, scatter_rows(personal, cohort, new_pc)
+
+    def round(state, data, key, cohort=None):
+        if cohort is None:
+            g, p = _round(state["params"], state["personal"], data.n, data.x,
+                          data.y, key)
+        else:
+            g, p = _round_cohort(state["params"], state["personal"],
+                                 jax.numpy.asarray(cohort), data.n, data.x,
+                                 data.y, key)
         return {"params": g, "personal": p}, {"streams": 1}
 
     return Strategy(f"ditto_lam{lam}", init, round, lambda s: s["personal"],

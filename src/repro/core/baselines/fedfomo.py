@@ -16,7 +16,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.baselines.common import broadcast_params
+from repro.core.baselines.common import (broadcast_params, gather_rows,
+                                         scatter_rows)
 from repro.core.pytree import stacked_ravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
@@ -29,7 +30,7 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                  val_frac: float = 0.2, kernel_impl=None):
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
     )
     loss = make_loss(apply_fn)
 
@@ -74,9 +75,23 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
         return unflatten(updated, new_flat)
 
-    def round(state, data, key):
-        return ({"params": _round(state["params"], data.x, data.y, key)},
-                {"streams": data.num_clients})
+    @jax.jit
+    def _round_cohort(params, cohort, x, y, key):
+        # client-side mixing restricted to the cohort: each participant
+        # downloads only the cohort's models (c, not m, DL streams per
+        # client); absent clients keep their last model.
+        mixed = _round(gather_rows(params, cohort), x[cohort], y[cohort], key)
+        return scatter_rows(params, cohort, mixed)
+
+    def round(state, data, key, cohort=None):
+        if cohort is None:
+            new = _round(state["params"], data.x, data.y, key)
+            streams = data.num_clients
+        else:
+            cohort = jax.numpy.asarray(cohort)
+            new = _round_cohort(state["params"], cohort, data.x, data.y, key)
+            streams = int(cohort.shape[0])
+        return {"params": new}, {"streams": streams}
 
     return Strategy("fedfomo", init, round, lambda s: s["params"],
                     comm_scheme="client_mixing")

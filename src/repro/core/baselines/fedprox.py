@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 
 from repro.core import aggregation
-from repro.core.baselines.common import broadcast_params
+from repro.core.baselines.common import broadcast_params, gather_rows
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 
@@ -20,6 +20,7 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, grad_hook=prox_hook,
+        chunk_size=cfg.chunk_size,
     )
 
     def init(key, data):
@@ -30,8 +31,19 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         updated, _ = local(params, x, y, key, params)  # center = round start
         return aggregation.fedavg(updated, n, impl=kernel_impl)
 
-    def round(state, data, key):
-        new = _round(state["params"], data.n, data.x, data.y, key)
+    @jax.jit
+    def _round_cohort(params, cohort, n, x, y, key):
+        pc = gather_rows(params, cohort)
+        updated, _ = local(pc, x[cohort], y[cohort], key, pc)
+        return aggregation.fedavg_cohort(updated, n[cohort], x.shape[0],
+                                         impl=kernel_impl)
+
+    def round(state, data, key, cohort=None):
+        if cohort is None:
+            new = _round(state["params"], data.n, data.x, data.y, key)
+        else:
+            new = _round_cohort(state["params"], jax.numpy.asarray(cohort),
+                                data.n, data.x, data.y, key)
         return {"params": new}, {"streams": 1}
 
     return Strategy(f"fedprox_mu{mu}", init, round, lambda s: s["params"],

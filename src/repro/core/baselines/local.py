@@ -3,7 +3,8 @@ from __future__ import annotations
 
 import jax
 
-from repro.core.baselines.common import broadcast_params
+from repro.core.baselines.common import (broadcast_params, gather_rows,
+                                         scatter_rows)
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 
@@ -12,7 +13,7 @@ from repro.federated import client as fedclient
 def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
     )
 
     def init(key, data):
@@ -23,9 +24,19 @@ def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
         updated, _ = local(params, x, y, key)
         return updated
 
-    def round(state, data, key):
-        return ({"params": _round(state["params"], data.x, data.y, key)},
-                {"streams": 0})
+    @jax.jit
+    def _round_cohort(params, cohort, x, y, key):
+        updated, _ = local(gather_rows(params, cohort), x[cohort], y[cohort],
+                           key)
+        return scatter_rows(params, cohort, updated)
+
+    def round(state, data, key, cohort=None):
+        if cohort is None:
+            new = _round(state["params"], data.x, data.y, key)
+        else:
+            new = _round_cohort(state["params"], jax.numpy.asarray(cohort),
+                                data.x, data.y, key)
+        return {"params": new}, {"streams": 0}
 
     return Strategy("local", init, round, lambda s: s["params"],
                     comm_scheme="broadcast", num_streams=0)

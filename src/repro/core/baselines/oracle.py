@@ -2,8 +2,10 @@
 from __future__ import annotations
 
 import jax
+import numpy as np
 
-from repro.core.baselines.common import broadcast_params, group_average
+from repro.core.baselines.common import (broadcast_params, gather_rows,
+                                         group_average, scatter_rows)
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 
@@ -13,7 +15,7 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                 kernel_impl=None):
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
     )
 
     def init(key, data):
@@ -24,9 +26,27 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         updated, _ = local(params, x, y, key)
         return group_average(updated, group, n, impl=kernel_impl)
 
-    def round(state, data, key):
-        new = _round(state["params"], data.group, data.n, data.x, data.y, key)
-        num_groups = int(jax.numpy.max(data.group)) + 1
+    @jax.jit
+    def _round_cohort(params, cohort, group, n, x, y, key):
+        # per-group FedAvg over the cohort members of each ground-truth
+        # group; absent clients keep their last model.
+        updated, _ = local(gather_rows(params, cohort), x[cohort], y[cohort],
+                           key)
+        mixed = group_average(updated, group[cohort], n[cohort],
+                              impl=kernel_impl)
+        return scatter_rows(params, cohort, mixed)
+
+    def round(state, data, key, cohort=None):
+        if cohort is None:
+            new = _round(state["params"], data.group, data.n, data.x, data.y,
+                         key)
+            num_groups = int(jax.numpy.max(data.group)) + 1
+        else:
+            cohort = jax.numpy.asarray(cohort)
+            new = _round_cohort(state["params"], cohort, data.group, data.n,
+                                data.x, data.y, key)
+            num_groups = int(
+                np.unique(np.asarray(data.group)[np.asarray(cohort)]).size)
         return {"params": new}, {"streams": num_groups}
 
     return Strategy("oracle", init, round, lambda s: s["params"],

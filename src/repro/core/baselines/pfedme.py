@@ -11,10 +11,11 @@ from __future__ import annotations
 import jax
 
 from repro.core import aggregation
-from repro.core.baselines.common import broadcast_params
+from repro.core.baselines.common import (broadcast_params, gather_rows,
+                                         scatter_rows)
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.data.loader import epoch_batches
-from repro.federated.client import make_loss
+from repro.federated.client import client_vmap, make_loss
 
 
 @register("pfedme")
@@ -54,6 +55,8 @@ def make_pfedme(apply_fn, params0,
                                    jax.random.split(key, cfg.epochs))
         return w, phi
 
+    run_clients = client_vmap(client_update, chunk_size=cfg.chunk_size)
+
     def init(key, data):
         m = data.num_clients
         return {
@@ -65,13 +68,32 @@ def make_pfedme(apply_fn, params0,
     def _round(w, n, x, y, key):
         m = x.shape[0]
         keys = jax.random.split(key, m)
-        new_w, phi = jax.vmap(client_update)(w, x, y, keys)
+        new_w, phi = run_clients(w, x, y, keys)
         avg = aggregation.fedavg(new_w, n, impl=kernel_impl)
         mixed = jax.tree.map(lambda a, b: (1 - beta) * a + beta * b, new_w, avg)
         return mixed, phi
 
-    def round(state, data, key):
-        w, phi = _round(state["params"], data.n, data.x, data.y, key)
+    @jax.jit
+    def _round_cohort(w, personal, cohort, n, x, y, key):
+        # cohort-only Moreau steps; the β-mix pulls participants toward a
+        # cohort average, absent clients keep their last w_i / φ_i.
+        c = cohort.shape[0]
+        keys = jax.random.split(key, c)
+        wc = gather_rows(w, cohort)
+        new_wc, phic = run_clients(wc, x[cohort], y[cohort], keys)
+        avg = aggregation.fedavg(new_wc, n[cohort], impl=kernel_impl)
+        mixed = jax.tree.map(lambda a, b: (1 - beta) * a + beta * b, new_wc,
+                             avg)
+        return (scatter_rows(w, cohort, mixed),
+                scatter_rows(personal, cohort, phic))
+
+    def round(state, data, key, cohort=None):
+        if cohort is None:
+            w, phi = _round(state["params"], data.n, data.x, data.y, key)
+        else:
+            w, phi = _round_cohort(state["params"], state["personal"],
+                                   jax.numpy.asarray(cohort), data.n, data.x,
+                                   data.y, key)
         return {"params": w, "personal": phi}, {"streams": 1}
 
     return Strategy("pfedme", init, round, lambda s: s["personal"],

@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation
-from repro.core.baselines.common import broadcast_params
+from repro.core.baselines.common import (broadcast_params, gather_rows,
+                                         scatter_rows)
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.core.pytree import tree_zeros_like
 from repro.federated import client as fedclient
@@ -29,6 +30,7 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, grad_hook=control_hook,
+        chunk_size=cfg.chunk_size,
     )
 
     def init(key, data):
@@ -57,9 +59,38 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
         )
         return new_params, new_c_i, new_c
 
-    def round(state, data, key):
-        p, ci, c = _round(state["params"], state["c_i"], state["c"],
-                          data.n, data.x, data.y, key)
+    @jax.jit
+    def _round_cohort(params, c_i, c, cohort, n, x, y, key):
+        # Option II with partial participation: only the cohort refreshes
+        # its c_i; the server control c re-averages ALL stored c_i (stale
+        # ones included) and the new global mixes the cohort's uploads.
+        steps = (x.shape[1] // cfg.batch_size) * cfg.epochs
+        pc = gather_rows(params, cohort)
+        cic, cc = gather_rows(c_i, cohort), gather_rows(c, cohort)
+        updated, _ = local(pc, x[cohort], y[cohort], key, (cic, cc))
+        inv = 1.0 / (steps * cfg.lr)
+        new_cic = jax.tree.map(
+            lambda ci, cg, start, end: ci - cg + inv * (start - end),
+            cic, cc, pc, updated,
+        )
+        c_i_full = scatter_rows(c_i, cohort, new_cic)
+        new_params = aggregation.fedavg_cohort(updated, n[cohort], x.shape[0],
+                                               impl=kernel_impl)
+        new_c = jax.tree.map(
+            lambda ci: jnp.broadcast_to(jnp.mean(ci, axis=0),
+                                        ci.shape) + 0.0,
+            c_i_full,
+        )
+        return new_params, c_i_full, new_c
+
+    def round(state, data, key, cohort=None):
+        if cohort is None:
+            p, ci, c = _round(state["params"], state["c_i"], state["c"],
+                              data.n, data.x, data.y, key)
+        else:
+            p, ci, c = _round_cohort(state["params"], state["c_i"],
+                                     state["c"], jnp.asarray(cohort),
+                                     data.n, data.x, data.y, key)
         return {"params": p, "c_i": ci, "c": c}, {"streams": 1}
 
     return Strategy("scaffold", init, round, lambda s: s["params"],

@@ -19,6 +19,13 @@ streams, parametrized by
                                            client*; we charge m·T_dl like
                                            the paper's Fig. 5 does.
 
+Partial participation: every cost function takes ``cohort_size`` (None =
+full participation, the paper's regime). With a cohort of c clients the
+straggler max runs over c compute times (H_c, not H_m), unicast needs c
+streams, client mixing charges c downloads, and groupcast needs at most
+min(m_t, c) distinct streams. This is what makes round cost O(cohort)
+instead of O(m) on the wireless side.
+
 TPU-adaptation note (DESIGN.md §2): on a pod these DL streams become ICI
 collective volume; this module keeps the paper's analytic wireless model so
 the Fig. 5 benchmark can be reproduced, while the measured ICI counterpart
@@ -43,53 +50,69 @@ class SystemParams:
     inv_mu: float = 1.0  # mean extra straggler delay 1/μ (0 ⇒ reliable)
 
 
-def expected_compute_time(p: SystemParams) -> float:
-    """E[max(T_1..T_m)] = T_min + H_m/μ for shifted exponentials."""
+def _active(m: int, cohort_size: int | None) -> int:
+    return m if cohort_size is None else max(1, min(cohort_size, m))
+
+
+def expected_compute_time(p: SystemParams,
+                          cohort_size: int | None = None) -> float:
+    """E[max over the active clients] = T_min + H_c/μ for shifted exps."""
     if p.inv_mu == 0.0:
         return p.t_min
-    return p.t_min + harmonic(p.m) * p.inv_mu
+    return p.t_min + harmonic(_active(p.m, cohort_size)) * p.inv_mu
 
 
-def round_time(p: SystemParams, scheme: str, num_streams: int | None = None) -> float:
-    """Wall-clock time of one communication round under §V-D."""
+def round_time(p: SystemParams, scheme: str, num_streams: int | None = None,
+               cohort_size: int | None = None) -> float:
+    """Wall-clock time of one communication round under §V-D.
+
+    ``cohort_size`` prices a partial-participation round: only the cohort
+    computes (straggler max over c), and only the cohort is served on the
+    downlink.
+    """
+    c = _active(p.m, cohort_size)
     t_ul = p.rho * p.t_dl
-    t_comp = expected_compute_time(p)
+    t_comp = expected_compute_time(p, cohort_size)
     if scheme == "broadcast":
         dl = p.t_dl
     elif scheme == "groupcast":
         assert num_streams is not None
-        dl = num_streams * p.t_dl
+        dl = min(num_streams, c) * p.t_dl
     elif scheme == "unicast":
-        dl = p.m * p.t_dl
+        dl = c * p.t_dl
     elif scheme == "client_mixing":  # FedFomo-style client-side aggregation
-        dl = p.m * p.t_dl
+        dl = c * p.t_dl
     else:
         raise ValueError(f"unknown scheme {scheme!r}")
     return dl + t_comp + t_ul
 
 
 def rounds_to_time(p: SystemParams, scheme: str, num_rounds: int,
-                   num_streams: int | None = None):
+                   num_streams: int | None = None,
+                   cohort_size: int | None = None):
     """Cumulative time axis (length num_rounds) for accuracy-vs-time plots."""
-    rt = round_time(p, scheme, num_streams)
+    rt = round_time(p, scheme, num_streams, cohort_size)
     return [rt * (t + 1) for t in range(num_rounds)]
 
 
 def downlink_bytes_per_round(model_bytes: int, scheme: str, m: int,
-                             num_streams: int | None = None) -> int:
+                             num_streams: int | None = None,
+                             cohort_size: int | None = None) -> int:
     """Raw DL payload per round — the wireless quantity the paper trades."""
+    c = _active(m, cohort_size)
     if scheme == "broadcast":
         return model_bytes
     if scheme == "groupcast":
         assert num_streams is not None
-        return num_streams * model_bytes
+        return min(num_streams, c) * model_bytes
     if scheme in ("unicast", "client_mixing"):
-        return m * model_bytes
+        return c * model_bytes
     raise ValueError(f"unknown scheme {scheme!r}")
 
 
 def ici_collective_bytes(model_bytes: int, scheme: str, m: int,
-                         num_streams: int | None = None) -> int:
+                         num_streams: int | None = None,
+                         cohort_size: int | None = None) -> int:
     """TPU counterpart: mixing-collective volume over the client axis.
 
     FedAvg  = all-reduce           ≈ 2·model_bytes (ring),
@@ -98,11 +121,12 @@ def ici_collective_bytes(model_bytes: int, scheme: str, m: int,
     These closed forms are sanity checks for the HLO-parsed numbers in
     launch/roofline.py.
     """
+    c = _active(m, cohort_size)
     if scheme == "broadcast":
         return 2 * model_bytes
     if scheme == "groupcast":
         assert num_streams is not None
-        return 2 * num_streams * model_bytes
+        return 2 * min(num_streams, c) * model_bytes
     if scheme in ("unicast", "client_mixing"):
-        return m * model_bytes
+        return c * model_bytes
     raise ValueError(f"unknown scheme {scheme!r}")

@@ -60,6 +60,16 @@ def stacked_ravel(tree, lead: int = 1):
     )
 
 
+def gather_rows(tree, idx):
+    """Select cohort rows from a client-stacked tree (leading axis m)."""
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), tree)
+
+
+def scatter_rows(full, idx, updates):
+    """Write cohort rows back; absent clients keep their previous rows."""
+    return jax.tree.map(lambda f, u: f.at[idx].set(u), full, updates)
+
+
 def tree_add(a, b):
     return jax.tree.map(jnp.add, a, b)
 

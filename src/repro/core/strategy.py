@@ -5,10 +5,21 @@ A strategy owns three callables:
   * ``init(key, data) -> state`` — build the initial server/client state
     (including any pre-training round, e.g. the paper's collaboration
     round or nothing for FedAvg);
-  * ``round(state, data, key) -> (state, metrics)`` — one communication
-    round (local training + PS aggregation); jitted internally;
+  * ``round(state, data, key, cohort=None) -> (state, metrics)`` — one
+    communication round (local training + PS aggregation); jitted
+    internally. ``cohort`` is a sorted int array of the participating
+    client indices, or ``None`` for full participation. With a cohort,
+    only those clients are gathered/trained/uploaded; the aggregation
+    mixes with the cohort-sliced row-renormalized W and absent clients
+    keep their last personalized model (the stacked state rows are only
+    written at the cohort indices). ``cohort=None`` must follow the exact
+    dense full-participation path so that fraction=1.0 stays bit-exact
+    with the pre-cohort engine.
   * ``eval_params(state) -> stacked params`` — the per-client models that
     should be evaluated (personalized where the method has them).
+
+Cohorts are drawn by :mod:`repro.federated.participation` and threaded by
+the simulation loop; a fixed cohort size keeps one jitted round shape.
 
 ``metrics`` may include per-round diagnostics (e.g. downlink stream
 count, which feeds the §V-D comm model in the Fig. 5 benchmark).
@@ -42,8 +53,15 @@ def register(name):
 
 @dataclasses.dataclass(frozen=True)
 class FedConfig:
-    """Paper §V-A hyperparameters."""
+    """Paper §V-A hyperparameters.
+
+    ``chunk_size`` bounds peak client-axis memory: local SGD runs as a
+    sequential ``lax.map`` over chunks of that many vmapped clients (see
+    :func:`repro.federated.client.make_federated_local_sgd`); ``None``
+    keeps the single monolithic vmap.
+    """
     lr: float = 0.1
     momentum: float = 0.9
     epochs: int = 1
     batch_size: int = 50
+    chunk_size: int | None = None

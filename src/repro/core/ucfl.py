@@ -16,9 +16,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import aggregation, clustering, similarity
-from repro.core.pytree import stacked_ravel
+from repro.core.pytree import gather_rows, scatter_rows, stacked_ravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.data.loader import fixed_partition
 from repro.federated import client as fedclient
@@ -52,7 +53,7 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     """
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
     )
 
     def init(key, data):
@@ -86,11 +87,39 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                           impl=kernel_impl)
         return mixed
 
-    def round(state, data, key):
-        new = _round(state["params"], state["W"], state["labels"],
-                     data.x, data.y, key, state["streams"])
+    @functools.partial(jax.jit, static_argnames=("streams",))
+    def _round_cohort(params, w, labels, cohort, x, y, key, streams):
+        # gather -> cohort local SGD -> cohort-sliced mix -> scatter back
+        pc = gather_rows(params, cohort)
+        updated, _ = local(pc, x[cohort], y[cohort], key)
+        if streams is None:
+            mixed = aggregation.user_centric_cohort(updated, w, cohort,
+                                                    impl=kernel_impl)
+        else:
+            mixed = aggregation.clustered_cohort(updated, w, labels, streams,
+                                                 cohort, impl=kernel_impl)
+        return scatter_rows(params, cohort, mixed)
+
+    def round(state, data, key, cohort=None):
+        if cohort is None:
+            new = _round(state["params"], state["W"], state["labels"],
+                         data.x, data.y, key, state["streams"])
+            active = data.num_clients
+            streams = state["streams"] or active
+        else:
+            cohort = jnp.asarray(cohort)
+            new = _round_cohort(state["params"], state["W"], state["labels"],
+                                cohort, data.x, data.y, key, state["streams"])
+            active = int(cohort.shape[0])
+            if state["streams"]:
+                # only the clusters actually represented in the cohort put
+                # a centroid model on the downlink
+                streams = int(np.unique(
+                    np.asarray(state["labels"])[np.asarray(cohort)]).size)
+            else:
+                streams = active
         state = dict(state, params=new)
-        return state, {"streams": state["streams"] or data.num_clients}
+        return state, {"streams": streams, "cohort_size": active}
 
     scheme = "unicast" if num_streams is None else "groupcast"
     return Strategy(
@@ -112,7 +141,7 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     """
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
     )
 
     def init(key, data):
@@ -146,9 +175,52 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             lambda u: jnp.einsum("ij,ij...->i...", w, u), all_updates
         )
 
-    def round(state, data, key):
-        new = _round(state["params"], state["W"], data.x, data.y, key)
-        return dict(state, params=new), {"streams": data.num_clients}
+    @jax.jit
+    def _round_cohort(params, w, cohort, x, y, key):
+        # Only cohort clients compute, but they still optimize ALL m stream
+        # models (the defining m× cost of this upper bound); every stream
+        # mixes over the cohort's uploads with renormalized weights.
+        m = jax.tree.leaves(params)[0].shape[0]
+        c = cohort.shape[0]
+        xc, yc = x[cohort], y[cohort]
+
+        def per_stream(stream_params, skey):
+            return local(
+                jax.tree.map(
+                    lambda p: jnp.broadcast_to(p, (c,) + p.shape), stream_params
+                ),
+                xc, yc, skey,
+            )[0]
+
+        keys = jax.random.split(key, m)
+        all_updates = jax.vmap(per_stream)(params, keys)  # leaves (i=m, j=c, ...)
+        wc, alive = aggregation.cohort_column_mixing(w, cohort)  # (m, c), (m,)
+        mixed = jax.tree.map(
+            lambda u: jnp.einsum("ij,ij...->i...", wc, u), all_updates
+        )
+        # a stream whose W row has no mass on the cohort keeps its last
+        # model instead of collapsing to the zero mix
+        return jax.tree.map(
+            lambda mix, old: jnp.where(
+                alive.reshape((m,) + (1,) * (mix.ndim - 1)), mix, old
+            ),
+            mixed, params,
+        )
+
+    def round(state, data, key, cohort=None):
+        if cohort is None:
+            new = _round(state["params"], state["W"], data.x, data.y, key)
+            active = data.num_clients
+        else:
+            cohort = jnp.asarray(cohort)
+            new = _round_cohort(state["params"], state["W"], cohort,
+                                data.x, data.y, key)
+            active = int(cohort.shape[0])
+        # streams stays m even under a cohort: every participant downloads
+        # ALL m stream models to optimize them (the m x cost that makes
+        # this the upper bound), so m distinct models hit the downlink.
+        return dict(state, params=new), {"streams": data.num_clients,
+                                         "cohort_size": active}
 
     return Strategy(
         name="ucfl_parallel", init=init, round=round,

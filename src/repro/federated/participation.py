@@ -1,0 +1,140 @@
+"""Cohort sampling for partial-participation rounds.
+
+The paper's aggregation rules (Eq. 8/9) assume every client uploads every
+round; real communication-constrained deployments sample a small *cohort*
+per round. This module owns that policy: a :class:`ParticipationConfig`
+describes how many clients participate and how they are drawn, and
+:func:`sample_cohort` turns it into a sorted index array the round engine
+threads through every layer (client gather -> local SGD -> cohort-sliced
+aggregation -> scatter back into the stacked state).
+
+Samplers
+--------
+``uniform``
+    Cohort drawn uniformly without replacement (the FedAvg-paper policy).
+``weighted``
+    Without-replacement sampling with inclusion probability proportional
+    to the local dataset size ``n`` (biased selection; cf. the
+    Pareto-optimal client-selection line of work).
+``round_robin``
+    Deterministic cyclic schedule: round t takes clients
+    ``[t*c, ..., (t+1)*c) mod m``. Every client is visited once every
+    ``ceil(m/c)`` rounds — useful to bound staleness of personalized
+    models.
+``availability``
+    Clients are only eligible when their availability trace says so; the
+    cohort is drawn uniformly from the eligible set (truncated when fewer
+    than ``cohort_size`` clients are up; an empty cohort — nobody online —
+    makes the engine skip the round entirely). The trace is an
+    (m, period) boolean array, cycled over rounds — e.g. diurnal device
+    availability.
+
+Full participation (``fraction=1.0``, the default) is represented by a
+``None`` cohort so the engine can keep the legacy dense path bit-exact.
+
+The cohort size is *fixed* across rounds (jit recompiles only once):
+``cohort_size`` wins if given, else ``max(1, round(fraction*m))``. The
+one exception is ``availability``, whose cohort shrinks to the eligible
+set when fewer than ``cohort_size`` clients are up: each *distinct* size
+triggers one extra jit compile of the round (inside the timed region —
+the warm-up only covers round 1's shape). Trace realism is prioritized
+over shape stability here; see ROADMAP for the padded/masked follow-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+SAMPLERS = ("uniform", "weighted", "round_robin", "availability")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParticipationConfig:
+    """Who participates each round.
+
+    Attributes:
+      fraction: target cohort fraction of m; 1.0 means full participation.
+      cohort_size: explicit cohort size; overrides ``fraction`` when set.
+      sampler: one of :data:`SAMPLERS`.
+      availability: optional (m, period) boolean array for the
+        ``availability`` sampler; column ``t % period`` gates round t.
+      seed: extra salt folded into the sampling key stream so the cohort
+        sequence is independent of the training randomness.
+    """
+
+    fraction: float = 1.0
+    cohort_size: int | None = None
+    sampler: str = "uniform"
+    availability: np.ndarray | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.sampler not in SAMPLERS:
+            raise ValueError(
+                f"unknown sampler {self.sampler!r}; expected one of {SAMPLERS}")
+        if self.cohort_size is None and not (0.0 < self.fraction <= 1.0):
+            raise ValueError(f"fraction must be in (0, 1], got {self.fraction}")
+        if self.sampler == "availability" and self.availability is None:
+            raise ValueError("availability sampler needs an availability trace")
+
+    def resolve_size(self, m: int) -> int:
+        if self.cohort_size is not None:
+            return max(1, min(int(self.cohort_size), m))
+        return max(1, min(m, int(round(self.fraction * m))))
+
+    def is_full(self, m: int) -> bool:
+        return self.sampler != "availability" and self.resolve_size(m) == m
+
+
+def _rng(cfg: ParticipationConfig, rnd: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, rnd, 0x5EED]))
+
+
+def sample_cohort(cfg: ParticipationConfig | None, rnd: int, m: int,
+                  n=None) -> np.ndarray | None:
+    """Draw round ``rnd``'s cohort; ``None`` means everyone participates.
+
+    Args:
+      cfg: participation policy (None == full participation).
+      rnd: 1-based round index (drives round_robin / availability phase).
+      m: total number of clients.
+      n: (m,) local dataset sizes, required by the ``weighted`` sampler.
+
+    Returns:
+      Sorted int32 index array of the participating clients, or None for
+      the full-participation fast path. All samplers except
+      ``availability`` return exactly ``resolve_size(m)`` indices, so jit
+      sees one static cohort shape across rounds.
+    """
+    if cfg is None or cfg.is_full(m):
+        return None
+    c = cfg.resolve_size(m)
+    rng = _rng(cfg, rnd)
+    if cfg.sampler == "uniform":
+        cohort = rng.choice(m, size=c, replace=False)
+    elif cfg.sampler == "weighted":
+        if n is None:
+            raise ValueError("weighted sampler needs per-client sizes n")
+        p = np.asarray(jax.device_get(n), np.float64)
+        p = p / p.sum()
+        cohort = rng.choice(m, size=c, replace=False, p=p)
+    elif cfg.sampler == "round_robin":
+        start = ((rnd - 1) * c) % m
+        cohort = (start + np.arange(c)) % m
+    else:  # availability
+        trace = np.asarray(cfg.availability, bool)
+        up = np.flatnonzero(trace[:, (rnd - 1) % trace.shape[1]])
+        if up.size == 0:  # nobody online: the engine skips this round
+            return np.empty(0, np.int32)
+        take = min(c, up.size)
+        cohort = rng.choice(up, size=take, replace=False)
+    return np.sort(cohort.astype(np.int32))
+
+
+def cohort_schedule(cfg: ParticipationConfig | None, rounds: int, m: int,
+                    n=None):
+    """Materialize the full cohort sequence (diagnostics / tests)."""
+    return [sample_cohort(cfg, r, m, n) for r in range(1, rounds + 1)]

@@ -1,4 +1,16 @@
-"""Federated simulation engine: rounds loop + per-round evaluation."""
+"""Federated simulation engine: rounds loop + per-round evaluation.
+
+Partial participation: ``run(..., participation=ParticipationConfig(...))``
+draws a cohort per round (see :mod:`repro.federated.participation`) and
+passes it to ``strategy.round(state, data, key, cohort)``. The cohort
+sampler uses its own numpy seed stream, so the jax round keys — and hence
+the ``fraction=1.0`` trajectory — are identical to the dense engine's.
+
+Timing: ``strategy.round`` is warmed up once (result discarded) before the
+wall-clock timer starts, so ``History.wall_s`` measures steady-state
+rounds, not XLA compilation. The warm-up key is ``fold_in``-derived and
+does not consume the round key stream.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -8,6 +20,7 @@ from typing import Any, Dict, List
 import jax
 import numpy as np
 
+from repro.federated import participation as part
 from repro.federated.client import evaluate
 
 
@@ -32,13 +45,35 @@ class History:
     def best_avg(self):
         return max(self.avg_acc)
 
+    @property
+    def paired_best(self):
+        """(avg, worst) evaluated at the argmax-average round.
+
+        Tables 1/2 pair average and worst-user accuracy of ONE model;
+        taking max() of each list independently would mix two different
+        rounds' models.
+        """
+        i = int(np.argmax(self.avg_acc))
+        return self.avg_acc[i], self.worst_acc[i]
+
 
 def run(strategy, apply_fn, data, key, *, rounds: int, eval_every: int = 1,
-        verbose: bool = False) -> History:
-    t0 = time.time()
+        verbose: bool = False, participation: part.ParticipationConfig | None
+        = None, warmup: bool = True) -> History:
+    m = data.num_clients
     key, ikey = jax.random.split(key)
     state = strategy.init(ikey, data)
     hist = History(strategy.name, [], [], [], [])
+
+    if warmup:  # compile strategy.round outside the timed region
+        wcohort = part.sample_cohort(participation, 1, m, data.n)
+        if wcohort is None or len(wcohort):
+            wstate, _ = strategy.round(
+                state, data, jax.random.fold_in(key, 0x5EED), wcohort)
+            jax.block_until_ready(wstate)
+            del wstate
+
+    t0 = time.time()
 
     def do_eval(rnd, metrics):
         accs = np.asarray(
@@ -51,12 +86,20 @@ def run(strategy, apply_fn, data, key, *, rounds: int, eval_every: int = 1,
         hist.metrics.append(metrics)
         if verbose:
             print(f"[{strategy.name}] round {rnd:4d} "
-                  f"avg={accs.mean():.4f} worst={accs.min():.4f}")
+                  f"avg={accs.mean():.4f} worst={accs.min():.4f} "
+                  f"cohort={metrics.get('cohort_size', m)}")
 
     metrics: Dict[str, Any] = {}
     for rnd in range(1, rounds + 1):
         key, rkey = jax.random.split(key)
-        state, metrics = strategy.round(state, data, rkey)
+        cohort = part.sample_cohort(participation, rnd, m, data.n)
+        if cohort is not None and len(cohort) == 0:
+            # nobody available this round: the server idles, state is kept
+            metrics = {"streams": 0, "cohort_size": 0, "skipped": True}
+        else:
+            state, metrics = strategy.round(state, data, rkey, cohort)
+            metrics = dict(
+                metrics, cohort_size=m if cohort is None else int(len(cohort)))
         if rnd % eval_every == 0 or rnd == rounds:
             do_eval(rnd, metrics)
     hist.wall_s = time.time() - t0
@@ -64,8 +107,12 @@ def run(strategy, apply_fn, data, key, *, rounds: int, eval_every: int = 1,
 
 
 def run_trials(make_strategy, apply_fn, data_fn, *, trials: int, rounds: int,
-               seed: int = 0, eval_every: int = 1):
-    """Average over independent trials (paper reports 5-trial means)."""
+               seed: int = 0, eval_every: int = 1, participation=None):
+    """Average over independent trials (paper reports 5-trial means).
+
+    The reported (avg, worst) pair comes from one model per trial — the
+    argmax-average eval round — matching how Tables 1/2 pair them.
+    """
     finals, worsts, hists = [], [], []
     for t in range(trials):
         key = jax.random.PRNGKey(seed + 1000 * t)
@@ -73,9 +120,10 @@ def run_trials(make_strategy, apply_fn, data_fn, *, trials: int, rounds: int,
         data = data_fn(dkey)
         strat = make_strategy(t)
         h = run(strat, apply_fn, data, skey, rounds=rounds,
-                eval_every=eval_every)
-        finals.append(h.best_avg)
-        worsts.append(max(h.worst_acc))
+                eval_every=eval_every, participation=participation)
+        avg, worst = h.paired_best
+        finals.append(avg)
+        worsts.append(worst)
         hists.append(h)
     return {
         "avg_mean": float(np.mean(finals)),

@@ -118,8 +118,11 @@ def _ssd_chunked(xh, b, c, dt, a_log, cfg: SSMConfig, h0=None):
                     preferred_element_type=jnp.float32)  # (B,nc,Q,Q)
     decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
     causal = jnp.tril(jnp.ones((Q, Q), bool))
-    m = jnp.where(causal[None, None, :, :, None], jnp.exp(decay), 0.0)
-    m = (m * cb[..., None] * dt_[:, :, None, :, :]).astype(cdt)
+    # Mask the *exponent*, not exp's output: acausal entries have decay > 0
+    # and can overflow to inf, which exp's VJP turns into inf·0 = NaN even
+    # though the forward value is masked away.
+    decay = jnp.where(causal[None, None, :, :, None], decay, -jnp.inf)
+    m = (jnp.exp(decay) * cb[..., None] * dt_[:, :, None, :, :]).astype(cdt)
     y_intra = jnp.einsum("bqtsh,bqshp->bqthp", m, xc_,
                          preferred_element_type=jnp.float32)
 

@@ -98,3 +98,135 @@ def test_group_mixing_matrix_row_stochastic():
     w = np.asarray(group_mixing_matrix(assignment, n))
     np.testing.assert_allclose(w.sum(1), 1.0, rtol=1e-6)
     assert w[0, 1] == 0 and w[0, 2] > 0
+
+
+# ------------------------------------------------- cohort (partial-part.)
+
+def _random_cohorts(rng, m):
+    """A spread of cohort sizes including the degenerate and full ones."""
+    for c in {1, 2, max(2, m // 2), m - 1, m}:
+        yield jnp.asarray(np.sort(rng.choice(m, size=c, replace=False))
+                          .astype(np.int32))
+
+
+def test_cohort_mixing_matrix_row_stochastic():
+    """Property sweep: sliced+renormalized rows sum to 1, stay >= 0."""
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        m = int(rng.integers(3, 12))
+        w = jnp.asarray(rng.dirichlet(np.ones(m), size=m).astype(np.float32))
+        for cohort in _random_cohorts(rng, m):
+            wc = np.asarray(aggregation.cohort_mixing_matrix(w, cohort))
+            assert wc.shape == (len(cohort), len(cohort))
+            assert (wc >= 0).all()
+            np.testing.assert_allclose(wc.sum(axis=1), 1.0, rtol=1e-5)
+
+
+def test_cohort_mixing_matrix_degenerate_row_falls_back_to_self():
+    """A participant with all its W mass on absent clients keeps itself."""
+    w = jnp.asarray([[0.0, 0.0, 1.0, 0.0],
+                     [0.0, 0.5, 0.0, 0.5],
+                     [1.0, 0.0, 0.0, 0.0],
+                     [0.0, 0.5, 0.0, 0.5]], jnp.float32)
+    cohort = jnp.asarray([0, 1, 3])  # client 0's whole row sits on absent 2
+    wc = np.asarray(aggregation.cohort_mixing_matrix(w, cohort))
+    np.testing.assert_allclose(wc[0], [1.0, 0.0, 0.0])  # identity fallback
+    np.testing.assert_allclose(wc.sum(axis=1), 1.0, rtol=1e-6)
+
+
+def test_user_centric_cohort_full_cohort_is_user_centric():
+    m = 6
+    stacked = _stacked(10, m)
+    rng = np.random.default_rng(11)
+    w = jnp.asarray(rng.dirichlet(np.ones(m), size=m).astype(np.float32))
+    cohort = jnp.arange(m)
+    full = aggregation.user_centric(stacked, w)
+    coh = aggregation.user_centric_cohort(stacked, w, cohort)
+    for key in stacked:
+        np.testing.assert_allclose(np.asarray(coh[key]),
+                                   np.asarray(full[key]), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_user_centric_cohort_matches_manual():
+    m = 7
+    stacked = _stacked(12, m)
+    rng = np.random.default_rng(13)
+    w = rng.dirichlet(np.ones(m), size=m).astype(np.float32)
+    cohort = np.asarray([0, 2, 5], np.int32)
+    sub = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[cohort]), stacked)
+    out = aggregation.user_centric_cohort(sub, jnp.asarray(w),
+                                          jnp.asarray(cohort))
+    wc = w[np.ix_(cohort, cohort)]
+    wc = wc / wc.sum(axis=1, keepdims=True)
+    for key in stacked:
+        want = np.einsum("ij,j...->i...", wc, np.asarray(stacked[key])[cohort])
+        np.testing.assert_allclose(np.asarray(out[key]), want, rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_fedavg_cohort_weighted_mean_broadcast_to_all():
+    m = 6
+    stacked = _stacked(14, m)
+    cohort = np.asarray([1, 3, 4], np.int32)
+    sub = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[cohort]), stacked)
+    n_c = jnp.asarray([2.0, 1.0, 1.0])
+    out = aggregation.fedavg_cohort(sub, n_c, m)
+    wts = np.asarray([0.5, 0.25, 0.25])
+    for key in stacked:
+        want = np.tensordot(wts, np.asarray(stacked[key])[cohort],
+                            axes=(0, 0))
+        got = np.asarray(out[key])
+        assert got.shape == stacked[key].shape  # broadcast to all m
+        for i in range(m):
+            np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-6)
+
+
+def test_clustered_cohort_full_cohort_matches_clustered():
+    m = 6
+    stacked = _stacked(15, m)
+    rng = np.random.default_rng(16)
+    w = jnp.asarray(rng.dirichlet(np.ones(m), size=m).astype(np.float32))
+    labels = jnp.asarray([0, 0, 1, 1, 0, 1])
+    full = aggregation.clustered(stacked, w, labels, 2)
+    coh = aggregation.clustered_cohort(stacked, w, labels, 2, jnp.arange(m))
+    for key in stacked:
+        np.testing.assert_allclose(np.asarray(coh[key]),
+                                   np.asarray(full[key]), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_clustered_cohort_degenerate_rule_keeps_own_update():
+    """A lone-cluster participant whose W mass is on absent clients keeps
+    its own locally-updated model (mirrors cohort_mixing_matrix)."""
+    m = 4
+    stacked = _stacked(19, m)
+    w = jnp.asarray([[0.0, 0.0, 1.0, 0.0],   # client 0: all mass on absent 2
+                     [0.0, 0.5, 0.0, 0.5],
+                     [1.0, 0.0, 0.0, 0.0],
+                     [0.0, 0.5, 0.0, 0.5]], jnp.float32)
+    labels = jnp.asarray([0, 1, 1, 1])       # client 0 alone in cluster 0
+    cohort = jnp.asarray([0, 1, 3])
+    sub = jax.tree.map(lambda x: x[cohort], stacked)
+    out = aggregation.clustered_cohort(sub, w, labels, 2, cohort)
+    for key in stacked:
+        arr = np.asarray(out[key])
+        np.testing.assert_allclose(arr[0], np.asarray(stacked[key])[0],
+                                   rtol=1e-6)  # kept own update, not zeros
+        assert np.abs(arr[1]).max() > 0
+
+
+def test_clustered_cohort_members_share_models():
+    m = 6
+    stacked = _stacked(17, m)
+    rng = np.random.default_rng(18)
+    w = jnp.asarray(rng.dirichlet(np.ones(m), size=m).astype(np.float32))
+    labels = jnp.asarray([0, 0, 0, 1, 1, 1])
+    cohort = jnp.asarray([0, 1, 3, 5])
+    sub = jax.tree.map(lambda x: x[cohort], stacked)
+    out = aggregation.clustered_cohort(sub, w, labels, 2, cohort)
+    for key in stacked:
+        arr = np.asarray(out[key])
+        np.testing.assert_allclose(arr[0], arr[1], rtol=1e-6)  # cluster 0
+        np.testing.assert_allclose(arr[2], arr[3], rtol=1e-6)  # cluster 1
+        assert np.abs(arr[0] - arr[2]).max() > 1e-4

@@ -61,15 +61,24 @@ def test_decode_step(arch):
 
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_reduces_loss(arch):
-    """One real SGD step on a fixed batch must reduce its loss."""
+    """An SGD step along the gradient must reduce the batch loss.
+
+    Backtracking over a few step sizes: a fixed lr=0.5 overshoots on the
+    sharper reduced configs (e.g. kimi's dense-first MoE) even though the
+    gradient is a perfectly good descent direction.
+    """
     cfg = configs.get(arch).reduced()
     model = registry.build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     batch = _batch(cfg)
     loss0, grads = jax.value_and_grad(model.loss)(params, batch)
-    params2 = jax.tree.map(lambda p, g: p - 0.5 * g, params, grads)
-    loss1 = model.loss(params2, batch)
-    assert float(loss1) < float(loss0)
+    losses = []
+    for lr in (0.5, 0.1, 0.02):
+        params2 = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        losses.append(float(model.loss(params2, batch)))
+        if losses[-1] < float(loss0):
+            break
+    assert min(losses) < float(loss0), (float(loss0), losses)
 
 
 @pytest.mark.parametrize("arch", ["gemma2-9b", "qwen2-7b", "phi3-medium-14b",

@@ -1,19 +1,14 @@
 """Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
 swept over shapes and dtypes, plus hypothesis property tests."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from hypothesis_compat import given, load_ci_profile, st
 from repro.kernels import ops, ref
 
-hypothesis.settings.register_profile(
-    "ci", deadline=None, max_examples=20,
-    suppress_health_check=[hypothesis.HealthCheck.too_slow],
-)
-hypothesis.settings.load_profile("ci")
+load_ci_profile(max_examples=20, suppress_too_slow=True)
 
 
 SHAPES_MIX = [(1, 1, 128), (4, 8, 300), (16, 16, 1024), (5, 7, 97),
@@ -71,7 +66,7 @@ def test_kmeans_assign_matches_oracle(m, k, f):
                                rtol=1e-4, atol=1e-4)
 
 
-@hypothesis.given(
+@given(
     m=st.integers(2, 12), d=st.integers(1, 200),
     seed=st.integers(0, 2**31 - 1),
 )
@@ -86,7 +81,7 @@ def test_pairwise_delta_properties(m, d, seed):
     np.testing.assert_allclose(np.diag(delta), 0.0, atol=1e-3 * d)
 
 
-@hypothesis.given(
+@given(
     k=st.integers(1, 8), m=st.integers(1, 8), seed=st.integers(0, 2**31 - 1)
 )
 def test_mix_aggregate_linearity(k, m, seed):

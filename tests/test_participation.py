@@ -1,0 +1,245 @@
+"""Partial-participation engine tests.
+
+Covers: (a) the fraction=1.0 regression — the explicit-cohort round path
+must reproduce the dense full-participation path for ucfl, fedavg, and
+clustered ucfl; (b) sampler contracts; (c) absent clients keeping their
+last model; (d) the chunked client axis matching the monolithic vmap; and
+(e) the m=128 / fraction=0.1 / chunk_size=16 scale target on CPU.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedConfig, REGISTRY, ucfl
+from repro.data import synthetic
+from repro.federated import client as fedclient
+from repro.federated import simulation
+from repro.federated.participation import ParticipationConfig, sample_cohort
+from repro.models import lenet
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    key = jax.random.PRNGKey(17)
+    dkey, mkey = jax.random.split(key)
+    data = synthetic.concept_shift(dkey, m=8, n=120, n_test=30,
+                                   num_classes=6, groups=2, hw=(16, 16),
+                                   channels=1, noise=1.0)
+    params0 = lenet.init(mkey, input_hw=(16, 16), channels=1, num_classes=6)
+    cfg = FedConfig(lr=0.1, momentum=0.9, epochs=1, batch_size=40)
+    return data, params0, cfg
+
+
+def _make(name, params0, cfg):
+    if name == "ucfl":
+        return ucfl.make_ucfl(lenet.apply, params0, cfg, var_batch_size=40)
+    if name == "clustered":
+        return ucfl.make_ucfl(lenet.apply, params0, cfg, num_streams=2,
+                              var_batch_size=40)
+    return REGISTRY[name](lenet.apply, params0, cfg)
+
+
+# ---------------------------------------------------------------- regression
+
+@pytest.mark.parametrize("name", ["ucfl", "fedavg", "clustered"])
+def test_full_cohort_matches_dense_path(name):
+    """round(..., cohort=arange(m)) == round(..., cohort=None) per round."""
+    data, params0, cfg = _setup()
+    strat = _make(name, params0, cfg)
+    state_a = strat.init(jax.random.PRNGKey(3), data)
+    state_b = state_a
+    cohort = np.arange(data.num_clients, dtype=np.int32)
+    for rnd in range(2):
+        rkey = jax.random.PRNGKey(100 + rnd)
+        state_a, _ = strat.round(state_a, data, rkey)
+        state_b, _ = strat.round(state_b, data, rkey, cohort)
+        for a, b in zip(jax.tree.leaves(strat.eval_params(state_a)),
+                        jax.tree.leaves(strat.eval_params(state_b))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_full_cohort_matches_dense_path_all_strategies(name):
+    """One-round full-cohort equivalence for every registered strategy —
+    locks in the 8 hand-rewritten baseline cohort paths too."""
+    data, params0, cfg = _setup()
+    make = REGISTRY[name]
+    strat = (make(lenet.apply, params0) if name in ("scaffold", "pfedme")
+             else make(lenet.apply, params0, cfg))
+    state = strat.init(jax.random.PRNGKey(3), data)
+    rkey = jax.random.PRNGKey(101)
+    state_a, _ = strat.round(state, data, rkey)
+    state_b, _ = strat.round(state, data, rkey,
+                             np.arange(data.num_clients, dtype=np.int32))
+    for a, b in zip(jax.tree.leaves(strat.eval_params(state_a)),
+                    jax.tree.leaves(strat.eval_params(state_b))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fraction_one_is_dense_fast_path():
+    """fraction=1.0 resolves to cohort=None — bit-exact by construction."""
+    cfg = ParticipationConfig(fraction=1.0)
+    assert sample_cohort(cfg, 1, 16) is None
+    assert sample_cohort(None, 1, 16) is None
+
+
+# ------------------------------------------------------------------ samplers
+
+def test_uniform_sampler_contract():
+    cfg = ParticipationConfig(fraction=0.25)
+    for rnd in range(1, 6):
+        c = sample_cohort(cfg, rnd, 32)
+        assert c.shape == (8,) and c.dtype == np.int32
+        assert (np.diff(c) > 0).all()  # sorted, unique
+        assert c.min() >= 0 and c.max() < 32
+    # reproducible for a fixed round, different across rounds
+    np.testing.assert_array_equal(sample_cohort(cfg, 3, 32),
+                                  sample_cohort(cfg, 3, 32))
+    assert not np.array_equal(sample_cohort(cfg, 1, 32),
+                              sample_cohort(cfg, 2, 32))
+
+
+def test_weighted_sampler_biases_by_n():
+    cfg = ParticipationConfig(cohort_size=4, sampler="weighted")
+    n = np.asarray([1.0] * 15 + [1000.0])
+    hits = sum(15 in sample_cohort(cfg, r, 16, n) for r in range(1, 101))
+    assert hits > 95  # client 15 holds ~98.5% of the mass
+
+
+def test_round_robin_covers_everyone():
+    cfg = ParticipationConfig(cohort_size=3, sampler="round_robin")
+    seen = set()
+    for rnd in range(1, 5):  # ceil(10/3) = 4 rounds for full coverage
+        seen.update(sample_cohort(cfg, rnd, 10).tolist())
+    assert seen == set(range(10))
+
+
+def test_availability_sampler_respects_trace():
+    trace = np.zeros((6, 2), bool)
+    trace[:3, 0] = True  # clients 0..2 up on even phases
+    trace[3:, 1] = True  # clients 3..5 up on odd phases
+    cfg = ParticipationConfig(cohort_size=2, sampler="availability",
+                              availability=trace)
+    assert set(sample_cohort(cfg, 1, 6)) <= {0, 1, 2}  # (rnd-1)%2 == 0
+    assert set(sample_cohort(cfg, 2, 6)) <= {3, 4, 5}
+
+
+def test_availability_nobody_online_skips_round():
+    """An all-offline phase yields an empty cohort and the engine idles."""
+    trace = np.zeros((8, 2), bool)
+    trace[:, 0] = True  # everyone up on phase 0, nobody on phase 1
+    cfg = ParticipationConfig(cohort_size=3, sampler="availability",
+                              availability=trace)
+    assert sample_cohort(cfg, 2, 8).size == 0
+
+    data, params0, fcfg = _setup()
+    strat = _make("fedavg", params0, fcfg)
+    h = simulation.run(strat, lenet.apply, data, jax.random.PRNGKey(1),
+                       rounds=2, eval_every=1, participation=cfg)
+    assert h.metrics[0]["cohort_size"] == 3  # phase 0: trained
+    assert h.metrics[1] == {"streams": 0, "cohort_size": 0, "skipped": True}
+    # the skipped round must not change any model
+    assert h.avg_acc[1] == h.avg_acc[0]
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        ParticipationConfig(fraction=0.0)
+    with pytest.raises(ValueError):
+        ParticipationConfig(sampler="nope")
+    with pytest.raises(ValueError):
+        ParticipationConfig(sampler="availability")
+
+
+# ------------------------------------------------------- engine invariants
+
+def test_absent_clients_keep_last_model():
+    data, params0, cfg = _setup()
+    strat = _make("ucfl", params0, cfg)
+    state = strat.init(jax.random.PRNGKey(3), data)
+    before = strat.eval_params(state)
+    cohort = np.asarray([1, 4, 6], np.int32)
+    absent = np.asarray([0, 2, 3, 5, 7])
+    new_state, metrics = strat.round(state, data, jax.random.PRNGKey(5),
+                                     cohort)
+    after = strat.eval_params(new_state)
+    assert metrics["cohort_size"] == 3
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(np.asarray(a)[absent],
+                                      np.asarray(b)[absent])
+        assert np.abs(np.asarray(a)[cohort] - np.asarray(b)[cohort]).max() > 0
+
+
+def test_partial_run_all_strategies_finite():
+    data, params0, cfg = _setup()
+    part = ParticipationConfig(fraction=0.5)
+    for name in sorted(REGISTRY):
+        make = REGISTRY[name]
+        strat = (make(lenet.apply, params0) if name in ("scaffold", "pfedme")
+                 else make(lenet.apply, params0, cfg))
+        h = simulation.run(strat, lenet.apply, data, jax.random.PRNGKey(1),
+                           rounds=2, eval_every=2, participation=part)
+        assert 0.0 <= h.final_avg <= 1.0
+        assert h.metrics[-1]["cohort_size"] == 4
+
+
+# ------------------------------------------------------------------ chunking
+
+def test_chunked_local_sgd_matches_vmap():
+    data, params0, cfg = _setup()
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (data.num_clients,) + x.shape) + 0.0,
+        params0)
+    key = jax.random.PRNGKey(9)
+    dense = fedclient.make_federated_local_sgd(
+        lenet.apply, lr=0.1, momentum=0.9, epochs=1, batch_size=40)
+    for chunk in (3, 4, 8, 16):  # non-dividing, dividing, exact, oversize
+        chunked = fedclient.make_federated_local_sgd(
+            lenet.apply, lr=0.1, momentum=0.9, epochs=1, batch_size=40,
+            chunk_size=chunk)
+        a, _ = dense(stacked, data.x, data.y, key)
+        b, _ = chunked(stacked, data.x, data.y, key)
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       rtol=1e-6, atol=1e-7)
+
+
+def test_pfedme_honors_chunk_size():
+    """pfedme's custom client loop must respect the FedConfig memory knob."""
+    data, params0, _ = _setup()
+    dense = REGISTRY["pfedme"](lenet.apply, params0)
+    chunked = REGISTRY["pfedme"](
+        lenet.apply, params0,
+        FedConfig(lr=0.01, momentum=0.0, epochs=1, batch_size=20,
+                  chunk_size=3))
+    sa = dense.init(jax.random.PRNGKey(3), data)
+    sb = chunked.init(jax.random.PRNGKey(3), data)
+    sa, _ = dense.round(sa, data, jax.random.PRNGKey(5))
+    sb, _ = chunked.round(sb, data, jax.random.PRNGKey(5))
+    for a, b in zip(jax.tree.leaves(dense.eval_params(sa)),
+                    jax.tree.leaves(chunked.eval_params(sb))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                                   atol=1e-7)
+
+
+def test_scale_target_m128_fraction01_chunk16():
+    """The acceptance-scale run: m=128, fraction=0.1, chunk_size=16."""
+    key = jax.random.PRNGKey(0)
+    dkey, mkey = jax.random.split(key)
+    data = synthetic.label_shift(dkey, m=128, n=50, n_test=10,
+                                 num_classes=4, alpha=1.0, hw=(16, 16))
+    params0 = lenet.init(mkey, input_hw=(16, 16), channels=1, num_classes=4)
+    cfg = FedConfig(lr=0.1, momentum=0.9, epochs=1, batch_size=25,
+                    chunk_size=16)
+    strat = REGISTRY["fedavg"](lenet.apply, params0, cfg)
+    part = ParticipationConfig(fraction=0.1)
+    h = simulation.run(strat, lenet.apply, data, jax.random.PRNGKey(1),
+                       rounds=2, eval_every=2, participation=part,
+                       warmup=False)
+    assert h.metrics[-1]["cohort_size"] == 13
+    assert 0.0 <= h.final_avg <= 1.0

@@ -1,15 +1,13 @@
 """Property + unit tests for the collaboration-coefficient machinery
 (Eq. 9/10) — the paper's claimed limit behaviors are encoded here."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import similarity
+from hypothesis_compat import given, load_ci_profile, st
+from repro.core import aggregation, similarity
 
-hypothesis.settings.register_profile("ci", deadline=None, max_examples=25)
-hypothesis.settings.load_profile("ci")
+load_ci_profile(max_examples=25)
 
 
 def _rand_inputs(seed, m, d=32, k=4):
@@ -19,7 +17,7 @@ def _rand_inputs(seed, m, d=32, k=4):
     return g, n
 
 
-@hypothesis.given(m=st.integers(2, 10), seed=st.integers(0, 2**31 - 1))
+@given(m=st.integers(2, 10), seed=st.integers(0, 2**31 - 1))
 def test_weights_row_stochastic(m, seed):
     g, n = _rand_inputs(seed, m)
     out = similarity.collaboration_round(g, n)
@@ -79,6 +77,35 @@ def test_dataset_size_bias():
     out = similarity.collaboration_round(g, n)
     w = np.asarray(out["W"])
     assert (w[:, 3] > w[:, 0]).all()
+
+
+@given(m=st.integers(3, 10), seed=st.integers(0, 2**31 - 1))
+def test_cohort_sliced_weights_stay_row_stochastic(m, seed):
+    """Eq. 9's W sliced to any cohort and renormalized is row-stochastic."""
+    g, n = _rand_inputs(seed, m)
+    w = similarity.collaboration_round(g, n)["W"]
+    rng = np.random.default_rng(seed)
+    c = int(rng.integers(1, m + 1))
+    cohort = jnp.asarray(
+        np.sort(rng.choice(m, size=c, replace=False)).astype(np.int32))
+    wc = np.asarray(aggregation.cohort_mixing_matrix(w, cohort))
+    assert (wc >= 0).all()
+    np.testing.assert_allclose(wc.sum(axis=1), 1.0, rtol=1e-5)
+
+
+def test_cohort_sliced_weights_row_stochastic_sweep():
+    """Non-hypothesis fallback of the property above (always runs)."""
+    for seed in range(10):
+        rng = np.random.default_rng(seed)
+        m = int(rng.integers(3, 10))
+        g, n = _rand_inputs(seed, m)
+        w = similarity.collaboration_round(g, n)["W"]
+        c = int(rng.integers(1, m + 1))
+        cohort = jnp.asarray(
+            np.sort(rng.choice(m, size=c, replace=False)).astype(np.int32))
+        wc = np.asarray(aggregation.cohort_mixing_matrix(w, cohort))
+        assert (wc >= 0).all()
+        np.testing.assert_allclose(wc.sum(axis=1), 1.0, rtol=1e-5)
 
 
 def test_sigma_sq_nonnegative_and_zero_for_identical():
