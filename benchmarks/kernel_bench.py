@@ -1,7 +1,8 @@
-"""PS-kernel micro-benchmarks: mix_aggregate / pairwise_delta /
-kmeans_assign. CPU timings use the jnp reference path (the Pallas kernels
-target TPU; interpret-mode timing is not meaningful), plus the analytic
-HBM-bytes each kernel streams on TPU (the relevant roofline quantity)."""
+"""PS-kernel micro-benchmarks: mix_aggregate / masked_mix_scatter /
+pairwise_delta / kmeans_assign. CPU timings use the jnp reference path
+(the Pallas kernels target TPU; interpret-mode timing is not meaningful),
+plus the analytic HBM-bytes each kernel streams on TPU (the relevant
+roofline quantity)."""
 from __future__ import annotations
 
 import time
@@ -15,8 +16,8 @@ from repro.kernels import ops
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # one warm-up call (jax.block_until_ready handles tuples and pytrees)
+    jax.block_until_ready(fn(*args))
     t0 = time.time()
     for _ in range(iters):
         out = fn(*args)
@@ -40,6 +41,28 @@ def run(scale) -> list[str]:
         hbm = m * d * 4 + m * m * 4
         rows.append(common.csv_row(
             f"kernel/pairwise_delta/m{m}_d{d}", us,
+            f"tpu_hbm_bytes={hbm};tpu_roofline_us={hbm / 819e9 * 1e6:.1f}"))
+        print(rows[-1], flush=True)
+        # fused cohort mix+scatter: c = m/2 cohort slots into the (m, d)
+        # state. The slab kernel streams the full state through VMEM
+        # (copy-through of untouched rows) plus the theta read, so HBM
+        # traffic is (2·m + c)·d floats — the fusion saves the mix-output
+        # allocation and the separate scatter pass, not the state read.
+        c = max(m // 2, 1)
+        wc = jnp.asarray(rng.normal(size=(c, c)).astype(np.float32))
+        theta = jnp.asarray(rng.normal(size=(c, d)).astype(np.float32))
+        idx = jnp.asarray(np.sort(rng.choice(m, size=c, replace=False))
+                          .astype(np.int32))
+        mask = jnp.ones((c,), bool)
+        # the eager ref path is functional (allocates its output), so the
+        # state buffer can be reused across timed iterations; only the
+        # jitted pallas path donates it
+        full_state = jnp.array(t)
+        us = _time(lambda: ops.masked_mix_scatter(
+            wc, theta, idx, mask, full_state, impl="ref"))
+        hbm = (2 * m + c) * d * 4 + c * c * 4 + c * 8
+        rows.append(common.csv_row(
+            f"kernel/masked_mix_scatter/m{m}_c{c}_d{d}", us,
             f"tpu_hbm_bytes={hbm};tpu_roofline_us={hbm / 819e9 * 1e6:.1f}"))
         print(rows[-1], flush=True)
     pts = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))

@@ -1,0 +1,116 @@
+"""Round-engine steady-state benchmark: dense vs cohort vs padded-availability.
+
+Measures the per-round wall time of the jitted round in three regimes:
+
+  * ``dense``          — full participation (the PR 1 legacy path; the
+                         donated/fused cohort engine must not slow it).
+  * ``cohort``         — fixed-size uniform cohort (one compiled shape).
+  * ``availability``   — a diurnal-style trace whose eligible-set size
+                         varies per round. Pre-padding, every distinct
+                         size re-jitted the round inside the timed
+                         region; the fixed-shape masked engine compiles
+                         once, so this should sit within ~1.2x of the
+                         fixed-size cohort round.
+
+Besides the CSV rows, :func:`run` dumps ``BENCH_round_engine.json`` at
+the repo root — the start of the perf trajectory for this path.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.federated import participation as part
+from repro.federated import simulation
+from repro.models import lenet
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_round_engine.json"
+
+
+def _diurnal_trace(m: int, period: int = 6) -> np.ndarray:
+    """Deterministic availability trace with a varying eligible count."""
+    rng = np.random.default_rng(7)
+    trace = np.zeros((m, period), bool)
+    for t in range(period):
+        up = max(1, int(m * (0.3 + 0.6 * abs(np.sin(np.pi * t / period)))))
+        trace[rng.choice(m, size=up, replace=False), t] = True
+    return trace
+
+
+def _steady_round_us(strat, data, participation, rounds: int) -> float:
+    """Mean wall time per round: rounds only — no eval pass in the timed
+    region (simulation.run evaluates at least once inside its timer,
+    which would dilute the availability/cohort regression ratio), and
+    compilation excluded via a warm-up on a state copy (the masked round
+    donates its buffers)."""
+    m = data.num_clients
+    key = jax.random.PRNGKey(1)
+    key, ikey = jax.random.split(key)
+    state = strat.init(ikey, data)
+    wcohort = part.sample_cohort(participation, 1, m, data.n)
+    wstate, _ = strat.round(simulation.donation_safe_copy(state), data,
+                            jax.random.fold_in(key, 0x5EED), wcohort)
+    jax.block_until_ready(wstate)
+    del wstate
+    t0 = time.time()
+    for rnd in range(1, rounds + 1):
+        key, rkey = jax.random.split(key)
+        cohort = part.sample_cohort(participation, rnd, m, data.n)
+        if cohort is not None and len(cohort) == 0:
+            continue
+        state, _ = strat.round(state, data, rkey, cohort)
+    jax.block_until_ready(state)
+    return (time.time() - t0) / rounds * 1e6
+
+
+def run(scale) -> list[str]:
+    rows = []
+    s = scale
+    key = jax.random.PRNGKey(0)
+    dkey, mkey = jax.random.split(key)
+    data = common.scenario_data("label_shift", dkey, s)
+    params0 = common.make_params0(mkey, s)
+    rounds = max(4, s.rounds // 2)
+    cohort = max(2, s.m // 2)
+
+    regimes = {
+        "dense": None,
+        "cohort": part.ParticipationConfig(cohort_size=cohort),
+        "availability": part.ParticipationConfig(
+            cohort_size=cohort, sampler="availability",
+            availability=_diurnal_trace(s.m)),
+    }
+    results = {}
+    for name, pcfg in regimes.items():
+        strat = common.make_strategy("ucfl", params0, s,
+                                     chunk_size=max(2, s.m // 4))
+        t0 = time.time()
+        us = _steady_round_us(strat, data, pcfg, rounds)
+        results[name] = {"round_us": us, "rounds": rounds,
+                         "total_s": time.time() - t0}
+        rows.append(common.csv_row(
+            f"round_engine/ucfl_{name}", us,
+            f"m={s.m};cohort={cohort if pcfg else s.m};rounds={rounds}"))
+        print(rows[-1], flush=True)
+
+    ratio = results["availability"]["round_us"] / \
+        max(results["cohort"]["round_us"], 1e-9)
+    payload = {
+        "config": {"m": s.m, "cohort_size": cohort, "rounds": rounds,
+                   "model": "lenet", "scenario": "label_shift",
+                   "backend": jax.default_backend()},
+        "results": results,
+        "availability_over_cohort_ratio": ratio,
+    }
+    BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
+    rows.append(common.csv_row(
+        "round_engine/availability_over_cohort", ratio,
+        f"target<=1.2;json={BENCH_JSON.name}"))
+    print(rows[-1], flush=True)
+    return rows

@@ -23,12 +23,15 @@ def main() -> None:
     from benchmarks import (common, fig4_silhouette, fig5_comm_efficiency,
                             fig6_parallel_ucfl, fig7_minibatch, kernel_bench,
                             participation_sweep, roofline_report,
-                            table1_accuracy, table2_worst_user)
+                            round_engine, table1_accuracy, table2_worst_user)
 
     scale = common.FULL if args.full else common.FAST
     suites = {
         "kernel": kernel_bench,
         "roofline": roofline_report,
+        # also emits BENCH_round_engine.json (steady-state round walltime,
+        # dense vs cohort vs padded-availability) at the repo root
+        "round_engine": round_engine,
         "table1": table1_accuracy,
         "table2": table2_worst_user,
         "fig4": fig4_silhouette,

@@ -26,12 +26,19 @@ back into the full stacked state):
 
 The heavy lifting per leaf is a (rules, m) × (m, d) matmul executed by the
 ``mix_aggregate`` kernel (Pallas on TPU, jnp oracle on CPU).
+
+The fixed-shape round engine uses the ``masked_*`` variants further down:
+cohorts are padded to a static slot count with zero-weight masked slots,
+every rule is expressed as per-slot (c, c) rows, and the mix + scatter
+into the full stacked state runs as ONE fused ``masked_mix_scatter``
+kernel pass over the ravel-once (c, d) update matrix.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.pytree import scatter_rows, stacked_ravel, stacked_unravel
 from repro.kernels import ops
 
 
@@ -150,6 +157,123 @@ def clustered_cohort(stacked_cohort, w, labels, num_clusters, cohort, *,
             alive.reshape((-1,) + (1,) * (own.ndim - 1)),
             jnp.take(x, lc, axis=0), own),
         mixed, stacked_cohort)
+
+
+# --------------------------------------------------------------------------
+# Padded/masked fixed-shape cohort variants.
+#
+# The fixed-shape engine pads every cohort to a static slot count: pad
+# slots carry the sentinel index m (clamped for gathers, dropped by
+# scatters) and mask == False. The rules below reproduce the cohort_*
+# semantics above bit-for-bit on the real slots — the pad columns are
+# zeroed before the row renormalization, so the row sums (and hence every
+# mixed value) match the unpadded slicing exactly — while pad rows
+# produce don't-care values that the scatter never writes. Each rule is
+# expressed as a per-slot (c, c) row matrix so the whole PS step runs as
+# ONE fused ``masked_mix_scatter`` kernel pass over the raveled (c, d)
+# updates (see :mod:`repro.kernels.masked_mix_scatter`).
+# --------------------------------------------------------------------------
+
+
+def safe_gather_index(idx, m):
+    """Clamp padded sentinel indices for gathers (pads read row m-1)."""
+    return jnp.minimum(idx, m - 1)
+
+
+def masked_cohort_matrix(w, idx, mask):
+    """Fixed-shape :func:`cohort_mixing_matrix`: (c, c) with zeroed pad
+    columns, row-renormalized; degenerate rows fall back to identity."""
+    fmask = mask.astype(w.dtype)
+    safe = safe_gather_index(idx, w.shape[0])
+    wc = w[safe][:, safe] * fmask[None, :]
+    s = jnp.sum(wc, axis=1, keepdims=True)
+    eye = jnp.eye(wc.shape[0], dtype=wc.dtype)
+    return jnp.where(s > 1e-12, wc / jnp.maximum(s, 1e-12), eye)
+
+
+def masked_clustered_rows(w, labels, num_clusters, idx, mask):
+    """Fixed-shape :func:`clustered_cohort` as per-slot rows.
+
+    Returns (c, c): slot i's row is its cluster's centroid rule rebuilt
+    from the masked cohort (renormalized over real columns); a slot whose
+    centroid rule has no mass on the cohort falls back to the identity
+    row (keeps its own locally-updated model), and pad slots are
+    don't-care.
+    """
+    fmask = mask.astype(w.dtype)
+    safe = safe_gather_index(idx, w.shape[0])
+    lc = jnp.take(labels, safe)
+    onehot = jax.nn.one_hot(lc, num_clusters, dtype=w.dtype) * fmask[:, None]
+    raw = onehot.T @ (w[safe][:, safe] * fmask[None, :])  # (mt, c)
+    rules = renormalize_rows(raw)
+    alive = (jnp.sum(raw, axis=1) > 1e-12)[lc]  # (c,)
+    eye = jnp.eye(safe.shape[0], dtype=w.dtype)
+    return jnp.where(alive[:, None], jnp.take(rules, lc, axis=0), eye)
+
+
+def masked_group_rows(assignment_c, n_c, mask):
+    """Fixed-shape per-group FedAvg rows (CFL/Oracle cohort variant).
+
+    assignment_c/n_c are the (c,) cohort-slot cluster ids and dataset
+    sizes (pad slots: clamped-gather values, zeroed by the mask).
+    """
+    fmask = mask.astype(jnp.float32)
+    same = (assignment_c[:, None] == assignment_c[None, :]).astype(jnp.float32)
+    w = same * n_c.astype(jnp.float32)[None, :] * fmask[None, :]
+    s = jnp.sum(w, axis=1, keepdims=True)
+    eye = jnp.eye(w.shape[0], dtype=w.dtype)
+    return jnp.where(s > 1e-12, w / jnp.maximum(s, 1e-12), eye)
+
+
+def masked_fedavg_weights(n_c, mask):
+    """Fixed-shape Eq. 1 weights over the cohort: (1, c), pad slots 0.
+
+    An all-masked cohort yields all-zero weights (0/eps) rather than NaN;
+    ``fedavg_masked_mix`` uses that to fall back to the previous model.
+    """
+    wn = n_c.astype(jnp.float32) * mask.astype(jnp.float32)
+    return (wn / jnp.maximum(jnp.sum(wn), 1e-12))[None, :]
+
+
+def masked_column_mixing(w, idx, mask):
+    """Fixed-shape :func:`cohort_column_mixing` for the §V-E upper bound:
+    (m, c) row-renormalized over real cohort columns, plus the (m,) alive
+    marker for degenerate rows."""
+    fmask = mask.astype(w.dtype)
+    safe = safe_gather_index(idx, w.shape[0])
+    cols = w[:, safe] * fmask[None, :]
+    s = jnp.sum(cols, axis=1, keepdims=True)
+    return cols / jnp.maximum(s, 1e-12), s[:, 0] > 1e-12
+
+
+def mix_scatter(full, cohort_updated, rows, idx, mask, *, impl=None):
+    """Apply per-slot mixing rows and scatter into the full stacked state.
+
+    The cohort-stacked update tree is raveled ONCE to a (c, d) matrix so
+    the whole PS mix is a single kernel launch (instead of one
+    ``mix_aggregate`` per pytree leaf). A single-leaf (already-flat)
+    state then takes the fully fused ``masked_mix_scatter`` path — mix +
+    masked row scatter in one kernel pass over a zero-copy (m, d)
+    reshape view, with the pallas path aliasing the state buffer. For a
+    multi-leaf tree, raveling the *full* state would itself copy the
+    (m, d) bytes the fusion exists to save, so the mixed (c, d) rows are
+    instead split back per leaf (cheap: c ≪ m rows) and row-scattered in
+    place — under ``donate_argnums`` absent clients' rows never move.
+
+    Pad slots rely on the sentinel-index contract: the scatter drops
+    out-of-range rows, so ``mask`` must be False exactly where ``idx``
+    is the sentinel m (guaranteed by ``participation.as_cohort``).
+    """
+    leaves, treedef = jax.tree.flatten(full)
+    flat_c = stacked_ravel(cohort_updated)
+    if len(leaves) == 1:
+        leaf = leaves[0]
+        flat = leaf.reshape(leaf.shape[0], -1)  # zero-copy view
+        out = ops.masked_mix_scatter(rows, flat_c, idx, mask, flat,
+                                     impl=impl)
+        return jax.tree.unflatten(treedef, [out.reshape(leaf.shape)])
+    mixed = ops.mix_aggregate(rows, flat_c, impl=impl)  # one launch
+    return scatter_rows(full, idx, stacked_unravel(cohort_updated, mixed))
 
 
 def centroid_rules(w, labels, num_clusters):

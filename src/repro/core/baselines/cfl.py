@@ -9,16 +9,23 @@ eigenvector of the pairwise cosine-similarity matrix of client updates
 Deviation from the original: the split thresholds are *relative*
 (‖mean Δ‖ < eps1_rel·mean‖Δ_i‖) since absolute ε₁/ε₂ don't transfer
 across datasets; recorded in DESIGN.md. Cluster bookkeeping is host-side
-(numpy); the per-round training/aggregation is jitted.
+(numpy); the per-round training/aggregation is jitted. Cohort rounds use
+the fixed-shape masked engine: the update-delta rows of pad slots are
+sliced off host-side before the split check (real members occupy the
+sorted slot prefix).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.baselines.common import (broadcast_params, gather_rows,
-                                         group_average, scatter_rows)
-from repro.core.pytree import stacked_ravel
+from repro.core import aggregation
+from repro.core.baselines import common
+from repro.core.baselines.common import broadcast_params, group_average
+from repro.core.pytree import gather_rows, stacked_ravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 
@@ -63,16 +70,20 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         new_params = group_average(updated, assignment, n, impl=kernel_impl)
         return new_params, stacked_ravel(delta)
 
-    @jax.jit
-    def _train_agg_cohort(params, cohort, assignment_c, n, x, y, key):
-        # within-cluster FedAvg over the cohort members of each cluster;
-        # absent clients keep their last model.
-        pc = gather_rows(params, cohort)
-        updated, _ = local(pc, x[cohort], y[cohort], key)
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def _masked(params, idx, mask, assignment_c, n, x, y, key):
+        # within-cluster FedAvg over the masked cohort members of each
+        # cluster; absent clients keep their last model.
+        safe = aggregation.safe_gather_index(idx, x.shape[0])
+        pc = gather_rows(params, safe)
+        keys = common.cohort_keys(key, x.shape[0], safe)
+        updated, _ = local(pc, x[safe], y[safe], None, keys=keys)
         delta = jax.tree.map(lambda a, b: a - b, updated, pc)
-        mixed = group_average(updated, assignment_c, n[cohort],
-                              impl=kernel_impl)
-        return scatter_rows(params, cohort, mixed), stacked_ravel(delta)
+        rows = aggregation.masked_group_rows(assignment_c,
+                                             jnp.take(n, safe), mask)
+        new_params = aggregation.mix_scatter(params, updated, rows, idx,
+                                             mask, impl=kernel_impl)
+        return new_params, stacked_ravel(delta)
 
     def _maybe_split(assignment, members_pool, dmat_rows):
         """Recursive bipartition check over the clients in members_pool.
@@ -97,33 +108,42 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                     next_id += 1
         return assignment
 
-    def round(state, data, key, cohort=None):
+    def _bookkeep(state, pool, rows):
         assignment = state["assignment"]
-        if cohort is None:
-            new_params, dmat = _train_agg(
-                state["params"], jax.numpy.asarray(assignment), data.n,
-                data.x, data.y, key,
-            )
-            pool = np.arange(len(assignment))
-            dmat = np.asarray(dmat)
-            rows = {int(i): dmat[i] for i in pool}
-        else:
-            cohort = np.asarray(cohort)
-            new_params, dmat = _train_agg_cohort(
-                state["params"], jax.numpy.asarray(cohort),
-                jax.numpy.asarray(assignment[cohort]), data.n,
-                data.x, data.y, key,
-            )
-            pool = cohort
-            dmat = np.asarray(dmat)
-            rows = {int(g): dmat[j] for j, g in enumerate(cohort)}
         rnd = state["round"] + 1
         if rnd > warmup_rounds:
             assignment = _maybe_split(assignment, pool, rows)
-        streams = len(np.unique(assignment if cohort is None
-                                else assignment[cohort]))
-        return ({"params": new_params, "assignment": assignment,
-                 "round": rnd}, {"streams": streams})
+        return assignment, rnd
 
-    return Strategy("cfl", init, round, lambda s: s["params"],
-                    comm_scheme="groupcast")
+    def dense(state, data, key):
+        assignment = state["assignment"]
+        new_params, dmat = _train_agg(
+            state["params"], jnp.asarray(assignment), data.n,
+            data.x, data.y, key,
+        )
+        pool = np.arange(len(assignment))
+        dmat = np.asarray(dmat)
+        assignment, rnd = _bookkeep(state, pool,
+                                    {int(i): dmat[i] for i in pool})
+        return ({"params": new_params, "assignment": assignment,
+                 "round": rnd},
+                {"streams": len(np.unique(assignment))})
+
+    def masked(state, data, key, idx, mask):
+        assignment = state["assignment"]
+        members = np.asarray(idx)[np.asarray(mask)]  # sorted real prefix
+        safe = np.minimum(np.asarray(idx), data.num_clients - 1)
+        new_params, dmat = _masked(
+            state["params"], idx, mask, jnp.asarray(assignment[safe]),
+            data.n, data.x, data.y, key,
+        )
+        dmat = np.asarray(dmat)
+        assignment, rnd = _bookkeep(
+            state, members, {int(g): dmat[j] for j, g in enumerate(members)})
+        return ({"params": new_params, "assignment": assignment,
+                 "round": rnd},
+                {"streams": len(np.unique(assignment[members]))})
+
+    return Strategy("cfl", init,
+                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    lambda s: s["params"], comm_scheme="groupcast")

@@ -1,11 +1,42 @@
-"""Helpers shared by the baseline strategies."""
+"""Helpers shared by the baseline strategies — including the single
+cohort-dispatch engine every strategy's ``round`` is built from.
+
+PR 1 gave each of the eleven strategies its own hand-written
+``round(state, data, key, cohort)`` wrapper repeating the same
+``if cohort is None: dense else gather/train/mix/scatter`` shape, and the
+availability sampler re-jitted the cohort path on every distinct
+eligible-set size. The engine here replaces all of that:
+
+  * :func:`cohort_round` — the ONE dispatch point. Normalizes the cohort
+    argument to the padded ``(indices, mask)`` contract
+    (:func:`repro.federated.participation.as_cohort`), routes to the
+    dense or masked jitted path, and attaches the host-side
+    ``cohort_size`` metric. Because every padded cohort of a policy has
+    the same slot count, the masked path compiles exactly once.
+  * :func:`make_masked_round` — the standard masked round body
+    (masked gather -> chunked local SGD -> masked mix -> fused scatter)
+    jitted with ``donate_argnums=(0,)`` so the (m, d) stacked-params
+    buffer is updated in place instead of paying a full HBM copy per
+    round. Strategies with extra stacked state (SCAFFOLD controls, Ditto
+    / pFedMe personal models) keep custom jitted bodies but reuse the
+    same pieces.
+
+Donation caveat: jax actually honors ``donate_argnums`` on CPU and TPU —
+after a masked round the *input* state buffers are dead. The simulation
+loop always rebinds the state, and its warm-up call runs on a copy; any
+direct caller that wants to keep the pre-round state alive must copy it
+first (see tests/test_masked_cohort.py).
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation
 from repro.core.pytree import gather_rows, scatter_rows  # noqa: F401  (re-export)
+from repro.federated import participation
 
 
 def broadcast_params(params0, m):
@@ -27,3 +58,112 @@ def group_mixing_matrix(assignment, n):
 def group_average(stacked, assignment, n, *, impl=None):
     w = group_mixing_matrix(assignment, n)
     return aggregation.user_centric(stacked, w, impl=impl)
+
+
+# ------------------------------------------------------------------ engine
+
+def cohort_round(dense_fn, masked_fn, *, masked_jit=None):
+    """Build ``round(state, data, key, cohort=None)`` from the two paths.
+
+    Args:
+      dense_fn: ``(state, data, key) -> (state, metrics)`` — the legacy
+        full-participation path (must stay bit-exact with the pre-cohort
+        engine).
+      masked_fn: ``(state, data, key, idx, mask) -> (state, metrics)`` —
+        the fixed-shape padded-cohort path; ``idx``/``mask`` are the
+        device-side (c,) slot arrays.
+      masked_jit: optional handle on the underlying jitted masked body,
+        attached to the returned function as ``round.masked_jit`` so
+        tests can assert the one-compilation guarantee via
+        ``_cache_size()``.
+
+    The returned ``round`` accepts ``cohort=None`` (dense), a
+    :class:`~repro.federated.participation.Cohort`, or a plain index
+    array (normalized to an unpadded all-real cohort).
+    """
+
+    def round(state, data, key, cohort=None):
+        cohort = participation.as_cohort(cohort, data.num_clients)
+        if cohort is None:
+            state, metrics = dense_fn(state, data, key)
+            size = data.num_clients
+        else:
+            # idx/mask stay host numpy here (jit converts at dispatch), so
+            # wrappers can derive host-side metrics without a device sync
+            state, metrics = masked_fn(state, data, key, cohort.indices,
+                                       cohort.mask)
+            size = len(cohort)
+        return state, {**metrics, "cohort_size": size}
+
+    round.masked_jit = masked_jit
+    return round
+
+
+def cohort_keys(key, m, safe_idx):
+    """Client-indexed per-slot PRNG keys for the masked cohort round.
+
+    Splits the round key by the STATIC client count m and gathers the
+    rows at the cohort's (clamped) indices, so a slot's key depends only
+    on its client id — not on the slot count or cohort composition. This
+    makes padded cohorts reproduce unpadded ones bit-for-bit, and a full
+    cohort reproduce the dense path's ``split(key, m)`` exactly.
+    """
+    return jnp.take(jax.random.split(key, m), safe_idx, axis=0)
+
+
+def make_masked_round(train, mix, *, donate=True):
+    """Jit the standard masked round body with a donated params buffer.
+
+    train(pc, xc, yc, keys, *args) -> cohort-stacked updated tree
+      (``keys`` are the per-slot client-indexed keys)
+    mix(params, updated, idx, mask, *args) -> new full stacked tree
+
+    ``*args`` is an arbitrary tuple of device arrays (W, labels, n, ...)
+    threaded to both closures. ``donate=True`` passes
+    ``donate_argnums=(0,)`` so the stacked state is consumed in place.
+    """
+
+    def body(params, idx, mask, x, y, key, *args):
+        safe = aggregation.safe_gather_index(idx, x.shape[0])
+        keys = cohort_keys(key, x.shape[0], safe)
+        updated = train(gather_rows(params, safe), x[safe], y[safe], keys,
+                        *args)
+        return mix(params, updated, idx, mask, *args)
+
+    return jax.jit(body, donate_argnums=(0,) if donate else ())
+
+
+def fedavg_masked_mix(params, updated, idx, mask, n, *, impl=None):
+    """Masked Eq. 1: n-weighted cohort mean, broadcast to every row of
+    ``params``.
+
+    ``n`` must be the full (m,) dataset sizes — the sentinel pad indices
+    are clamped against it, NOT against ``params`` (pFedMe passes the
+    cohort-stacked local copies as ``params`` to get a cohort-shaped
+    broadcast).
+    """
+    rows = jax.tree.leaves(params)[0].shape[0]
+    safe = aggregation.safe_gather_index(idx, n.shape[0])
+    w = aggregation.masked_fedavg_weights(jnp.take(n, safe), mask)
+    mixed = aggregation.user_centric(updated, w, impl=impl)
+    # an all-masked cohort has zero weight mass: keep the previous model
+    # instead of broadcasting the degenerate zero mix (the engine skips
+    # such rounds, but direct callers get safe semantics too)
+    alive = jnp.any(mask)
+    return jax.tree.map(
+        lambda x, p: jnp.where(alive,
+                               jnp.broadcast_to(x, (rows,) + x.shape[1:]), p),
+        mixed, params)
+
+
+def make_fedavg_masked_round(local, *, impl=None, donate=True):
+    """The FedAvg-family masked round (FedAvg/FedProx reuse it)."""
+
+    def train(pc, xc, yc, keys, n):
+        updated, _ = local(pc, xc, yc, None, keys=keys)
+        return updated
+
+    return make_masked_round(
+        train,
+        functools.partial(fedavg_masked_mix, impl=impl),
+        donate=donate)

@@ -4,11 +4,14 @@ Evaluation uses the personal models v_i.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 
 from repro.core import aggregation
-from repro.core.baselines.common import (broadcast_params, gather_rows,
-                                         scatter_rows)
+from repro.core.baselines import common
+from repro.core.baselines.common import broadcast_params, scatter_rows
+from repro.core.pytree import gather_rows
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 
@@ -49,28 +52,33 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         new_personal, _ = local_personal(personal, x, y, k2, params)
         return new_global, new_personal
 
-    @jax.jit
-    def _round_cohort(params, personal, cohort, n, x, y, key):
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def _masked(params, personal, idx, mask, n, x, y, key):
         k1, k2 = jax.random.split(key)
-        pc = gather_rows(params, cohort)
-        xc, yc = x[cohort], y[cohort]
-        updated, _ = local_global(pc, xc, yc, k1)
-        new_global = aggregation.fedavg_cohort(updated, n[cohort], x.shape[0],
-                                               impl=kernel_impl)
+        m = x.shape[0]
+        safe = aggregation.safe_gather_index(idx, m)
+        pc = gather_rows(params, safe)
+        xc, yc = x[safe], y[safe]
+        updated, _ = local_global(pc, xc, yc, None,
+                                  keys=common.cohort_keys(k1, m, safe))
+        new_global = common.fedavg_masked_mix(params, updated, idx, mask, n,
+                                              impl=kernel_impl)
         # only participants advance their personal solver
-        new_pc, _ = local_personal(gather_rows(personal, cohort), xc, yc, k2,
-                                   pc)
-        return new_global, scatter_rows(personal, cohort, new_pc)
+        new_pc, _ = local_personal(gather_rows(personal, safe), xc, yc, None,
+                                   pc, keys=common.cohort_keys(k2, m, safe))
+        return new_global, scatter_rows(personal, idx, new_pc)
 
-    def round(state, data, key, cohort=None):
-        if cohort is None:
-            g, p = _round(state["params"], state["personal"], data.n, data.x,
-                          data.y, key)
-        else:
-            g, p = _round_cohort(state["params"], state["personal"],
-                                 jax.numpy.asarray(cohort), data.n, data.x,
-                                 data.y, key)
+    def dense(state, data, key):
+        g, p = _round(state["params"], state["personal"], data.n, data.x,
+                      data.y, key)
         return {"params": g, "personal": p}, {"streams": 1}
 
-    return Strategy(f"ditto_lam{lam}", init, round, lambda s: s["personal"],
-                    comm_scheme="broadcast", num_streams=1)
+    def masked(state, data, key, idx, mask):
+        g, p = _masked(state["params"], state["personal"], idx, mask,
+                       data.n, data.x, data.y, key)
+        return {"params": g, "personal": p}, {"streams": 1}
+
+    return Strategy(f"ditto_lam{lam}", init,
+                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    lambda s: s["personal"], comm_scheme="broadcast",
+                    num_streams=1)

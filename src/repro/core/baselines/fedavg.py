@@ -1,15 +1,17 @@
 """FedAvg (McMahan et al., 2017) — Eq. 1.
 
 Partial participation: the cohort trains from the current global model and
-the new global (an n-weighted mean of the cohort's uploads) is broadcast
-back to every row of the stacked state — one downlink stream either way.
+the new global (an n-weighted mean of the cohort's uploads, pad slots
+zero-weight) is broadcast back to every row of the stacked state — one
+downlink stream either way.
 """
 from __future__ import annotations
 
 import jax
 
 from repro.core import aggregation
-from repro.core.baselines.common import broadcast_params, gather_rows
+from repro.core.baselines import common
+from repro.core.baselines.common import broadcast_params
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 
@@ -30,20 +32,18 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         updated, _ = local(params, x, y, key)
         return aggregation.fedavg(updated, n, impl=kernel_impl)
 
-    @jax.jit
-    def _round_cohort(params, cohort, n, x, y, key):
-        updated, _ = local(gather_rows(params, cohort), x[cohort], y[cohort],
-                           key)
-        return aggregation.fedavg_cohort(updated, n[cohort], x.shape[0],
-                                         impl=kernel_impl)
+    _masked = common.make_fedavg_masked_round(local, impl=kernel_impl)
 
-    def round(state, data, key, cohort=None):
-        if cohort is None:
-            new = _round(state["params"], data.n, data.x, data.y, key)
-        else:
-            new = _round_cohort(state["params"], jax.numpy.asarray(cohort),
-                                data.n, data.x, data.y, key)
+    def dense(state, data, key):
+        new = _round(state["params"], data.n, data.x, data.y, key)
         return {"params": new}, {"streams": 1}
 
-    return Strategy("fedavg", init, round, lambda s: s["params"],
-                    comm_scheme="broadcast", num_streams=1)
+    def masked(state, data, key, idx, mask):
+        new = _masked(state["params"], idx, mask, data.x, data.y, key,
+                      data.n)
+        return {"params": new}, {"streams": 1}
+
+    return Strategy("fedavg", init,
+                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    lambda s: s["params"], comm_scheme="broadcast",
+                    num_streams=1)

@@ -8,17 +8,20 @@ evaluates them on a held-out local validation split and mixes:
   θ_i ← θ_i + Σ_j ŵ_{i,j} (θ_j − θ_i).
 
 The weighting is *refined every round* (unlike the paper's one-shot W).
+Cohort rounds restrict the mixing to the masked cohort slots (pad slots
+get zero weight and are dropped by the scatter).
 """
 from __future__ import annotations
 
-import math
+import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.baselines.common import (broadcast_params, gather_rows,
-                                         scatter_rows)
-from repro.core.pytree import stacked_ravel
+from repro.core import aggregation
+from repro.core.baselines import common
+from repro.core.baselines.common import broadcast_params, scatter_rows
+from repro.core.pytree import gather_rows, stacked_ravel, stacked_unravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated.client import make_loss
@@ -37,61 +40,64 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     def init(key, data):
         return {"params": broadcast_params(params0, data.num_clients)}
 
-    @jax.jit
-    def _round(params, x, y, key):
-        m, n = x.shape[0], x.shape[1]
+    def _mixed_flat(params_c, x, y, key, col_mask=None, keys=None):
+        """Train on the train split and first-order mix over the slots.
+
+        col_mask: optional (c,) 0/1 weights zeroing the pad columns so a
+        real participant never mixes in a pad slot's duplicate model.
+        Returns the mixed cohort-stacked tree.
+        """
+        c, n = x.shape[0], x.shape[1]
         n_val = max(int(n * val_frac), 1)
         x_val, y_val = x[:, :n_val], y[:, :n_val]
         x_tr, y_tr = x[:, n_val:], y[:, n_val:]
 
-        updated, _ = local(params, x_tr, y_tr, key)
+        updated, _ = local(params_c, x_tr, y_tr, key, keys=keys)
 
         # L[i, j]: client i's val loss under client j's updated model.
         def losses_for_client(xv, yv):
             return jax.vmap(lambda p: loss(p, xv, yv))(updated)
 
-        lmat = jax.vmap(losses_for_client)(x_val, y_val)  # (m, m)
-        flat = stacked_ravel(updated)  # (m, d)
+        lmat = jax.vmap(losses_for_client)(x_val, y_val)  # (c, c)
+        flat = stacked_ravel(updated)  # (c, d)
         dist = jnp.sqrt(ops.pairwise_delta(flat, impl=kernel_impl) + 1e-12)
         base = jnp.diag(lmat)  # own updated model as baseline
         raw = jnp.maximum(base[:, None] - lmat, 0.0) / dist
-        raw = raw * (1.0 - jnp.eye(m))  # exclude self
+        raw = raw * (1.0 - jnp.eye(c))  # exclude self
+        if col_mask is not None:
+            raw = raw * col_mask[None, :]
         norm = jnp.sum(raw, axis=1, keepdims=True)
         w = jnp.where(norm > 0, raw / jnp.maximum(norm, 1e-12), 0.0)
         # θ_i ← θ_i + Σ_j ŵ_ij (θ_j − θ_i)
         mixed_delta = ops.mix_aggregate(w, flat, impl=kernel_impl)
         self_w = jnp.sum(w, axis=1, keepdims=True)
         new_flat = flat + mixed_delta - self_w * flat
-
-        # unflatten back into the stacked tree
-        def unflatten(tree, mat):
-            out, off = [], 0
-            leaves, treedef = jax.tree.flatten(tree)
-            for l in leaves:
-                size = math.prod(l.shape[1:])
-                out.append(mat[:, off: off + size].reshape(l.shape))
-                off += size
-            return jax.tree.unflatten(treedef, out)
-
-        return unflatten(updated, new_flat)
+        return stacked_unravel(updated, new_flat)
 
     @jax.jit
-    def _round_cohort(params, cohort, x, y, key):
-        # client-side mixing restricted to the cohort: each participant
-        # downloads only the cohort's models (c, not m, DL streams per
-        # client); absent clients keep their last model.
-        mixed = _round(gather_rows(params, cohort), x[cohort], y[cohort], key)
-        return scatter_rows(params, cohort, mixed)
+    def _round(params, x, y, key):
+        return _mixed_flat(params, x, y, key)
 
-    def round(state, data, key, cohort=None):
-        if cohort is None:
-            new = _round(state["params"], data.x, data.y, key)
-            streams = data.num_clients
-        else:
-            cohort = jax.numpy.asarray(cohort)
-            new = _round_cohort(state["params"], cohort, data.x, data.y, key)
-            streams = int(cohort.shape[0])
-        return {"params": new}, {"streams": streams}
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def _masked(params, idx, mask, x, y, key):
+        # client-side mixing restricted to the masked cohort: each
+        # participant downloads only the real cohort models (len(cohort),
+        # not m, DL streams per client); absent clients keep their last
+        # model and pad slots are dropped by the scatter.
+        safe = aggregation.safe_gather_index(idx, x.shape[0])
+        mixed = _mixed_flat(gather_rows(params, safe), x[safe], y[safe],
+                            None, col_mask=mask.astype(jnp.float32),
+                            keys=common.cohort_keys(key, x.shape[0], safe))
+        return scatter_rows(params, idx, mixed)
 
-    return Strategy("fedfomo", init, round, lambda s: s["params"],
-                    comm_scheme="client_mixing")
+    def dense(state, data, key):
+        new = _round(state["params"], data.x, data.y, key)
+        return {"params": new}, {"streams": data.num_clients}
+
+    def masked(state, data, key, idx, mask):
+        new = _masked(state["params"], idx, mask, data.x, data.y, key)
+        return {"params": new}, {"streams": int(mask.sum())}  # host mask
+
+    return Strategy("fedfomo", init,
+                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    lambda s: s["params"], comm_scheme="client_mixing")

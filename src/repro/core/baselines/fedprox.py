@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 
 from repro.core import aggregation
-from repro.core.baselines.common import broadcast_params, gather_rows
+from repro.core.baselines import common
+from repro.core.baselines.common import broadcast_params
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 
@@ -31,20 +32,25 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         updated, _ = local(params, x, y, key, params)  # center = round start
         return aggregation.fedavg(updated, n, impl=kernel_impl)
 
-    @jax.jit
-    def _round_cohort(params, cohort, n, x, y, key):
-        pc = gather_rows(params, cohort)
-        updated, _ = local(pc, x[cohort], y[cohort], key, pc)
-        return aggregation.fedavg_cohort(updated, n[cohort], x.shape[0],
-                                         impl=kernel_impl)
+    def _train(pc, xc, yc, keys, n):
+        updated, _ = local(pc, xc, yc, None, pc, keys=keys)  # center = start
+        return updated
 
-    def round(state, data, key, cohort=None):
-        if cohort is None:
-            new = _round(state["params"], data.n, data.x, data.y, key)
-        else:
-            new = _round_cohort(state["params"], jax.numpy.asarray(cohort),
-                                data.n, data.x, data.y, key)
+    _masked = common.make_masked_round(
+        _train, lambda params, updated, idx, mask, n:
+        common.fedavg_masked_mix(params, updated, idx, mask, n,
+                                 impl=kernel_impl))
+
+    def dense(state, data, key):
+        new = _round(state["params"], data.n, data.x, data.y, key)
         return {"params": new}, {"streams": 1}
 
-    return Strategy(f"fedprox_mu{mu}", init, round, lambda s: s["params"],
-                    comm_scheme="broadcast", num_streams=1)
+    def masked(state, data, key, idx, mask):
+        new = _masked(state["params"], idx, mask, data.x, data.y, key,
+                      data.n)
+        return {"params": new}, {"streams": 1}
+
+    return Strategy(f"fedprox_mu{mu}", init,
+                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    lambda s: s["params"], comm_scheme="broadcast",
+                    num_streams=1)

@@ -3,8 +3,8 @@ from __future__ import annotations
 
 import jax
 
-from repro.core.baselines.common import (broadcast_params, gather_rows,
-                                         scatter_rows)
+from repro.core.baselines import common
+from repro.core.baselines.common import broadcast_params, scatter_rows
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 
@@ -24,19 +24,25 @@ def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
         updated, _ = local(params, x, y, key)
         return updated
 
-    @jax.jit
-    def _round_cohort(params, cohort, x, y, key):
-        updated, _ = local(gather_rows(params, cohort), x[cohort], y[cohort],
-                           key)
-        return scatter_rows(params, cohort, updated)
+    def _train(pc, xc, yc, keys):
+        updated, _ = local(pc, xc, yc, None, keys=keys)
+        return updated
 
-    def round(state, data, key, cohort=None):
-        if cohort is None:
-            new = _round(state["params"], data.x, data.y, key)
-        else:
-            new = _round_cohort(state["params"], jax.numpy.asarray(cohort),
-                                data.x, data.y, key)
+    # no mixing: each participant keeps its own update (pad slots are
+    # dropped by the sentinel-index scatter)
+    _masked = common.make_masked_round(
+        _train, lambda params, updated, idx, mask: scatter_rows(
+            params, idx, updated))
+
+    def dense(state, data, key):
+        return {"params": _round(state["params"], data.x, data.y, key)}, \
+            {"streams": 0}
+
+    def masked(state, data, key, idx, mask):
+        new = _masked(state["params"], idx, mask, data.x, data.y, key)
         return {"params": new}, {"streams": 0}
 
-    return Strategy("local", init, round, lambda s: s["params"],
-                    comm_scheme="broadcast", num_streams=0)
+    return Strategy("local", init,
+                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    lambda s: s["params"], comm_scheme="broadcast",
+                    num_streams=0)

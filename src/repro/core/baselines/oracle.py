@@ -2,10 +2,11 @@
 from __future__ import annotations
 
 import jax
-import numpy as np
+import jax.numpy as jnp
 
-from repro.core.baselines.common import (broadcast_params, gather_rows,
-                                         group_average, scatter_rows)
+from repro.core import aggregation
+from repro.core.baselines import common
+from repro.core.baselines.common import broadcast_params, group_average
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 
@@ -19,35 +20,47 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     )
 
     def init(key, data):
-        return {"params": broadcast_params(params0, data.num_clients)}
+        num_groups = int(jnp.max(data.group)) + 1
+        # group one-hots let the cohort round count the represented groups
+        # (downlink streams) on device — no per-round np.unique host sync
+        return {"params": broadcast_params(params0, data.num_clients),
+                "group_onehot": jax.nn.one_hot(data.group, num_groups,
+                                               dtype=jnp.float32),
+                "num_groups": num_groups}
 
     @jax.jit
     def _round(params, group, n, x, y, key):
         updated, _ = local(params, x, y, key)
         return group_average(updated, group, n, impl=kernel_impl)
 
-    @jax.jit
-    def _round_cohort(params, cohort, group, n, x, y, key):
+    def _train(pc, xc, yc, keys, group, n, onehot):
+        updated, _ = local(pc, xc, yc, None, keys=keys)
+        return updated
+
+    def _mix(params, updated, idx, mask, group, n, onehot):
         # per-group FedAvg over the cohort members of each ground-truth
         # group; absent clients keep their last model.
-        updated, _ = local(gather_rows(params, cohort), x[cohort], y[cohort],
-                           key)
-        mixed = group_average(updated, group[cohort], n[cohort],
-                              impl=kernel_impl)
-        return scatter_rows(params, cohort, mixed)
+        safe = aggregation.safe_gather_index(idx, onehot.shape[0])
+        rows = aggregation.masked_group_rows(jnp.take(group, safe),
+                                             jnp.take(n, safe), mask)
+        new = aggregation.mix_scatter(params, updated, rows, idx, mask,
+                                      impl=kernel_impl)
+        oc = jnp.take(onehot, safe, axis=0) * mask[:, None]
+        return new, jnp.sum(jnp.max(oc, axis=0) > 0)
 
-    def round(state, data, key, cohort=None):
-        if cohort is None:
-            new = _round(state["params"], data.group, data.n, data.x, data.y,
-                         key)
-            num_groups = int(jax.numpy.max(data.group)) + 1
-        else:
-            cohort = jax.numpy.asarray(cohort)
-            new = _round_cohort(state["params"], cohort, data.group, data.n,
-                                data.x, data.y, key)
-            num_groups = int(
-                np.unique(np.asarray(data.group)[np.asarray(cohort)]).size)
-        return {"params": new}, {"streams": num_groups}
+    _masked = common.make_masked_round(_train, _mix)
 
-    return Strategy("oracle", init, round, lambda s: s["params"],
-                    comm_scheme="groupcast")
+    def dense(state, data, key):
+        new = _round(state["params"], data.group, data.n, data.x, data.y,
+                     key)
+        return dict(state, params=new), {"streams": state["num_groups"]}
+
+    def masked(state, data, key, idx, mask):
+        new, streams = _masked(state["params"], idx, mask, data.x, data.y,
+                               key, data.group, data.n,
+                               state["group_onehot"])
+        return dict(state, params=new), {"streams": streams}
+
+    return Strategy("oracle", init,
+                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    lambda s: s["params"], comm_scheme="groupcast")

@@ -8,11 +8,14 @@ Paper footnote 2: η_global = η_local = 0.01, S = 15, E = 1, batch 20.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 
 from repro.core import aggregation
-from repro.core.baselines.common import (broadcast_params, gather_rows,
-                                         scatter_rows)
+from repro.core.baselines import common
+from repro.core.baselines.common import broadcast_params, scatter_rows
+from repro.core.pytree import gather_rows
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.data.loader import epoch_batches
 from repro.federated.client import client_vmap, make_loss
@@ -73,28 +76,32 @@ def make_pfedme(apply_fn, params0,
         mixed = jax.tree.map(lambda a, b: (1 - beta) * a + beta * b, new_w, avg)
         return mixed, phi
 
-    @jax.jit
-    def _round_cohort(w, personal, cohort, n, x, y, key):
-        # cohort-only Moreau steps; the β-mix pulls participants toward a
-        # cohort average, absent clients keep their last w_i / φ_i.
-        c = cohort.shape[0]
-        keys = jax.random.split(key, c)
-        wc = gather_rows(w, cohort)
-        new_wc, phic = run_clients(wc, x[cohort], y[cohort], keys)
-        avg = aggregation.fedavg(new_wc, n[cohort], impl=kernel_impl)
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def _masked(w, personal, idx, mask, n, x, y, key):
+        # masked cohort-only Moreau steps; the β-mix pulls participants
+        # toward the zero-weight-padded cohort average, absent clients and
+        # pad slots keep their last w_i / φ_i.
+        safe = aggregation.safe_gather_index(idx, x.shape[0])
+        keys = common.cohort_keys(key, x.shape[0], safe)
+        wc = gather_rows(w, safe)
+        new_wc, phic = run_clients(wc, x[safe], y[safe], keys)
+        avg = common.fedavg_masked_mix(wc, new_wc, idx, mask, n,
+                                       impl=kernel_impl)
         mixed = jax.tree.map(lambda a, b: (1 - beta) * a + beta * b, new_wc,
                              avg)
-        return (scatter_rows(w, cohort, mixed),
-                scatter_rows(personal, cohort, phic))
+        return (scatter_rows(w, idx, mixed),
+                scatter_rows(personal, idx, phic))
 
-    def round(state, data, key, cohort=None):
-        if cohort is None:
-            w, phi = _round(state["params"], data.n, data.x, data.y, key)
-        else:
-            w, phi = _round_cohort(state["params"], state["personal"],
-                                   jax.numpy.asarray(cohort), data.n, data.x,
-                                   data.y, key)
+    def dense(state, data, key):
+        w, phi = _round(state["params"], data.n, data.x, data.y, key)
         return {"params": w, "personal": phi}, {"streams": 1}
 
-    return Strategy("pfedme", init, round, lambda s: s["personal"],
-                    comm_scheme="broadcast", num_streams=1)
+    def masked(state, data, key, idx, mask):
+        w, phi = _masked(state["params"], state["personal"], idx, mask,
+                         data.n, data.x, data.y, key)
+        return {"params": w, "personal": phi}, {"streams": 1}
+
+    return Strategy("pfedme", init,
+                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    lambda s: s["personal"], comm_scheme="broadcast",
+                    num_streams=1)

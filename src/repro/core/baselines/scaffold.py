@@ -7,14 +7,16 @@ server sets c ← mean_i c_i⁺ and θ ← mean_i θ_i⁺. Paper footnote 2 uses
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation
-from repro.core.baselines.common import (broadcast_params, gather_rows,
-                                         scatter_rows)
+from repro.core.baselines import common
+from repro.core.baselines.common import broadcast_params, scatter_rows
+from repro.core.pytree import gather_rows, tree_zeros_like
 from repro.core.strategy import FedConfig, Strategy, register
-from repro.core.pytree import tree_zeros_like
 from repro.federated import client as fedclient
 
 
@@ -59,23 +61,26 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
         )
         return new_params, new_c_i, new_c
 
-    @jax.jit
-    def _round_cohort(params, c_i, c, cohort, n, x, y, key):
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+    def _masked(params, c_i, c, idx, mask, n, x, y, key):
         # Option II with partial participation: only the cohort refreshes
-        # its c_i; the server control c re-averages ALL stored c_i (stale
-        # ones included) and the new global mixes the cohort's uploads.
+        # its c_i (pad slots are dropped by the sentinel-index scatter);
+        # the server control c re-averages ALL stored c_i (stale ones
+        # included) and the new global mixes the cohort's masked uploads.
         steps = (x.shape[1] // cfg.batch_size) * cfg.epochs
-        pc = gather_rows(params, cohort)
-        cic, cc = gather_rows(c_i, cohort), gather_rows(c, cohort)
-        updated, _ = local(pc, x[cohort], y[cohort], key, (cic, cc))
+        safe = aggregation.safe_gather_index(idx, x.shape[0])
+        pc = gather_rows(params, safe)
+        cic, cc = gather_rows(c_i, safe), gather_rows(c, safe)
+        keys = common.cohort_keys(key, x.shape[0], safe)
+        updated, _ = local(pc, x[safe], y[safe], None, (cic, cc), keys=keys)
         inv = 1.0 / (steps * cfg.lr)
         new_cic = jax.tree.map(
             lambda ci, cg, start, end: ci - cg + inv * (start - end),
             cic, cc, pc, updated,
         )
-        c_i_full = scatter_rows(c_i, cohort, new_cic)
-        new_params = aggregation.fedavg_cohort(updated, n[cohort], x.shape[0],
-                                               impl=kernel_impl)
+        c_i_full = scatter_rows(c_i, idx, new_cic)
+        new_params = common.fedavg_masked_mix(params, updated, idx, mask, n,
+                                              impl=kernel_impl)
         new_c = jax.tree.map(
             lambda ci: jnp.broadcast_to(jnp.mean(ci, axis=0),
                                         ci.shape) + 0.0,
@@ -83,15 +88,17 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
         )
         return new_params, c_i_full, new_c
 
-    def round(state, data, key, cohort=None):
-        if cohort is None:
-            p, ci, c = _round(state["params"], state["c_i"], state["c"],
-                              data.n, data.x, data.y, key)
-        else:
-            p, ci, c = _round_cohort(state["params"], state["c_i"],
-                                     state["c"], jnp.asarray(cohort),
-                                     data.n, data.x, data.y, key)
+    def dense(state, data, key):
+        p, ci, c = _round(state["params"], state["c_i"], state["c"],
+                          data.n, data.x, data.y, key)
         return {"params": p, "c_i": ci, "c": c}, {"streams": 1}
 
-    return Strategy("scaffold", init, round, lambda s: s["params"],
-                    comm_scheme="broadcast", num_streams=1)
+    def masked(state, data, key, idx, mask):
+        p, ci, c = _masked(state["params"], state["c_i"], state["c"],
+                           idx, mask, data.n, data.x, data.y, key)
+        return {"params": p, "c_i": ci, "c": c}, {"streams": 1}
+
+    return Strategy("scaffold", init,
+                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    lambda s: s["params"], comm_scheme="broadcast",
+                    num_streams=1)

@@ -6,6 +6,8 @@ rules in :mod:`repro.core.aggregation` operate on stacked trees.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
@@ -60,14 +62,37 @@ def stacked_ravel(tree, lead: int = 1):
     )
 
 
+def stacked_unravel(template, mat):
+    """Inverse of :func:`stacked_ravel` (lead=1) against a template tree.
+
+    ``mat`` is (r, d); the result has ``template``'s structure with every
+    leaf's trailing shape and a leading axis of r (r need not match the
+    template's leading axis — e.g. unraveling a cohort matrix against the
+    full stacked state).
+    """
+    leaves, treedef = jax.tree.flatten(template)
+    r = mat.shape[0]
+    out, off = [], 0
+    for leaf in leaves:
+        size = math.prod(leaf.shape[1:])
+        out.append(mat[:, off:off + size].reshape((r,) + leaf.shape[1:]))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
 def gather_rows(tree, idx):
     """Select cohort rows from a client-stacked tree (leading axis m)."""
     return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), tree)
 
 
 def scatter_rows(full, idx, updates):
-    """Write cohort rows back; absent clients keep their previous rows."""
-    return jax.tree.map(lambda f, u: f.at[idx].set(u), full, updates)
+    """Write cohort rows back; absent clients keep their previous rows.
+
+    Out-of-range indices (the padded-cohort sentinel ``m``) are dropped,
+    so pad slots never write.
+    """
+    return jax.tree.map(lambda f, u: f.at[idx].set(u, mode="drop"),
+                        full, updates)
 
 
 def tree_add(a, b):

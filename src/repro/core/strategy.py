@@ -7,19 +7,28 @@ A strategy owns three callables:
     round or nothing for FedAvg);
   * ``round(state, data, key, cohort=None) -> (state, metrics)`` — one
     communication round (local training + PS aggregation); jitted
-    internally. ``cohort`` is a sorted int array of the participating
-    client indices, or ``None`` for full participation. With a cohort,
-    only those clients are gathered/trained/uploaded; the aggregation
-    mixes with the cohort-sliced row-renormalized W and absent clients
-    keep their last personalized model (the stacked state rows are only
-    written at the cohort indices). ``cohort=None`` must follow the exact
-    dense full-participation path so that fraction=1.0 stays bit-exact
-    with the pre-cohort engine.
+    internally. ``cohort`` is a fixed-shape padded
+    :class:`~repro.federated.participation.Cohort` (``(indices, mask)``
+    with sentinel-index zero-weight pad slots), a plain sorted index
+    array (normalized to an unpadded all-real cohort), or ``None`` for
+    full participation. With a cohort, only the masked slots are
+    gathered/trained/uploaded; the aggregation mixes with the masked
+    row-renormalized W and absent clients keep their last personalized
+    model (the fused ``masked_mix_scatter`` kernel writes only the real
+    cohort rows of the stacked state, whose buffer the jitted round
+    *donates* — callers must not reuse the pre-round state).
+    ``cohort=None`` must follow the exact dense full-participation path
+    so that fraction=1.0 stays bit-exact with the pre-cohort engine.
   * ``eval_params(state) -> stacked params`` — the per-client models that
     should be evaluated (personalized where the method has them).
 
-Cohorts are drawn by :mod:`repro.federated.participation` and threaded by
-the simulation loop; a fixed cohort size keeps one jitted round shape.
+All eleven strategies build ``round`` from the single dispatch helper
+:func:`repro.core.baselines.common.cohort_round`, so the padded-cohort
+contract lives in one place. Cohorts are drawn by
+:mod:`repro.federated.participation` and threaded by the simulation loop;
+the static slot count means one policy compiles ONE round shape — the
+availability sampler included (its short rounds are masked, not
+truncated).
 
 ``metrics`` may include per-round diagnostics (e.g. downlink stream
 count, which feeds the §V-D comm model in the Fig. 5 benchmark).

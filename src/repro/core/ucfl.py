@@ -9,6 +9,13 @@ Algorithm 1 end-to-end:
      picked by silhouette (Alg. 2) when ``num_streams="auto"``;
   4. every round: clients run ClientUpdate from their personalized model;
      PS applies the user-centric (or clustered) aggregation.
+
+Cohort rounds use the fixed-shape masked engine (see
+:mod:`repro.core.baselines.common`): the padded ``(indices, mask)`` slots
+compile one round shape, the stacked-params buffer is donated, the PS mix
+runs as one fused ``masked_mix_scatter`` kernel pass, and the downlink
+stream count is computed on device from cluster-membership one-hots
+precomputed at init (no per-round ``np.unique`` host sync).
 """
 from __future__ import annotations
 
@@ -16,29 +23,40 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import aggregation, clustering, similarity
-from repro.core.pytree import gather_rows, scatter_rows, stacked_ravel
+from repro.core.baselines import common
+from repro.core.pytree import gather_rows, stacked_ravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.data.loader import fixed_partition
 from repro.federated import client as fedclient
 
 
 def compute_collaboration(apply_fn, params0, data, *, var_batch_size=100,
-                          impl=None):
-    """Run the special pre-training round; returns the dict of §IV-A."""
-    m = data.num_clients
-    stacked0 = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (m,) + x.shape), params0
-    )
-    xb, yb = jax.vmap(lambda x, y: fixed_partition(x, y, var_batch_size))(
-        data.x, data.y
-    )
-    mb_grads = fedclient.minibatch_gradients(apply_fn, stacked0, xb, yb)
-    gmat = stacked_ravel(mb_grads, lead=2)  # (m, K, d)
-    return similarity.collaboration_round(gmat, data.n.astype(jnp.float32),
-                                          impl=impl)
+                          impl=None, chunk_size=None):
+    """Run the special pre-training round; returns the dict of §IV-A.
+
+    ``chunk_size`` bounds the client axis with the same ``lax.map``
+    machinery as local training: each chunk materializes only its own
+    (chunk, K, d) minibatch-gradient stack and immediately reduces it to
+    the (chunk, d) full gradients + (chunk,) variance estimates, so init
+    memory is O(chunk·K·d) instead of O(m·K·d).
+    """
+    loss = fedclient.make_loss(apply_fn)
+    grad_fn = jax.grad(loss)
+
+    def one_client(x, y):
+        xb, yb = fixed_partition(x, y, var_batch_size)
+        g = jax.vmap(grad_fn, in_axes=(None, 0, 0))(params0, xb, yb)
+        gmat = stacked_ravel(g, lead=1)  # (K, d)
+        full = jnp.mean(gmat, axis=0)
+        return full, similarity.sigma_sq(gmat, full)
+
+    run = fedclient.client_vmap(one_client, chunk_size=chunk_size)
+    full, sig = run(data.x, data.y)
+    delta = similarity.pairwise_delta(full, impl=impl)
+    w = similarity.mixing_weights(delta, sig, data.n.astype(jnp.float32))
+    return {"full_grads": full, "sigma_sq": sig, "delta": delta, "W": w}
 
 
 @register("ucfl")
@@ -60,10 +78,11 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         m = data.num_clients
         collab = compute_collaboration(
             apply_fn, params0, data, var_batch_size=var_batch_size,
-            impl=kernel_impl,
+            impl=kernel_impl, chunk_size=cfg.chunk_size,
         )
         w = collab["W"]
         labels = None
+        onehot = None
         k = num_streams
         if k == "auto":
             kkey = silhouette_key if silhouette_key is not None else key
@@ -71,11 +90,15 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         if k is not None:
             res = clustering.kmeans(key, w, int(k), impl=kernel_impl)
             labels = res.labels
+            # cluster-membership one-hots: lets the cohort round count the
+            # represented clusters (downlink streams) on device instead of
+            # a per-round np.unique host round-trip
+            onehot = jax.nn.one_hot(labels, int(k), dtype=jnp.float32)
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (m,) + x.shape) + 0.0, params0
         )
         return {"params": stacked, "W": w, "labels": labels,
-                "streams": k, "collab": collab}
+                "cluster_onehot": onehot, "streams": k, "collab": collab}
 
     @functools.partial(jax.jit, static_argnames=("streams",))
     def _round(params, w, labels, x, y, key, streams):
@@ -87,45 +110,47 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                           impl=kernel_impl)
         return mixed
 
-    @functools.partial(jax.jit, static_argnames=("streams",))
-    def _round_cohort(params, w, labels, cohort, x, y, key, streams):
-        # gather -> cohort local SGD -> cohort-sliced mix -> scatter back
-        pc = gather_rows(params, cohort)
-        updated, _ = local(pc, x[cohort], y[cohort], key)
+    @functools.partial(jax.jit, static_argnames=("streams",),
+                       donate_argnums=(0,))
+    def _masked(params, w, labels, onehot, idx, mask, x, y, key, streams):
+        # masked gather -> cohort local SGD -> fused masked mix + scatter
+        safe = aggregation.safe_gather_index(idx, x.shape[0])
+        keys = common.cohort_keys(key, x.shape[0], safe)
+        updated, _ = local(gather_rows(params, safe), x[safe], y[safe],
+                           None, keys=keys)
         if streams is None:
-            mixed = aggregation.user_centric_cohort(updated, w, cohort,
-                                                    impl=kernel_impl)
+            rows = aggregation.masked_cohort_matrix(w, idx, mask)
+            n_streams = jnp.sum(mask)
         else:
-            mixed = aggregation.clustered_cohort(updated, w, labels, streams,
-                                                 cohort, impl=kernel_impl)
-        return scatter_rows(params, cohort, mixed)
+            rows = aggregation.masked_clustered_rows(w, labels, streams,
+                                                     idx, mask)
+            # only the clusters actually represented in the cohort put a
+            # centroid model on the downlink
+            oc = jnp.take(onehot, safe, axis=0) * mask[:, None]
+            n_streams = jnp.sum(jnp.max(oc, axis=0) > 0)
+        new = aggregation.mix_scatter(params, updated, rows, idx, mask,
+                                      impl=kernel_impl)
+        return new, n_streams
 
-    def round(state, data, key, cohort=None):
-        if cohort is None:
-            new = _round(state["params"], state["W"], state["labels"],
-                         data.x, data.y, key, state["streams"])
-            active = data.num_clients
-            streams = state["streams"] or active
-        else:
-            cohort = jnp.asarray(cohort)
-            new = _round_cohort(state["params"], state["W"], state["labels"],
-                                cohort, data.x, data.y, key, state["streams"])
-            active = int(cohort.shape[0])
-            if state["streams"]:
-                # only the clusters actually represented in the cohort put
-                # a centroid model on the downlink
-                streams = int(np.unique(
-                    np.asarray(state["labels"])[np.asarray(cohort)]).size)
-            else:
-                streams = active
-        state = dict(state, params=new)
-        return state, {"streams": streams, "cohort_size": active}
+    def dense(state, data, key):
+        new = _round(state["params"], state["W"], state["labels"],
+                     data.x, data.y, key, state["streams"])
+        return dict(state, params=new), {
+            "streams": state["streams"] or data.num_clients}
+
+    def masked(state, data, key, idx, mask):
+        new, n_streams = _masked(state["params"], state["W"],
+                                 state["labels"], state["cluster_onehot"],
+                                 idx, mask, data.x, data.y, key,
+                                 state["streams"])
+        return dict(state, params=new), {"streams": n_streams}
 
     scheme = "unicast" if num_streams is None else "groupcast"
     return Strategy(
         name="ucfl" if num_streams is None else f"ucfl_k{num_streams}",
-        init=init, round=round, eval_params=lambda s: s["params"],
-        comm_scheme=scheme,
+        init=init, round=common.cohort_round(dense, masked,
+                                             masked_jit=_masked),
+        eval_params=lambda s: s["params"], comm_scheme=scheme,
         num_streams=None if num_streams in (None, "auto") else num_streams,
     )
 
@@ -148,7 +173,7 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         m = data.num_clients
         collab = compute_collaboration(
             apply_fn, params0, data, var_batch_size=var_batch_size,
-            impl=kernel_impl,
+            impl=kernel_impl, chunk_size=cfg.chunk_size,
         )
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (m,) + x.shape) + 0.0, params0
@@ -175,26 +200,28 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             lambda u: jnp.einsum("ij,ij...->i...", w, u), all_updates
         )
 
-    @jax.jit
-    def _round_cohort(params, w, cohort, x, y, key):
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def _masked(params, w, idx, mask, x, y, key):
         # Only cohort clients compute, but they still optimize ALL m stream
         # models (the defining m× cost of this upper bound); every stream
-        # mixes over the cohort's uploads with renormalized weights.
+        # mixes over the cohort's uploads with masked renormalized weights
+        # (pad slots carry zero weight).
         m = jax.tree.leaves(params)[0].shape[0]
-        c = cohort.shape[0]
-        xc, yc = x[cohort], y[cohort]
+        c = idx.shape[0]
+        safe = aggregation.safe_gather_index(idx, x.shape[0])
+        xc, yc = x[safe], y[safe]
 
         def per_stream(stream_params, skey):
             return local(
                 jax.tree.map(
                     lambda p: jnp.broadcast_to(p, (c,) + p.shape), stream_params
                 ),
-                xc, yc, skey,
+                xc, yc, None, keys=common.cohort_keys(skey, m, safe),
             )[0]
 
         keys = jax.random.split(key, m)
         all_updates = jax.vmap(per_stream)(params, keys)  # leaves (i=m, j=c, ...)
-        wc, alive = aggregation.cohort_column_mixing(w, cohort)  # (m, c), (m,)
+        wc, alive = aggregation.masked_column_mixing(w, idx, mask)  # (m, c)
         mixed = jax.tree.map(
             lambda u: jnp.einsum("ij,ij...->i...", wc, u), all_updates
         )
@@ -207,22 +234,20 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             mixed, params,
         )
 
-    def round(state, data, key, cohort=None):
-        if cohort is None:
-            new = _round(state["params"], state["W"], data.x, data.y, key)
-            active = data.num_clients
-        else:
-            cohort = jnp.asarray(cohort)
-            new = _round_cohort(state["params"], state["W"], cohort,
-                                data.x, data.y, key)
-            active = int(cohort.shape[0])
+    def dense(state, data, key):
+        new = _round(state["params"], state["W"], data.x, data.y, key)
+        return dict(state, params=new), {"streams": data.num_clients}
+
+    def masked(state, data, key, idx, mask):
         # streams stays m even under a cohort: every participant downloads
         # ALL m stream models to optimize them (the m x cost that makes
         # this the upper bound), so m distinct models hit the downlink.
-        return dict(state, params=new), {"streams": data.num_clients,
-                                         "cohort_size": active}
+        new = _masked(state["params"], state["W"], idx, mask,
+                      data.x, data.y, key)
+        return dict(state, params=new), {"streams": data.num_clients}
 
     return Strategy(
-        name="ucfl_parallel", init=init, round=round,
+        name="ucfl_parallel", init=init,
+        round=common.cohort_round(dense, masked, masked_jit=_masked),
         eval_params=lambda s: s["params"], comm_scheme="unicast",
     )

@@ -119,8 +119,13 @@ def make_federated_local_sgd(apply_fn, *, chunk_size=None, **kw):
     local = make_local_sgd(apply_fn, **kw)
     run = client_vmap(local, chunk_size=chunk_size)
 
-    def fed(stacked_params, x, y, key, hook_state=None):
-        keys = jax.random.split(key, x.shape[0])
+    def fed(stacked_params, x, y, key, hook_state=None, *, keys=None):
+        # ``keys`` overrides the default split(key, m) per-row derivation
+        # with precomputed per-row keys — the masked cohort engine passes
+        # client-indexed keys so a slot's randomness is independent of the
+        # cohort's slot count (padding invariance).
+        if keys is None:
+            keys = jax.random.split(key, x.shape[0])
         return run(stacked_params, x, y, keys, hook_state)
 
     return fed
@@ -142,10 +147,18 @@ def minibatch_gradients(apply_fn, stacked_params, xb, yb):
 
 
 def evaluate(apply_fn, stacked_params, x_test, y_test, *, batch=None):
-    """Per-client test accuracy. Returns (m,) accuracies."""
+    """Per-client test accuracy. Returns (m,) accuracies.
+
+    ``batch`` bounds the client axis via :func:`client_vmap`'s
+    ``chunk_size`` path: accuracies are computed as a sequential
+    ``lax.map`` over chunks of that many clients, so peak activation
+    memory is O(batch · test_set) instead of O(m · test_set). ``None``
+    keeps the fully-parallel vmap (identical results either way).
+    """
 
     def acc_one(params, x, y):
         logits = apply_fn(params, x)
         return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
 
-    return jax.vmap(acc_one)(stacked_params, x_test, y_test)
+    return client_vmap(acc_one, chunk_size=batch)(stacked_params, x_test,
+                                                  y_test)

@@ -4,9 +4,21 @@ The paper's aggregation rules (Eq. 8/9) assume every client uploads every
 round; real communication-constrained deployments sample a small *cohort*
 per round. This module owns that policy: a :class:`ParticipationConfig`
 describes how many clients participate and how they are drawn, and
-:func:`sample_cohort` turns it into a sorted index array the round engine
-threads through every layer (client gather -> local SGD -> cohort-sliced
-aggregation -> scatter back into the stacked state).
+:func:`sample_cohort` turns it into a :class:`Cohort` — a **fixed-shape**
+``(indices, mask)`` pair the round engine threads through every layer
+(masked gather -> chunked local SGD -> masked mix -> fused scatter).
+
+Fixed-shape contract
+--------------------
+Every cohort has exactly ``resolve_size(m)`` slots, so jit compiles the
+round ONCE for a participation policy — including the ``availability``
+sampler, whose eligible set varies per round. Slots beyond the real
+members are *pad slots*: ``indices`` holds the out-of-range sentinel
+``m`` there and ``mask`` is False, so pad slots are gathered safely
+(index clamped), carry zero weight in every masked aggregation rule, and
+are dropped by the scatter. Real members occupy a sorted prefix of
+``indices`` with ``mask`` True, which keeps the per-slot PRNG keys of a
+padded cohort identical to the unpadded cohort's (bit-exactness).
 
 Samplers
 --------
@@ -23,22 +35,14 @@ Samplers
     models.
 ``availability``
     Clients are only eligible when their availability trace says so; the
-    cohort is drawn uniformly from the eligible set (truncated when fewer
-    than ``cohort_size`` clients are up; an empty cohort — nobody online —
-    makes the engine skip the round entirely). The trace is an
-    (m, period) boolean array, cycled over rounds — e.g. diurnal device
-    availability.
+    cohort is drawn uniformly from the eligible set and padded with
+    masked slots when fewer than ``cohort_size`` clients are up (an
+    all-masked cohort — nobody online — makes the engine skip the round
+    entirely). The trace is an (m, period) boolean array, cycled over
+    rounds — e.g. diurnal device availability.
 
 Full participation (``fraction=1.0``, the default) is represented by a
 ``None`` cohort so the engine can keep the legacy dense path bit-exact.
-
-The cohort size is *fixed* across rounds (jit recompiles only once):
-``cohort_size`` wins if given, else ``max(1, round(fraction*m))``. The
-one exception is ``availability``, whose cohort shrinks to the eligible
-set when fewer than ``cohort_size`` clients are up: each *distinct* size
-triggers one extra jit compile of the round (inside the timed region —
-the warm-up only covers round 1's shape). Trace realism is prioritized
-over shape stability here; see ROADMAP for the padded/masked follow-up.
 """
 from __future__ import annotations
 
@@ -48,6 +52,61 @@ import jax
 import numpy as np
 
 SAMPLERS = ("uniform", "weighted", "round_robin", "availability")
+
+
+@dataclasses.dataclass(frozen=True)
+class Cohort:
+    """A fixed-shape padded cohort.
+
+    Attributes:
+      indices: (cohort_size,) int32; real members form a sorted prefix,
+        pad slots hold the out-of-range sentinel ``m``.
+      mask: (cohort_size,) bool; True exactly on the real-member prefix.
+    """
+
+    indices: np.ndarray
+    mask: np.ndarray
+
+    def __post_init__(self):
+        object.__setattr__(self, "indices",
+                           np.asarray(self.indices, np.int32))
+        object.__setattr__(self, "mask", np.asarray(self.mask, bool))
+
+    def __len__(self) -> int:
+        """Number of REAL members (pad slots excluded)."""
+        return int(self.mask.sum())
+
+    @property
+    def num_slots(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def members(self) -> np.ndarray:
+        """The real member indices (sorted, unpadded)."""
+        return self.indices[self.mask]
+
+
+def as_cohort(cohort, m: int) -> Cohort | None:
+    """Normalize a round's cohort argument to the padded contract.
+
+    ``None`` stays None (dense path); a :class:`Cohort` passes through; a
+    plain index array becomes an unpadded all-real Cohort (the PR 1
+    calling convention, kept for tests and direct callers).
+    """
+    if cohort is None or isinstance(cohort, Cohort):
+        return cohort
+    idx = np.asarray(cohort, np.int32)
+    return Cohort(indices=idx, mask=np.ones(idx.shape[0], bool))
+
+
+def _pad(members: np.ndarray, slots: int, m: int) -> Cohort:
+    members = np.sort(np.asarray(members, np.int32))
+    take = members.shape[0]
+    idx = np.full(slots, m, np.int32)
+    idx[:take] = members
+    mask = np.zeros(slots, bool)
+    mask[:take] = True
+    return Cohort(indices=idx, mask=mask)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,7 +153,7 @@ def _rng(cfg: ParticipationConfig, rnd: int) -> np.random.Generator:
 
 
 def sample_cohort(cfg: ParticipationConfig | None, rnd: int, m: int,
-                  n=None) -> np.ndarray | None:
+                  n=None) -> Cohort | None:
     """Draw round ``rnd``'s cohort; ``None`` means everyone participates.
 
     Args:
@@ -104,34 +163,33 @@ def sample_cohort(cfg: ParticipationConfig | None, rnd: int, m: int,
       n: (m,) local dataset sizes, required by the ``weighted`` sampler.
 
     Returns:
-      Sorted int32 index array of the participating clients, or None for
-      the full-participation fast path. All samplers except
-      ``availability`` return exactly ``resolve_size(m)`` indices, so jit
-      sees one static cohort shape across rounds.
+      A :class:`Cohort` with exactly ``resolve_size(m)`` slots, or None
+      for the full-participation fast path. Every sampler emits the same
+      slot count each round, so jit sees ONE static round shape; the
+      ``availability`` sampler masks the slots it cannot fill (an
+      all-masked cohort means nobody was online and the engine skips the
+      round).
     """
     if cfg is None or cfg.is_full(m):
         return None
     c = cfg.resolve_size(m)
     rng = _rng(cfg, rnd)
     if cfg.sampler == "uniform":
-        cohort = rng.choice(m, size=c, replace=False)
+        members = rng.choice(m, size=c, replace=False)
     elif cfg.sampler == "weighted":
         if n is None:
             raise ValueError("weighted sampler needs per-client sizes n")
         p = np.asarray(jax.device_get(n), np.float64)
         p = p / p.sum()
-        cohort = rng.choice(m, size=c, replace=False, p=p)
+        members = rng.choice(m, size=c, replace=False, p=p)
     elif cfg.sampler == "round_robin":
         start = ((rnd - 1) * c) % m
-        cohort = (start + np.arange(c)) % m
+        members = (start + np.arange(c)) % m
     else:  # availability
         trace = np.asarray(cfg.availability, bool)
         up = np.flatnonzero(trace[:, (rnd - 1) % trace.shape[1]])
-        if up.size == 0:  # nobody online: the engine skips this round
-            return np.empty(0, np.int32)
-        take = min(c, up.size)
-        cohort = rng.choice(up, size=take, replace=False)
-    return np.sort(cohort.astype(np.int32))
+        members = rng.choice(up, size=min(c, up.size), replace=False)
+    return _pad(members, c, m)
 
 
 def cohort_schedule(cfg: ParticipationConfig | None, rounds: int, m: int,

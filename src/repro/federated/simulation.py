@@ -1,15 +1,24 @@
 """Federated simulation engine: rounds loop + per-round evaluation.
 
 Partial participation: ``run(..., participation=ParticipationConfig(...))``
-draws a cohort per round (see :mod:`repro.federated.participation`) and
-passes it to ``strategy.round(state, data, key, cohort)``. The cohort
-sampler uses its own numpy seed stream, so the jax round keys — and hence
-the ``fraction=1.0`` trajectory — are identical to the dense engine's.
+draws a fixed-shape padded cohort per round (see
+:mod:`repro.federated.participation`) and passes it to
+``strategy.round(state, data, key, cohort)``. The cohort sampler uses its
+own numpy seed stream, so the jax round keys — and hence the
+``fraction=1.0`` trajectory — are identical to the dense engine's.
+Because every cohort of a policy has the same slot count, the jitted
+round compiles exactly once even when the availability sampler's
+eligible set varies.
 
 Timing: ``strategy.round`` is warmed up once (result discarded) before the
 wall-clock timer starts, so ``History.wall_s`` measures steady-state
 rounds, not XLA compilation. The warm-up key is ``fold_in``-derived and
-does not consume the round key stream.
+does not consume the round key stream; the warm-up runs on a *copy* of
+the state because the cohort round donates its stacked buffers.
+
+Evaluation: ``eval_chunk`` bounds the client axis of the per-round
+accuracy pass with the same ``lax.map`` machinery as training, so eval
+no longer materializes O(m · test_set) activations at once.
 """
 from __future__ import annotations
 
@@ -57,9 +66,25 @@ class History:
         return self.avg_acc[i], self.worst_acc[i]
 
 
+def donation_safe_copy(state):
+    """Copy the device-array leaves so a donating round can't eat them.
+
+    The masked cohort round donates its stacked state buffers
+    (``donate_argnums``), so any caller of ``strategy.round`` that keeps
+    the pre-round state alive — warm-ups, A/B comparisons from one start
+    state, benchmarks — must run the round on a copy. This is the
+    sanctioned helper for that.
+    """
+    return jax.tree.map(
+        lambda x: x.copy() if isinstance(x, jax.Array) else x, state)
+
+
+_donation_safe_copy = donation_safe_copy  # backward-compatible alias
+
+
 def run(strategy, apply_fn, data, key, *, rounds: int, eval_every: int = 1,
         verbose: bool = False, participation: part.ParticipationConfig | None
-        = None, warmup: bool = True) -> History:
+        = None, warmup: bool = True, eval_chunk: int | None = None) -> History:
     m = data.num_clients
     key, ikey = jax.random.split(key)
     state = strategy.init(ikey, data)
@@ -67,18 +92,28 @@ def run(strategy, apply_fn, data, key, *, rounds: int, eval_every: int = 1,
 
     if warmup:  # compile strategy.round outside the timed region
         wcohort = part.sample_cohort(participation, 1, m, data.n)
-        if wcohort is None or len(wcohort):
-            wstate, _ = strategy.round(
-                state, data, jax.random.fold_in(key, 0x5EED), wcohort)
-            jax.block_until_ready(wstate)
-            del wstate
+        if wcohort is not None and len(wcohort) == 0:
+            # round 1 is all-offline; every cohort of a policy shares one
+            # compiled shape, so warm up with a synthetic one-member
+            # cohort of the same slot count instead of skipping (which
+            # would push the compile into the timed region)
+            idx = np.full(wcohort.num_slots, m, np.int32)
+            idx[0] = 0
+            mask = np.zeros(wcohort.num_slots, bool)
+            mask[0] = True
+            wcohort = part.Cohort(indices=idx, mask=mask)
+        wstate, _ = strategy.round(
+            donation_safe_copy(state), data,
+            jax.random.fold_in(key, 0x5EED), wcohort)
+        jax.block_until_ready(wstate)
+        del wstate
 
     t0 = time.time()
 
     def do_eval(rnd, metrics):
         accs = np.asarray(
             evaluate(apply_fn, strategy.eval_params(state), data.x_test,
-                     data.y_test)
+                     data.y_test, batch=eval_chunk)
         )
         hist.rounds.append(rnd)
         hist.avg_acc.append(float(accs.mean()))
@@ -98,8 +133,6 @@ def run(strategy, apply_fn, data, key, *, rounds: int, eval_every: int = 1,
             metrics = {"streams": 0, "cohort_size": 0, "skipped": True}
         else:
             state, metrics = strategy.round(state, data, rkey, cohort)
-            metrics = dict(
-                metrics, cohort_size=m if cohort is None else int(len(cohort)))
         if rnd % eval_every == 0 or rnd == rounds:
             do_eval(rnd, metrics)
     hist.wall_s = time.time() - t0

@@ -4,14 +4,19 @@ Every op picks an implementation:
   * ``impl="pallas"``      — compiled TPU kernel (requires a TPU backend),
   * ``impl="interpret"``   — Pallas interpret mode (CPU, for validation),
   * ``impl="ref"``         — pure-jnp oracle from :mod:`repro.kernels.ref`,
-  * ``impl=None`` (auto)   — pallas on TPU, ref elsewhere.
+  * ``impl=None`` (auto)   — the ``REPRO_KERNEL_IMPL`` env var when set
+    (CI uses it to force interpret mode on CPU), else pallas on TPU and
+    ref elsewhere.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.masked_mix_scatter import masked_mix_scatter_pallas
 from repro.kernels.mix_aggregate import mix_aggregate_pallas
 from repro.kernels.pairwise_delta import gram_pallas
 from repro.kernels.kmeans_assign import kmeans_assign_pallas
@@ -20,6 +25,9 @@ from repro.kernels.kmeans_assign import kmeans_assign_pallas
 def _auto_impl(impl):
     if impl is not None:
         return impl
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        return env
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
@@ -30,6 +38,22 @@ def mix_aggregate(w, theta, *, impl=None, block_d=None):
         return ref.mix_aggregate(w, theta)
     kwargs = {} if block_d is None else {"block_d": block_d}
     return mix_aggregate_pallas(w, theta, interpret=(impl == "interpret"), **kwargs)
+
+
+def masked_mix_scatter(w, theta, idx, mask, full, *, impl=None, block_d=None):
+    """Fused cohort mix + scatter: ``full[idx[i]] = (w @ theta)[i]`` where
+    ``mask[i]``; pad slots (sentinel index, mask 0) are dropped.
+
+    w (c, c); theta (c, d); idx/mask (c,); full (m, d) -> (m, d). The
+    pallas path donates/aliases ``full`` so the stacked state is updated
+    in place — callers must not reuse the input buffer afterwards.
+    """
+    impl = _auto_impl(impl)
+    if impl == "ref":
+        return ref.masked_mix_scatter(w, theta, idx, mask, full)
+    kwargs = {} if block_d is None else {"block_d": block_d}
+    return masked_mix_scatter_pallas(w, theta, idx, mask, full,
+                                     interpret=(impl == "interpret"), **kwargs)
 
 
 def pairwise_delta(g, *, impl=None, block_d=None):

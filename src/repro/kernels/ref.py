@@ -22,6 +22,33 @@ def mix_aggregate(w, theta):
     return out.astype(theta.dtype)
 
 
+def masked_mix_scatter(w, theta, idx, mask, full):
+    """Fused masked cohort mix + scatter (oracle for the Pallas kernel).
+
+    ``out = full`` with ``out[idx[i]] = (w @ theta)[i]`` for every cohort
+    slot whose ``mask[i]`` is set. Pad slots (mask 0) carry an
+    out-of-range sentinel index and are dropped by the scatter; a pad
+    slot with an in-bounds index writes the row's previous value back
+    (identity), so either pad convention is safe.
+
+    Args:
+      w: (c, c) float mixing matrix (row i = slot i's aggregation rule;
+        pad columns must be zero).
+      theta: (c, d) cohort-stacked flat updates.
+      idx: (c,) int target rows in ``full``.
+      mask: (c,) bool, True on real cohort slots.
+      full: (m, d) stacked client state.
+    Returns:
+      (m, d) updated state, in ``full.dtype``.
+    """
+    mixed = jnp.einsum(
+        "ij,jd->id", w.astype(jnp.float32), theta.astype(jnp.float32)
+    ).astype(full.dtype)
+    safe = jnp.minimum(idx, full.shape[0] - 1)
+    upd = jnp.where(mask[:, None], mixed, jnp.take(full, safe, axis=0))
+    return full.at[idx].set(upd, mode="drop")
+
+
 def gram(g):
     """Gram matrix ``G G^T`` of (m, d) stacked gradients, f32 accumulate."""
     g32 = g.astype(jnp.float32)

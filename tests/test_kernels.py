@@ -41,6 +41,64 @@ def test_mix_aggregate_block_sweep(block_d):
                                rtol=1e-5, atol=1e-5)
 
 
+SHAPES_SCATTER = [(8, 3, 128), (16, 6, 300), (9, 4, 513), (32, 5, 2048),
+                  (8, 8, 777)]
+
+
+def _scatter_case(m, c, d, pads, rng):
+    w = jnp.asarray(rng.normal(size=(c, c)).astype(np.float32))
+    if pads:
+        w = w * jnp.asarray(np.arange(c) < c - pads, np.float32)[None, :]
+    theta = jnp.asarray(rng.normal(size=(c, d)).astype(np.float32))
+    full = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    real = np.sort(rng.choice(m, size=c - pads, replace=False))
+    idx = jnp.asarray(np.concatenate([real, [m] * pads]).astype(np.int32))
+    mask = jnp.asarray(np.arange(c) < c - pads)
+    return w, theta, idx, mask, full, real
+
+
+@pytest.mark.parametrize("m,c,d", SHAPES_SCATTER)
+@pytest.mark.parametrize("pads", [0, 2])
+def test_masked_mix_scatter_matches_oracle(m, c, d, pads):
+    if pads >= c:
+        pytest.skip("needs at least one real slot")
+    rng = np.random.default_rng(m * 100 + c + pads)
+    w, theta, idx, mask, full, real = _scatter_case(m, c, d, pads, rng)
+    # ref first: the pallas path donates `full` on backends that support
+    # buffer donation
+    want = ref.masked_mix_scatter(w, theta, idx, mask, full)
+    got = ops.masked_mix_scatter(w, theta, idx, mask, jnp.array(full),
+                                 impl="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_masked_mix_scatter_untouched_rows_identical():
+    """Rows outside the cohort never move — bit-identical, not just close."""
+    rng = np.random.default_rng(0)
+    m, c, d = 16, 5, 300
+    w, theta, idx, mask, full, real = _scatter_case(m, c, d, 1, rng)
+    before = np.asarray(full).copy()
+    out = np.asarray(ops.masked_mix_scatter(w, theta, idx, mask,
+                                            jnp.array(full),
+                                            impl="interpret"))
+    absent = np.setdiff1d(np.arange(m), real)
+    np.testing.assert_array_equal(out[absent], before[absent])
+    assert np.abs(out[real] - before[real]).max() > 0
+
+
+def test_masked_mix_scatter_equals_mix_then_scatter():
+    """The fusion must equal mix_aggregate + row scatter on real slots."""
+    rng = np.random.default_rng(3)
+    m, c, d = 12, 4, 257
+    w, theta, idx, mask, full, real = _scatter_case(m, c, d, 0, rng)
+    mixed = np.asarray(ref.mix_aggregate(w, theta))
+    want = np.asarray(full).copy()
+    want[real] = mixed
+    got = np.asarray(ref.masked_mix_scatter(w, theta, idx, mask, full))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
 @pytest.mark.parametrize("m,d", [(2, 64), (8, 500), (16, 4096), (9, 129)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_pairwise_delta_matches_oracle(m, d, dtype):

@@ -1,0 +1,231 @@
+"""Fixed-shape masked cohort engine tests.
+
+Covers the PR 2 guarantees:
+  (a) a padded cohort (masked sentinel slots) reproduces the unpadded
+      cohort round bit-for-bit for all 11 strategies — pad columns carry
+      exact zero weight and per-slot PRNG keys are client-indexed, so
+      padding cannot perturb a real slot. (On CPU the comparison is
+      exact; f32 associativity could in principle differ on backends
+      that tile reductions differently — if this ever trips on an
+      accelerator, the documented fallback is allclose at 1e-6.)
+
+      Documented PRNG change: PR 1 derived a cohort's per-client keys as
+      split(key, c) — a function of the cohort SIZE, which is
+      incompatible with shape-stable padding (split is not prefix-stable
+      in its count). The engine now uses client-indexed keys,
+      split(key, m)[cohort], so partial-cohort trajectories intentionally
+      differ from PR 1's; what is preserved bit-for-bit is (i) the dense
+      fraction=1.0 path, (ii) full-cohort == dense (now exact, it was
+      only allclose in PR 1), and (iii) padded == unpadded within the
+      new engine.
+  (b) ONE round compilation across an availability trace whose
+      eligible-set size varies (the pre-padding engine re-jitted per
+      distinct size, inside the timed region).
+  (c) the chunked collaboration round and chunked evaluation match their
+      monolithic counterparts.
+  (d) the clustered downlink stream count is computed on device and
+      matches the host-side np.unique it replaced.
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import FedConfig, REGISTRY, ucfl
+from repro.data import synthetic
+from repro.federated import client as fedclient
+from repro.federated import simulation
+from repro.federated.participation import Cohort, ParticipationConfig
+from repro.models import lenet
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    key = jax.random.PRNGKey(17)
+    dkey, mkey = jax.random.split(key)
+    data = synthetic.concept_shift(dkey, m=8, n=120, n_test=30,
+                                   num_classes=6, groups=2, hw=(16, 16),
+                                   channels=1, noise=1.0)
+    params0 = lenet.init(mkey, input_hw=(16, 16), channels=1, num_classes=6)
+    cfg = FedConfig(lr=0.1, momentum=0.9, epochs=1, batch_size=40)
+    return data, params0, cfg
+
+
+def _make(name, params0, cfg):
+    if name == "clustered":
+        return ucfl.make_ucfl(lenet.apply, params0, cfg, num_streams=2,
+                              var_batch_size=40)
+    if name in ("ucfl", "ucfl_parallel"):
+        return REGISTRY[name](lenet.apply, params0, cfg, var_batch_size=40)
+    if name in ("scaffold", "pfedme"):
+        return REGISTRY[name](lenet.apply, params0)
+    return REGISTRY[name](lenet.apply, params0, cfg)
+
+
+def _leaves(strat, state):
+    return [np.asarray(x) for x in jax.tree.leaves(strat.eval_params(state))]
+
+
+# ------------------------------------------------------- (a) bit-exactness
+
+@pytest.mark.parametrize("name", sorted(REGISTRY) + ["clustered"])
+def test_padded_cohort_bit_exact_vs_unpadded(name):
+    """Pad slots must be invisible: same members, extra masked sentinel
+    slots, identical results — bit-for-bit."""
+    data, params0, cfg = _setup()
+    strat = _make(name, params0, cfg)
+    state = strat.init(jax.random.PRNGKey(3), data)
+    rkey = jax.random.PRNGKey(101)
+    members = np.asarray([1, 4, 6], np.int32)
+    padded = Cohort(indices=np.asarray([1, 4, 6, 8, 8], np.int32),
+                    mask=np.asarray([1, 1, 1, 0, 0], bool))
+    # the masked round donates its stacked buffers: run each variant on a
+    # copy of the shared start state
+    s_u, m_u = strat.round(simulation.donation_safe_copy(state), data,
+                           rkey, members)
+    s_p, m_p = strat.round(simulation.donation_safe_copy(state), data,
+                           rkey, padded)
+    assert m_u["cohort_size"] == m_p["cohort_size"] == 3
+    for a, b in zip(_leaves(strat, s_u), _leaves(strat, s_p)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_padded_full_cohort_matches_dense_exactly():
+    """A full-membership cohort reproduces the dense path EXACTLY for the
+    fedavg family: client-indexed slot keys equal the dense split(key, m)."""
+    data, params0, cfg = _setup()
+    strat = _make("fedavg", params0, cfg)
+    state = strat.init(jax.random.PRNGKey(3), data)
+    rkey = jax.random.PRNGKey(101)
+    s_d, _ = strat.round(simulation.donation_safe_copy(state), data, rkey)
+    s_f, _ = strat.round(simulation.donation_safe_copy(state), data, rkey,
+                         np.arange(data.num_clients, dtype=np.int32))
+    for a, b in zip(_leaves(strat, s_d), _leaves(strat, s_f)):
+        np.testing.assert_array_equal(a, b)
+
+
+# --------------------------------------------------- (b) recompile guard
+
+@pytest.mark.parametrize("name", ["fedavg", "ucfl"])
+def test_availability_trace_compiles_round_exactly_once(name):
+    """Varying eligible-set sizes (4, 2, 8, ... of cohort_size=4) must hit
+    ONE compiled masked-round shape thanks to the padded slots."""
+    data, params0, cfg = _setup()
+    m = data.num_clients
+    trace = np.zeros((m, 3), bool)
+    trace[:4, 0] = True   # 4 eligible
+    trace[:2, 1] = True   # 2 eligible (padded)
+    trace[:, 2] = True    # 8 eligible (subsampled to 4)
+    part = ParticipationConfig(cohort_size=4, sampler="availability",
+                               availability=trace)
+    strat = _make(name, params0, cfg)
+    assert strat.round.masked_jit is not None
+    h = simulation.run(strat, lenet.apply, data, jax.random.PRNGKey(1),
+                       rounds=6, eval_every=6, participation=part)
+    sizes = [mt["cohort_size"] for mt in h.metrics]
+    assert h.metrics[-1]["cohort_size"] in (2, 4)
+    assert strat.round.masked_jit._cache_size() == 1, sizes
+
+
+def test_warmup_covers_empty_first_phase():
+    """An all-offline round 1 must not skip the warm-up: the engine warms
+    a synthetic one-member cohort of the same slot shape, so the first
+    real round hits an already-compiled masked round."""
+    data, params0, cfg = _setup()
+    m = data.num_clients
+    trace = np.zeros((m, 3), bool)
+    trace[:3, 1] = True   # phase 0 all-offline, phase 1 has 3 up
+    trace[:, 2] = True
+    part = ParticipationConfig(cohort_size=4, sampler="availability",
+                               availability=trace)
+    strat = _make("fedavg", params0, cfg)
+    h = simulation.run(strat, lenet.apply, data, jax.random.PRNGKey(1),
+                       rounds=3, eval_every=3, participation=part)
+    assert h.metrics[-1]["cohort_size"] == 4
+    assert strat.round.masked_jit._cache_size() == 1
+
+
+# ------------------------------------------- (c) chunked collab and eval
+
+def test_chunked_collaboration_matches_monolithic():
+    data, params0, _ = _setup()
+    mono = ucfl.compute_collaboration(lenet.apply, params0, data,
+                                      var_batch_size=40)
+    for chunk in (3, 4, 8):
+        chunked = ucfl.compute_collaboration(lenet.apply, params0, data,
+                                             var_batch_size=40,
+                                             chunk_size=chunk)
+        for key in ("full_grads", "sigma_sq", "delta", "W"):
+            np.testing.assert_allclose(np.asarray(chunked[key]),
+                                       np.asarray(mono[key]),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_chunked_evaluate_matches_vmap():
+    data, params0, _ = _setup()
+    stacked = jax.tree.map(
+        lambda x: jax.numpy.broadcast_to(
+            x, (data.num_clients,) + x.shape) + 0.0, params0)
+    dense = np.asarray(fedclient.evaluate(lenet.apply, stacked, data.x_test,
+                                          data.y_test))
+    for batch in (3, 4, 8, 16):
+        chunked = np.asarray(fedclient.evaluate(
+            lenet.apply, stacked, data.x_test, data.y_test, batch=batch))
+        np.testing.assert_array_equal(dense, chunked)
+
+
+def test_fedavg_masked_mix_empty_cohort_keeps_previous_model():
+    """An all-masked cohort must not NaN/zero the state: zero weight mass
+    falls back to the previous model (the engine skips such rounds, but
+    direct strategy.round callers get safe semantics too)."""
+    from repro.core.baselines.common import fedavg_masked_mix
+    import jax.numpy as jnp
+
+    m, c = 6, 3
+    rng = np.random.default_rng(1)
+    params = {"w": jnp.asarray(rng.normal(size=(m, 4)).astype(np.float32))}
+    updated = {"w": jnp.asarray(rng.normal(size=(c, 4)).astype(np.float32))}
+    idx = jnp.full((c,), m, jnp.int32)     # all sentinel
+    mask = jnp.zeros((c,), bool)
+    n = jnp.ones((m,), jnp.float32)
+    out = fedavg_masked_mix(params, updated, idx, mask, n)["w"]
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(params["w"]))
+
+
+def test_fedavg_masked_mix_weights_by_global_n():
+    """Regression: sentinel clamping must use n's length (m), not the
+    cohort-stacked params' leading axis — pFedMe passes cohort-stacked
+    local copies as params, and clamping against c mis-gathered n."""
+    from repro.core.baselines.common import fedavg_masked_mix
+    import jax.numpy as jnp
+
+    m, c = 8, 3
+    rng = np.random.default_rng(0)
+    n = jnp.asarray(np.r_[np.ones(m - 1), 100.0].astype(np.float32))
+    idx = jnp.asarray([2, 5, 7], jnp.int32)  # client 7 holds ~97% of n mass
+    mask = jnp.ones(c, bool)
+    updated = {"w": jnp.asarray(rng.normal(size=(c, 4)).astype(np.float32))}
+    cohort_params = {"w": jnp.zeros((c, 4), jnp.float32)}
+    out = fedavg_masked_mix(cohort_params, updated, idx, mask, n)["w"]
+    wts = np.asarray(n)[np.asarray(idx)]
+    want = np.tensordot(wts / wts.sum(), np.asarray(updated["w"]), axes=(0, 0))
+    assert out.shape == (c, 4)  # broadcast to the params' leading axis
+    for i in range(c):
+        np.testing.assert_allclose(np.asarray(out)[i], want, rtol=1e-5,
+                                   atol=1e-6)
+
+
+# ------------------------------------------ (d) device-side stream count
+
+def test_clustered_streams_counted_on_device():
+    data, params0, cfg = _setup()
+    strat = _make("clustered", params0, cfg)
+    state = strat.init(jax.random.PRNGKey(3), data)
+    labels = np.asarray(state["labels"])
+    cohort = np.asarray([0, 3, 5], np.int32)
+    _, metrics = strat.round(simulation.donation_safe_copy(state), data,
+                             jax.random.PRNGKey(5), cohort)
+    want = np.unique(labels[cohort]).size
+    assert isinstance(metrics["streams"], jax.Array)  # no host sync in-round
+    assert int(metrics["streams"]) == want

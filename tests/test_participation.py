@@ -94,20 +94,22 @@ def test_uniform_sampler_contract():
     cfg = ParticipationConfig(fraction=0.25)
     for rnd in range(1, 6):
         c = sample_cohort(cfg, rnd, 32)
-        assert c.shape == (8,) and c.dtype == np.int32
-        assert (np.diff(c) > 0).all()  # sorted, unique
-        assert c.min() >= 0 and c.max() < 32
+        assert c.num_slots == 8 and len(c) == 8  # no pad slots needed
+        assert c.indices.dtype == np.int32 and c.mask.all()
+        assert (np.diff(c.members) > 0).all()  # sorted, unique
+        assert c.members.min() >= 0 and c.members.max() < 32
     # reproducible for a fixed round, different across rounds
-    np.testing.assert_array_equal(sample_cohort(cfg, 3, 32),
-                                  sample_cohort(cfg, 3, 32))
-    assert not np.array_equal(sample_cohort(cfg, 1, 32),
-                              sample_cohort(cfg, 2, 32))
+    np.testing.assert_array_equal(sample_cohort(cfg, 3, 32).indices,
+                                  sample_cohort(cfg, 3, 32).indices)
+    assert not np.array_equal(sample_cohort(cfg, 1, 32).indices,
+                              sample_cohort(cfg, 2, 32).indices)
 
 
 def test_weighted_sampler_biases_by_n():
     cfg = ParticipationConfig(cohort_size=4, sampler="weighted")
     n = np.asarray([1.0] * 15 + [1000.0])
-    hits = sum(15 in sample_cohort(cfg, r, 16, n) for r in range(1, 101))
+    hits = sum(15 in sample_cohort(cfg, r, 16, n).members
+               for r in range(1, 101))
     assert hits > 95  # client 15 holds ~98.5% of the mass
 
 
@@ -115,7 +117,7 @@ def test_round_robin_covers_everyone():
     cfg = ParticipationConfig(cohort_size=3, sampler="round_robin")
     seen = set()
     for rnd in range(1, 5):  # ceil(10/3) = 4 rounds for full coverage
-        seen.update(sample_cohort(cfg, rnd, 10).tolist())
+        seen.update(sample_cohort(cfg, rnd, 10).members.tolist())
     assert seen == set(range(10))
 
 
@@ -125,17 +127,34 @@ def test_availability_sampler_respects_trace():
     trace[3:, 1] = True  # clients 3..5 up on odd phases
     cfg = ParticipationConfig(cohort_size=2, sampler="availability",
                               availability=trace)
-    assert set(sample_cohort(cfg, 1, 6)) <= {0, 1, 2}  # (rnd-1)%2 == 0
-    assert set(sample_cohort(cfg, 2, 6)) <= {3, 4, 5}
+    assert set(sample_cohort(cfg, 1, 6).members) <= {0, 1, 2}  # (rnd-1)%2==0
+    assert set(sample_cohort(cfg, 2, 6).members) <= {3, 4, 5}
+
+
+def test_availability_pads_to_fixed_shape():
+    """Short eligible sets are padded with masked sentinel slots, so every
+    round presents ONE static cohort shape to jit."""
+    trace = np.zeros((8, 2), bool)
+    trace[:2, 0] = True   # only 2 of 8 up on phase 0
+    trace[:, 1] = True    # everyone up on phase 1
+    cfg = ParticipationConfig(cohort_size=5, sampler="availability",
+                              availability=trace)
+    short, full = sample_cohort(cfg, 1, 8), sample_cohort(cfg, 2, 8)
+    assert short.num_slots == full.num_slots == 5
+    assert len(short) == 2 and len(full) == 5
+    np.testing.assert_array_equal(short.indices[2:], [8, 8, 8])  # sentinel m
+    np.testing.assert_array_equal(short.mask, [1, 1, 0, 0, 0])
+    np.testing.assert_array_equal(short.members, [0, 1])
 
 
 def test_availability_nobody_online_skips_round():
-    """An all-offline phase yields an empty cohort and the engine idles."""
+    """An all-offline phase yields an all-masked cohort and the engine
+    idles."""
     trace = np.zeros((8, 2), bool)
     trace[:, 0] = True  # everyone up on phase 0, nobody on phase 1
     cfg = ParticipationConfig(cohort_size=3, sampler="availability",
                               availability=trace)
-    assert sample_cohort(cfg, 2, 8).size == 0
+    assert len(sample_cohort(cfg, 2, 8)) == 0
 
     data, params0, fcfg = _setup()
     strat = _make("fedavg", params0, fcfg)
@@ -162,17 +181,19 @@ def test_absent_clients_keep_last_model():
     data, params0, cfg = _setup()
     strat = _make("ucfl", params0, cfg)
     state = strat.init(jax.random.PRNGKey(3), data)
-    before = strat.eval_params(state)
+    # snapshot to host BEFORE the round: the masked round donates the
+    # stacked-params buffer, so the device copy dies with the call
+    before = [np.asarray(leaf) for leaf in
+              jax.tree.leaves(strat.eval_params(state))]
     cohort = np.asarray([1, 4, 6], np.int32)
     absent = np.asarray([0, 2, 3, 5, 7])
     new_state, metrics = strat.round(state, data, jax.random.PRNGKey(5),
                                      cohort)
     after = strat.eval_params(new_state)
     assert metrics["cohort_size"] == 3
-    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
-        np.testing.assert_array_equal(np.asarray(a)[absent],
-                                      np.asarray(b)[absent])
-        assert np.abs(np.asarray(a)[cohort] - np.asarray(b)[cohort]).max() > 0
+    for a, b in zip(before, jax.tree.leaves(after)):
+        np.testing.assert_array_equal(a[absent], np.asarray(b)[absent])
+        assert np.abs(a[cohort] - np.asarray(b)[cohort]).max() > 0
 
 
 def test_partial_run_all_strategies_finite():
