@@ -1,0 +1,62 @@
+"""Benchmark regression gate over ``BENCH_round_engine.json``.
+
+Turns the ROADMAP's shape-stability target into an enforced check: the
+``availability`` regime (eligible-set size varies per round) must stay
+within ``--max-ratio`` (default 1.2) of the fixed-size ``cohort``
+regime's steady-state round time. A ratio above the gate means padded
+availability cohorts stopped reusing the fixed cohort's compiled round
+shape — the regression the fixed-shape masked engine exists to prevent.
+
+Run the benchmark first, then the gate::
+
+    PYTHONPATH=src python benchmarks/run.py --only round_engine
+    PYTHONPATH=src python benchmarks/check_regression.py --max-ratio 1.2
+
+Exit status 0 = within the gate, 1 = regression (or missing/invalid
+JSON). CI's ``bench-smoke`` job runs exactly this pair and uploads the
+JSON as a workflow artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+DEFAULT_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_round_engine.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", type=pathlib.Path, default=DEFAULT_JSON,
+                    help="path to BENCH_round_engine.json")
+    ap.add_argument("--max-ratio", type=float, default=1.2,
+                    help="gate on availability_over_cohort_ratio")
+    args = ap.parse_args(argv)
+
+    try:
+        payload = json.loads(args.json.read_text())
+        ratio = float(payload["availability_over_cohort_ratio"])
+    except (OSError, KeyError, ValueError) as e:
+        print(f"check_regression: cannot read ratio from {args.json}: {e}",
+              file=sys.stderr)
+        return 1
+
+    cohort = payload.get("results", {}).get("cohort", {}).get("round_us")
+    avail = payload.get("results", {}).get("availability", {}).get("round_us")
+    print(f"availability_over_cohort_ratio = {ratio:.3f} "
+          f"(availability {avail} us / cohort {cohort} us; "
+          f"gate <= {args.max_ratio})")
+    if ratio > args.max_ratio:
+        print(f"check_regression: FAIL — ratio {ratio:.3f} exceeds the "
+              f"{args.max_ratio} shape-stability gate (the availability "
+              "sampler's padded cohorts are no longer reusing the fixed "
+              "cohort's compiled round)", file=sys.stderr)
+        return 1
+    print("check_regression: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,12 +5,18 @@ Prints ``name,us_per_call,derived`` CSV rows (per the repo convention).
   PYTHONPATH=src python -m benchmarks.run            # fast scale (CPU)
   PYTHONPATH=src python -m benchmarks.run --full     # paper scale
   PYTHONPATH=src python -m benchmarks.run --only table1,fig4
+  PYTHONPATH=src python benchmarks/run.py ...        # script form works too
 """
 from __future__ import annotations
 
 import argparse
+import pathlib
 import sys
 import time
+
+if __package__ in (None, ""):  # `python benchmarks/run.py` script execution:
+    # put the repo root on sys.path so `from benchmarks import ...` resolves
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 
 def main() -> None:

@@ -52,7 +52,7 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
              min_cluster: int = 4, kernel_impl=None):
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
     def init(key, data):
@@ -145,5 +145,6 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                 {"streams": len(np.unique(assignment[members]))})
 
     return Strategy("cfl", init,
-                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    common.cohort_round(dense, masked, masked_jit=_masked,
+                                        mesh=cfg.mesh),
                     lambda s: s["params"], comm_scheme="groupcast")

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.core import aggregation
 from repro.core.pytree import gather_rows, scatter_rows  # noqa: F401  (re-export)
+from repro.federated import mesh as mesh_lib
 from repro.federated import participation
 
 
@@ -62,7 +63,7 @@ def group_average(stacked, assignment, n, *, impl=None):
 
 # ------------------------------------------------------------------ engine
 
-def cohort_round(dense_fn, masked_fn, *, masked_jit=None):
+def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None):
     """Build ``round(state, data, key, cohort=None)`` from the two paths.
 
     Args:
@@ -76,18 +77,35 @@ def cohort_round(dense_fn, masked_fn, *, masked_jit=None):
         attached to the returned function as ``round.masked_jit`` so
         tests can assert the one-compilation guarantee via
         ``_cache_size()``.
+      mesh: optional client-axis mesh knob (``FedConfig.mesh``; see
+        :mod:`repro.federated.mesh`). Every cohort is padded to a slot
+        count divisible by the shard count before dispatch, so the
+        shard_mapped local-SGD stage inside ``masked_fn`` always sees an
+        evenly partitionable slot axis; the extra sentinel slots are
+        bit-invisible and the padded count is the same every round, so
+        the one-compilation guarantee holds under a fixed mesh.
 
     The returned ``round`` accepts ``cohort=None`` (dense), a
     :class:`~repro.federated.participation.Cohort`, or a plain index
     array (normalized to an unpadded all-real cohort).
     """
+    mesh = mesh_lib.resolve(mesh)
 
     def round(state, data, key, cohort=None):
+        if mesh is not None:
+            # replicate-commit the state so round 1 already enters with
+            # the steady-state input shardings (the round's outputs are
+            # replicated over the mesh) — otherwise jit would compile a
+            # second, post-warm-up entry when round 2 first sees a
+            # committed state. No-op after the first round.
+            state = mesh_lib.commit_replicated(state, mesh)
         cohort = participation.as_cohort(cohort, data.num_clients)
         if cohort is None:
             state, metrics = dense_fn(state, data, key)
             size = data.num_clients
         else:
+            if mesh is not None:
+                cohort = mesh_lib.pad_cohort(cohort, mesh, data.num_clients)
             # idx/mask stay host numpy here (jit converts at dispatch), so
             # wrappers can derive host-side metrics without a device sync
             state, metrics = masked_fn(state, data, key, cohort.indices,
@@ -121,6 +139,15 @@ def make_masked_round(train, mix, *, donate=True):
     ``*args`` is an arbitrary tuple of device arrays (W, labels, n, ...)
     threaded to both closures. ``donate=True`` passes
     ``donate_argnums=(0,)`` so the stacked state is consumed in place.
+
+    Sharding: when the strategy's ``local`` was built with a mesh
+    (``FedConfig.mesh``), ``train`` runs under shard_map with the cohort
+    slots partitioned across devices and its per-slot results
+    all-gathered (see :func:`repro.federated.client.client_vmap`), so
+    ``mix`` — the tiny (c, c) rules and the fused scatter over the
+    host-local (m, d) state — always operates on replicated arrays and
+    needs no sharding awareness. The dispatcher pads slot counts to a
+    shard multiple (:func:`cohort_round`'s ``mesh`` arg).
     """
 
     def body(params, idx, mask, x, y, key, *args):

@@ -22,7 +22,7 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     # global-model update: plain FedAvg local training
     local_global = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
     def ditto_hook(grads, params, center):
@@ -33,7 +33,7 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     local_personal = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, grad_hook=ditto_hook,
-        chunk_size=cfg.chunk_size,
+        chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
     def init(key, data):
@@ -79,6 +79,7 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return {"params": g, "personal": p}, {"streams": 1}
 
     return Strategy(f"ditto_lam{lam}", init,
-                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    common.cohort_round(dense, masked, masked_jit=_masked,
+                                        mesh=cfg.mesh),
                     lambda s: s["personal"], comm_scheme="broadcast",
                     num_streams=1)

@@ -21,7 +21,7 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                 kernel_impl=None):
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
     def init(key, data):
@@ -44,6 +44,7 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return {"params": new}, {"streams": 1}
 
     return Strategy("fedavg", init,
-                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    common.cohort_round(dense, masked, masked_jit=_masked,
+                                        mesh=cfg.mesh),
                     lambda s: s["params"], comm_scheme="broadcast",
                     num_streams=1)

@@ -33,7 +33,7 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                  val_frac: float = 0.2, kernel_impl=None):
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
     loss = make_loss(apply_fn)
 
@@ -99,5 +99,6 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return {"params": new}, {"streams": int(mask.sum())}  # host mask
 
     return Strategy("fedfomo", init,
-                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    common.cohort_round(dense, masked, masked_jit=_masked,
+                                        mesh=cfg.mesh),
                     lambda s: s["params"], comm_scheme="client_mixing")

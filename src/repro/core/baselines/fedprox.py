@@ -21,7 +21,7 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, grad_hook=prox_hook,
-        chunk_size=cfg.chunk_size,
+        chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
     def init(key, data):
@@ -51,6 +51,7 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return {"params": new}, {"streams": 1}
 
     return Strategy(f"fedprox_mu{mu}", init,
-                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    common.cohort_round(dense, masked, masked_jit=_masked,
+                                        mesh=cfg.mesh),
                     lambda s: s["params"], comm_scheme="broadcast",
                     num_streams=1)

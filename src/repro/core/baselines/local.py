@@ -13,7 +13,7 @@ from repro.federated import client as fedclient
 def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
     def init(key, data):
@@ -43,6 +43,7 @@ def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
         return {"params": new}, {"streams": 0}
 
     return Strategy("local", init,
-                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    common.cohort_round(dense, masked, masked_jit=_masked,
+                                        mesh=cfg.mesh),
                     lambda s: s["params"], comm_scheme="broadcast",
                     num_streams=0)

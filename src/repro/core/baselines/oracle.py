@@ -16,7 +16,7 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                 kernel_impl=None):
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
     def init(key, data):
@@ -62,5 +62,6 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return dict(state, params=new), {"streams": streams}
 
     return Strategy("oracle", init,
-                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    common.cohort_round(dense, masked, masked_jit=_masked,
+                                        mesh=cfg.mesh),
                     lambda s: s["params"], comm_scheme="groupcast")

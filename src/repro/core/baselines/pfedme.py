@@ -58,7 +58,8 @@ def make_pfedme(apply_fn, params0,
                                    jax.random.split(key, cfg.epochs))
         return w, phi
 
-    run_clients = client_vmap(client_update, chunk_size=cfg.chunk_size)
+    run_clients = client_vmap(client_update, chunk_size=cfg.chunk_size,
+                              mesh=cfg.mesh)
 
     def init(key, data):
         m = data.num_clients
@@ -102,6 +103,7 @@ def make_pfedme(apply_fn, params0,
         return {"params": w, "personal": phi}, {"streams": 1}
 
     return Strategy("pfedme", init,
-                    common.cohort_round(dense, masked, masked_jit=_masked),
+                    common.cohort_round(dense, masked, masked_jit=_masked,
+                                        mesh=cfg.mesh),
                     lambda s: s["personal"], comm_scheme="broadcast",
                     num_streams=1)

@@ -68,9 +68,19 @@ class FedConfig:
     sequential ``lax.map`` over chunks of that many vmapped clients (see
     :func:`repro.federated.client.make_federated_local_sgd`); ``None``
     keeps the single monolithic vmap.
+
+    ``mesh`` shards the cohort/client axis across devices (see
+    :mod:`repro.federated.mesh`): a 1-D ``jax.sharding.Mesh`` over a
+    ``clients`` axis, an int shard count, or ``"auto"`` for all local
+    devices. Local SGD runs shard_mapped with the cohort slots
+    partitioned across the mesh (``chunk_size`` then chunks *within*
+    each shard) and the cohort dispatcher pads slot counts to a shard
+    multiple; the (c, c) mix and the fused scatter stay replicated.
+    ``None`` keeps the single-device path bit-exact.
     """
     lr: float = 0.1
     momentum: float = 0.9
     epochs: int = 1
     batch_size: int = 50
     chunk_size: int | None = None
+    mesh: Any = None

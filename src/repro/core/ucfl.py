@@ -33,14 +33,16 @@ from repro.federated import client as fedclient
 
 
 def compute_collaboration(apply_fn, params0, data, *, var_batch_size=100,
-                          impl=None, chunk_size=None):
+                          impl=None, chunk_size=None, mesh=None):
     """Run the special pre-training round; returns the dict of §IV-A.
 
     ``chunk_size`` bounds the client axis with the same ``lax.map``
     machinery as local training: each chunk materializes only its own
     (chunk, K, d) minibatch-gradient stack and immediately reduces it to
     the (chunk, d) full gradients + (chunk,) variance estimates, so init
-    memory is O(chunk·K·d) instead of O(m·K·d).
+    memory is O(chunk·K·d) instead of O(m·K·d). ``mesh`` shards the
+    client axis across devices (chunking within each shard) when the
+    shard count divides m.
     """
     loss = fedclient.make_loss(apply_fn)
     grad_fn = jax.grad(loss)
@@ -52,7 +54,7 @@ def compute_collaboration(apply_fn, params0, data, *, var_batch_size=100,
         full = jnp.mean(gmat, axis=0)
         return full, similarity.sigma_sq(gmat, full)
 
-    run = fedclient.client_vmap(one_client, chunk_size=chunk_size)
+    run = fedclient.client_vmap(one_client, chunk_size=chunk_size, mesh=mesh)
     full, sig = run(data.x, data.y)
     delta = similarity.pairwise_delta(full, impl=impl)
     w = similarity.mixing_weights(delta, sig, data.n.astype(jnp.float32))
@@ -71,14 +73,14 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     """
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
     def init(key, data):
         m = data.num_clients
         collab = compute_collaboration(
             apply_fn, params0, data, var_batch_size=var_batch_size,
-            impl=kernel_impl, chunk_size=cfg.chunk_size,
+            impl=kernel_impl, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
         )
         w = collab["W"]
         labels = None
@@ -149,7 +151,8 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     return Strategy(
         name="ucfl" if num_streams is None else f"ucfl_k{num_streams}",
         init=init, round=common.cohort_round(dense, masked,
-                                             masked_jit=_masked),
+                                             masked_jit=_masked,
+                                             mesh=cfg.mesh),
         eval_params=lambda s: s["params"], comm_scheme=scheme,
         num_streams=None if num_streams in (None, "auto") else num_streams,
     )
@@ -166,14 +169,14 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     """
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
-        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size,
+        batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
     def init(key, data):
         m = data.num_clients
         collab = compute_collaboration(
             apply_fn, params0, data, var_batch_size=var_batch_size,
-            impl=kernel_impl, chunk_size=cfg.chunk_size,
+            impl=kernel_impl, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
         )
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (m,) + x.shape) + 0.0, params0
@@ -248,6 +251,7 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
     return Strategy(
         name="ucfl_parallel", init=init,
-        round=common.cohort_round(dense, masked, masked_jit=_masked),
+        round=common.cohort_round(dense, masked, masked_jit=_masked,
+                                  mesh=cfg.mesh),
         eval_params=lambda s: s["params"], comm_scheme="unicast",
     )

@@ -1,2 +1,2 @@
-from repro.federated import client, participation, simulation  # noqa: F401
+from repro.federated import client, mesh, participation, simulation  # noqa: F401
 from repro.federated.participation import ParticipationConfig  # noqa: F401

@@ -12,6 +12,16 @@ C clients each, so peak activation memory is O(C) instead of O(m) while
 per-client results stay identical (same per-client PRNG keys). Use it to
 scale the client axis (or a sampled cohort) to thousands of clients on a
 single host; leave it ``None`` for the fastest fully-parallel path.
+
+Parallel knob: ``make_federated_local_sgd(..., mesh=...)`` shards the
+client/slot axis across a 1-D device mesh (see
+:mod:`repro.federated.mesh`): each device runs the vmapped local SGD on
+its own block of rows under ``shard_map`` and the per-row results are
+all-gathered back, so cohort wall-time scales down with the shard count
+instead of growing linearly with cohort size. ``chunk_size`` composes —
+chunking applies *within* each device's shard. Results match
+``mesh=None`` within float32 round-off (see
+:func:`repro.federated.mesh.shard_clients` for why not bit-exact).
 """
 from __future__ import annotations
 
@@ -19,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.data.loader import epoch_batches
+from repro.federated import mesh as mesh_lib
 from repro.optim import sgd_init, sgd_update
 
 
@@ -72,7 +83,7 @@ def make_local_sgd(apply_fn, *, lr=0.1, momentum=0.9, epochs=1,
     return local_sgd
 
 
-def client_vmap(fn, *, chunk_size=None):
+def client_vmap(fn, *, chunk_size=None, mesh=None):
     """vmap ``fn`` over a shared leading client axis of every argument.
 
     With ``chunk_size=C`` the client axis is instead processed as a
@@ -81,10 +92,23 @@ def client_vmap(fn, *, chunk_size=None):
     peak memory by the chunk instead of the full axis while keeping
     per-client results identical to the monolithic vmap. Arguments that
     are ``None`` (empty pytrees) pass through unmapped.
+
+    With ``mesh`` (a :mod:`repro.federated.mesh` knob: Mesh | int |
+    ``"auto"``) the client axis is partitioned across the mesh's devices
+    under ``shard_map``: each device runs the chunked vmap on its own
+    block and the per-row results are all-gathered back to full
+    replicated arrays (matching the unsharded vmap within f32 round-off;
+    see :func:`repro.federated.mesh.shard_clients`). Chunking applies
+    *within* each shard. An axis not divisible by the shard count falls
+    back to the unsharded path — the cohort engine pads slot counts to a shard
+    multiple (:func:`repro.federated.mesh.pad_cohort`) so the masked
+    round always shards; a dense m that the mesh doesn't divide simply
+    stays single-device.
     """
+    mesh = mesh_lib.resolve(mesh)
     vfn = jax.vmap(fn)
 
-    def mapped(*args):
+    def block(args):
         m = jax.tree.leaves(args)[0].shape[0]
         if chunk_size is None or m <= chunk_size:
             return vfn(*args)
@@ -106,18 +130,26 @@ def client_vmap(fn, *, chunk_size=None):
 
         return unprep(jax.lax.map(lambda chunk: vfn(*chunk), prep(args)))
 
+    def mapped(*args):
+        m = jax.tree.leaves(args)[0].shape[0]
+        if mesh is not None and m % mesh_lib.num_shards(mesh) == 0:
+            return mesh_lib.shard_clients(
+                lambda *local_args: block(local_args), mesh)(*args)
+        return block(args)
+
     return mapped
 
 
-def make_federated_local_sgd(apply_fn, *, chunk_size=None, **kw):
+def make_federated_local_sgd(apply_fn, *, chunk_size=None, mesh=None, **kw):
     """:func:`client_vmap` of ``make_local_sgd`` over the client axis.
 
     Returns fed(stacked_params, x, y, key, hook_state) -> (params, hook_state);
     hook_state leaves, when present, must carry a leading client axis.
-    ``chunk_size`` bounds peak memory (see :func:`client_vmap`).
+    ``chunk_size`` bounds peak memory and ``mesh`` shards the client axis
+    across devices (see :func:`client_vmap`).
     """
     local = make_local_sgd(apply_fn, **kw)
-    run = client_vmap(local, chunk_size=chunk_size)
+    run = client_vmap(local, chunk_size=chunk_size, mesh=mesh)
 
     def fed(stacked_params, x, y, key, hook_state=None, *, keys=None):
         # ``keys`` overrides the default split(key, m) per-row derivation
@@ -146,19 +178,23 @@ def minibatch_gradients(apply_fn, stacked_params, xb, yb):
     return g  # leaves: (m, K, ...)
 
 
-def evaluate(apply_fn, stacked_params, x_test, y_test, *, batch=None):
+def evaluate(apply_fn, stacked_params, x_test, y_test, *, batch=None,
+             mesh=None):
     """Per-client test accuracy. Returns (m,) accuracies.
 
     ``batch`` bounds the client axis via :func:`client_vmap`'s
     ``chunk_size`` path: accuracies are computed as a sequential
     ``lax.map`` over chunks of that many clients, so peak activation
     memory is O(batch · test_set) instead of O(m · test_set). ``None``
-    keeps the fully-parallel vmap (identical results either way).
+    keeps the fully-parallel vmap (identical results). ``mesh`` shards
+    the client axis across devices; logits then match the unsharded
+    pass only within f32 round-off (see :func:`client_vmap`), so a
+    near-tied argmax can in principle flip a prediction.
     """
 
     def acc_one(params, x, y):
         logits = apply_fn(params, x)
         return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
 
-    return client_vmap(acc_one, chunk_size=batch)(stacked_params, x_test,
-                                                  y_test)
+    return client_vmap(acc_one, chunk_size=batch, mesh=mesh)(
+        stacked_params, x_test, y_test)

@@ -1,0 +1,180 @@
+"""Device mesh for sharding the cohort/client axis across devices.
+
+``chunk_size`` bounds single-host memory by running local SGD as a
+*sequential* ``lax.map`` over chunks — cohort wall-time grows linearly
+with cohort size even when devices sit idle. This module adds the
+*parallel* scale axis: a 1-D :class:`jax.sharding.Mesh` over a
+``clients`` axis partitions the padded cohort slots across devices, so
+a cohort of c slots runs local SGD as ``num_shards`` concurrent blocks
+of ``c / num_shards`` slots (each block still chunked by ``chunk_size``
+*within* its shard — the two knobs compose).
+
+Three arrays ride the cohort axis and share one sharding
+(:func:`slot_sharding`): the padded ``Cohort(indices, mask)`` slot
+arrays, the per-slot client-indexed PRNG key batch, and the raveled
+(c, d) update slab. The (m, d) stacked state and the (c, c) per-slot
+mix rules stay replicated: the per-slot updates are all-gathered right
+after local SGD (inside :func:`shard_clients`, used by
+``repro.federated.client.client_vmap``) and the mix + fused
+``masked_mix_scatter`` then run identically on every device's
+host-local copy of the (m, d) state — the mix is tiny next to local
+SGD, and keeping it replicated preserves the donation/aliasing story of
+the unsharded engine unchanged.
+
+Shape contract: ``shard_map`` requires the slot count to divide evenly
+across shards, so :func:`pad_cohort` rounds every cohort up to the next
+multiple of ``num_shards(mesh)`` with sentinel slots (index m, mask
+False) — the exact padding the fixed-shape engine already treats as
+bit-invisible (zero weight in every masked rule, dropped by the
+scatter, client-indexed PRNG keys). A policy's slot count is static, so
+the padded count is static too and the one-compilation guarantee
+survives under a fixed mesh.
+
+Running multi-device on CPU (no accelerator required)::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    JAX_PLATFORMS=cpu python ...
+
+forces 8 host devices (set *before* the first jax import);
+``FedConfig(mesh=8)`` — or ``mesh="auto"`` for all local devices — then
+shards every cohort round 8 ways. This is how CI exercises the mesh
+code path on every PR (the ``multi-device`` job).
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.federated import participation
+
+AXIS = "clients"
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6 top-level API
+    _shard_map = jax.shard_map
+else:  # jax 0.4/0.5: experimental API
+    from jax.experimental.shard_map import shard_map as _shard_map
+# The all-gathered outputs are replicated, but the static replication
+# checker cannot infer that through lax.all_gather — disable it. The
+# kwarg was renamed check_rep -> check_vma independently of the API's
+# promotion to jax.shard_map, so pick the spelling off the actual
+# signature rather than the module location.
+_RELAX = {("check_vma" if "check_vma"
+           in inspect.signature(_shard_map).parameters
+           else "check_rep"): False}
+
+
+def client_mesh(num_shards: int | None = None, *, devices=None):
+    """Build the 1-D ``clients`` mesh over the first ``num_shards`` devices."""
+    if devices is None:
+        devices = jax.devices()
+    if num_shards is None:
+        num_shards = len(devices)
+    if not 1 <= int(num_shards) <= len(devices):
+        raise ValueError(
+            f"need 1 <= num_shards <= {len(devices)} local devices, "
+            f"got {num_shards}")
+    return jax.sharding.Mesh(np.asarray(devices[:int(num_shards)]), (AXIS,))
+
+
+def resolve(mesh):
+    """Normalize the ``FedConfig.mesh`` knob to a Mesh (or None).
+
+    Accepts ``None`` (sharding off), a 1-D :class:`jax.sharding.Mesh`
+    whose single axis enumerates clients, an int shard count, or
+    ``"auto"`` (all local devices).
+    """
+    if mesh is None:
+        return None
+    if isinstance(mesh, jax.sharding.Mesh):
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"client mesh must be 1-D, got axes {mesh.axis_names}")
+        return mesh
+    if mesh == "auto":
+        return client_mesh()
+    return client_mesh(int(mesh))
+
+
+def num_shards(mesh) -> int:
+    return int(mesh.devices.size)
+
+
+def _axis(mesh) -> str:
+    return mesh.axis_names[0]
+
+
+def slot_sharding(mesh) -> NamedSharding:
+    """Sharding of every per-slot array: cohort ``indices``/``mask``, the
+    per-slot key batch, and the raveled (c, d) update slab — axis 0
+    partitioned across the mesh."""
+    return NamedSharding(mesh, P(_axis(mesh)))
+
+
+def replicated_sharding(mesh) -> NamedSharding:
+    """Sharding of the (m, d) stacked state and the (c, c) mix rules."""
+    return NamedSharding(mesh, P())
+
+
+def pad_to_shards(slots: int, shards: int) -> int:
+    """Round a slot count up to the next multiple of the shard count."""
+    return -(-int(slots) // int(shards)) * int(shards)
+
+
+def pad_cohort(cohort: participation.Cohort, mesh,
+               m: int) -> participation.Cohort:
+    """Pad a cohort's slot count to a multiple of the mesh's shard count.
+
+    The extra slots are sentinel pads (index ``m``, mask False) — bit-
+    invisible to the masked engine. No-op when already divisible (in
+    particular for a 1-device mesh).
+    """
+    return participation.pad_slots(
+        cohort, pad_to_shards(cohort.num_slots, num_shards(mesh)), m)
+
+
+def commit_replicated(tree, mesh):
+    """Commit every ``jax.Array`` leaf of ``tree`` to the replicated
+    sharding of ``mesh``.
+
+    The sharded round's outputs are replicated over the mesh, so from
+    round 2 on the state enters the jitted round replicated-committed.
+    Committing the *initial* state the same way keeps every call's input
+    shardings identical — without this, the steady-state input sharding
+    first appears on round 2 and jit compiles the round a second time
+    inside the timed region (the cohort dispatcher calls this; it is a
+    copy-free no-op once the state is already committed). Host (numpy)
+    leaves — e.g. CFL's cluster bookkeeping — are untouched.
+    """
+    sh = replicated_sharding(mesh)
+    return jax.tree.map(
+        lambda x: jax.device_put(x, sh) if isinstance(x, jax.Array) else x,
+        tree)
+
+
+def shard_clients(fn, mesh):
+    """shard_map ``fn`` over the leading client/slot axis of every arg.
+
+    Each device receives its contiguous block of rows and runs ``fn`` on
+    it; the per-row outputs are all-gathered (tiled) back to full
+    arrays, so callers downstream — the (c, c) mix, the fused scatter —
+    see replicated values and need no sharding awareness. This is the
+    "mix after an all-gather of the (c, d) updates" step of the sharded
+    round. Row order is preserved and per-row computation is
+    semantically identical to the unsharded vmap; numerically, results
+    match ``mesh=None`` within float32 round-off (XLA picks reduction
+    tilings per *local* batch shape, so convolution/matmul reductions
+    inside a row can associate differently — observed ulp-level only;
+    sentinel-slot padding itself is bit-exact).
+    """
+    axis = _axis(mesh)
+
+    def body(*args):
+        out = fn(*args)
+        return jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axis, axis=0, tiled=True), out)
+
+    return _shard_map(body, mesh=mesh, in_specs=P(axis), out_specs=P(),
+                      **_RELAX)

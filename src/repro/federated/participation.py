@@ -99,6 +99,25 @@ def as_cohort(cohort, m: int) -> Cohort | None:
     return Cohort(indices=idx, mask=np.ones(idx.shape[0], bool))
 
 
+def pad_slots(cohort: Cohort, slots: int, m: int) -> Cohort:
+    """Extend a cohort with extra sentinel pad slots (index ``m``, mask
+    False) up to ``slots`` total; no-op when already that size.
+
+    Pad slots are bit-invisible to the masked engine (zero weight in
+    every masked rule, dropped by the scatter, client-indexed PRNG
+    keys), so the result is equivalent to the input cohort. The mesh
+    layer uses this to make the slot count divisible by the shard count
+    (:func:`repro.federated.mesh.pad_cohort`).
+    """
+    extra = slots - cohort.num_slots
+    if extra <= 0:
+        return cohort
+    return Cohort(
+        indices=np.concatenate(
+            [cohort.indices, np.full(extra, m, np.int32)]),
+        mask=np.concatenate([cohort.mask, np.zeros(extra, bool)]))
+
+
 def _pad(members: np.ndarray, slots: int, m: int) -> Cohort:
     members = np.sort(np.asarray(members, np.int32))
     take = members.shape[0]

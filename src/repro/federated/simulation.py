@@ -18,7 +18,17 @@ the state because the cohort round donates its stacked buffers.
 
 Evaluation: ``eval_chunk`` bounds the client axis of the per-round
 accuracy pass with the same ``lax.map`` machinery as training, so eval
-no longer materializes O(m · test_set) activations at once.
+no longer materializes O(m · test_set) activations at once; pass
+``eval_mesh`` (typically the same knob as ``FedConfig.mesh``) to shard
+that pass across devices instead.
+
+Sharding: a strategy built with ``FedConfig(mesh=...)`` (see
+:mod:`repro.federated.mesh`) runs its cohort local SGD partitioned
+across devices; the rounds loop itself is mesh-agnostic — the round
+dispatcher pads slot counts to a shard multiple internally, and every
+padded cohort of a policy still has ONE static shape, so the
+one-compilation guarantee and the warm-up logic below hold unchanged
+(sharded results match the unsharded engine within f32 round-off).
 """
 from __future__ import annotations
 
@@ -84,7 +94,8 @@ _donation_safe_copy = donation_safe_copy  # backward-compatible alias
 
 def run(strategy, apply_fn, data, key, *, rounds: int, eval_every: int = 1,
         verbose: bool = False, participation: part.ParticipationConfig | None
-        = None, warmup: bool = True, eval_chunk: int | None = None) -> History:
+        = None, warmup: bool = True, eval_chunk: int | None = None,
+        eval_mesh=None) -> History:
     m = data.num_clients
     key, ikey = jax.random.split(key)
     state = strategy.init(ikey, data)
@@ -113,7 +124,7 @@ def run(strategy, apply_fn, data, key, *, rounds: int, eval_every: int = 1,
     def do_eval(rnd, metrics):
         accs = np.asarray(
             evaluate(apply_fn, strategy.eval_params(state), data.x_test,
-                     data.y_test, batch=eval_chunk)
+                     data.y_test, batch=eval_chunk, mesh=eval_mesh)
         )
         hist.rounds.append(rnd)
         hist.avg_acc.append(float(accs.mean()))
