@@ -1,18 +1,26 @@
 """Benchmark regression gate over ``BENCH_round_engine.json``.
 
-Turns the ROADMAP's shape-stability target into an enforced check: the
-``availability`` regime (eligible-set size varies per round) must stay
-within ``--max-ratio`` (default 1.2) of the fixed-size ``cohort``
-regime's steady-state round time. A ratio above the gate means padded
-availability cohorts stopped reusing the fixed cohort's compiled round
-shape — the regression the fixed-shape masked engine exists to prevent.
+Turns the ROADMAP's engine targets into enforced checks:
+
+  * shape stability — the ``availability`` regime (eligible-set size
+    varies per round) must stay within ``--max-ratio`` (default 1.2) of
+    the fixed-size ``cohort`` regime's steady-state round time. A ratio
+    above the gate means padded availability cohorts stopped reusing the
+    fixed cohort's compiled round shape — the regression the fixed-shape
+    masked engine exists to prevent.
+  * refresh overhead — the ``refresh`` regime (streaming W refresh on,
+    ``FedConfig.w_refresh``) must stay within ``--max-refresh-ratio``
+    (default 1.2) of the plain cohort round. The refresh runs inside the
+    same jitted fixed-shape round; a ratio above the gate means it broke
+    the one-compilation guarantee or grew the round body past the cheap
+    on-device buffer-fold it is specified to be.
 
 Run the benchmark first, then the gate::
 
     PYTHONPATH=src python benchmarks/run.py --only round_engine
     PYTHONPATH=src python benchmarks/check_regression.py --max-ratio 1.2
 
-Exit status 0 = within the gate, 1 = regression (or missing/invalid
+Exit status 0 = within both gates, 1 = regression (or missing/invalid
 JSON). CI's ``bench-smoke`` job runs exactly this pair and uploads the
 JSON as a workflow artifact.
 """
@@ -27,32 +35,48 @@ DEFAULT_JSON = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_round_engine.json"
 
 
+def _gate(payload, key, baseline: str, regime: str, max_ratio: float,
+          why: str) -> bool:
+    """Print one ratio against its gate; True = within the gate."""
+    ratio = float(payload[key])
+    base = payload.get("results", {}).get(baseline, {}).get("round_us")
+    reg = payload.get("results", {}).get(regime, {}).get("round_us")
+    print(f"{key} = {ratio:.3f} ({regime} {reg} us / {baseline} {base} us; "
+          f"gate <= {max_ratio})")
+    if ratio > max_ratio:
+        print(f"check_regression: FAIL — {key} {ratio:.3f} exceeds the "
+              f"{max_ratio} gate ({why})", file=sys.stderr)
+        return False
+    return True
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--json", type=pathlib.Path, default=DEFAULT_JSON,
                     help="path to BENCH_round_engine.json")
     ap.add_argument("--max-ratio", type=float, default=1.2,
                     help="gate on availability_over_cohort_ratio")
+    ap.add_argument("--max-refresh-ratio", type=float, default=1.2,
+                    help="gate on refresh_over_cohort_ratio")
     args = ap.parse_args(argv)
 
     try:
         payload = json.loads(args.json.read_text())
-        ratio = float(payload["availability_over_cohort_ratio"])
+        ok = _gate(payload, "availability_over_cohort_ratio", "cohort",
+                   "availability", args.max_ratio,
+                   "the availability sampler's padded cohorts are no "
+                   "longer reusing the fixed cohort's compiled round")
+        ok &= _gate(payload, "refresh_over_cohort_ratio", "cohort",
+                    "refresh", args.max_refresh_ratio,
+                    "the streaming W refresh is no longer a cheap "
+                    "in-round buffer fold — check for a recompile or a "
+                    "host sync in the refresh path")
     except (OSError, KeyError, ValueError) as e:
-        print(f"check_regression: cannot read ratio from {args.json}: {e}",
+        print(f"check_regression: cannot read ratios from {args.json}: {e}",
               file=sys.stderr)
         return 1
 
-    cohort = payload.get("results", {}).get("cohort", {}).get("round_us")
-    avail = payload.get("results", {}).get("availability", {}).get("round_us")
-    print(f"availability_over_cohort_ratio = {ratio:.3f} "
-          f"(availability {avail} us / cohort {cohort} us; "
-          f"gate <= {args.max_ratio})")
-    if ratio > args.max_ratio:
-        print(f"check_regression: FAIL — ratio {ratio:.3f} exceeds the "
-              f"{args.max_ratio} shape-stability gate (the availability "
-              "sampler's padded cohorts are no longer reusing the fixed "
-              "cohort's compiled round)", file=sys.stderr)
+    if not ok:
         return 1
     print("check_regression: OK")
     return 0

@@ -4,17 +4,52 @@ Trains ucfl + fedavg at several cohort fractions (uniform sampler, plus
 one weighted and one round-robin row) with a client chunk bound, and
 reports accuracy alongside the cohort-aware §V-D round cost — the
 accuracy-vs-wireless-resources trade this PR's engine opens up.
+
+The ``participation/ucfl_w_{stale,refreshed}`` rows replay a
+deterministic LOW-availability trace (a rare tail of clients is up in
+only one phase of the cycle, so their Δ/σ² stats go maximally stale)
+with the streaming W refresh off vs on — same data, same seeds, same
+cohorts. The refreshed run re-estimates W from the uploads the cohort
+already sends, so the row also prints the §V-D per-round uplink bytes of
+both runs: they are identical by construction (the comm-model regression
+test pins this), making the refresh a pure accuracy win on the wireless
+budget.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
+
+import numpy as np
 
 from benchmarks import common
 from repro.core import comm_model as cm
+from repro.core.similarity import RefreshConfig
 from repro.federated.participation import ParticipationConfig
 
 FRACTIONS = (1.0, 0.5, 0.25)
 ALGOS = {"fedavg": ("broadcast", None), "ucfl": ("unicast", None)}
+
+
+def low_availability_trace(m: int, period: int = 4) -> np.ndarray:
+    """Deterministic (m, period) trace with a rarely-available tail.
+
+    The first half of the clients ("reliable") is up in every phase; rare
+    client ``i`` (second half) is up in exactly ONE phase per cycle
+    (``(i − m/2) % period``). The rare tail is therefore sampled a
+    handful of times per run — enough that its personalized model trains
+    at all (a never-sampled client's model never updates, which would
+    make the worst-node comparison vacuous), rare enough that without
+    the streaming refresh its W statistics stay frozen at the special
+    round's θ⁰ estimates between appearances. Splitting by halves (not
+    parity) keeps each rare client's closest collaborators reliable, so
+    the mixes it receives on its rare appearances actually matter.
+    """
+    trace = np.zeros((m, period), bool)
+    trace[: m // 2, :] = True
+    for j, i in enumerate(range(m // 2, m)):
+        trace[i, j % period] = True
+    return trace
 
 
 def run(scale) -> list[str]:
@@ -25,7 +60,8 @@ def run(scale) -> list[str]:
         for frac in FRACTIONS:
             part = (None if frac == 1.0
                     else ParticipationConfig(fraction=frac))
-            c = max(1, round(frac * scale.m))
+            # the config's own (ceil) rule, not a re-derivation of it
+            c = scale.m if part is None else part.resolve_size(scale.m)
             t0 = time.time()
             res = common.run_trials("covariate_label_shift", algo, scale,
                                     participation=part, chunk_size=chunk)
@@ -43,5 +79,27 @@ def run(scale) -> list[str]:
         rows.append(common.csv_row(
             f"participation/ucfl_{sampler}", 0.0,
             f"fraction=0.5;acc={res['avg']:.4f}"))
+        print(rows[-1], flush=True)
+
+    # stale vs refreshed W under a low-availability replay (same data,
+    # seeds, and cohort sequence; only FedConfig.w_refresh differs).
+    # label_shift's graded Dirichlet heterogeneity is where the θ⁰ W is
+    # imperfect enough for staleness to bite (on clean-block concept
+    # shift the special round is already near-perfect and refresh can
+    # only tie); ≥ 12 rounds lets each rare client surface a few times.
+    lscale = dataclasses.replace(scale, rounds=max(12, scale.rounds))
+    c = max(2, lscale.m // 2)
+    avail = ParticipationConfig(
+        cohort_size=c, sampler="availability",
+        availability=low_availability_trace(lscale.m))
+    ul = cm.uplink_bytes_per_round(1, "unicast", lscale.m, cohort_size=c)
+    for label, refresh in (("stale", None), ("refreshed", RefreshConfig())):
+        res = common.run_trials("label_shift", "ucfl", lscale,
+                                participation=avail, chunk_size=chunk,
+                                w_refresh=refresh)
+        rows.append(common.csv_row(
+            f"participation/ucfl_w_{label}", 0.0,
+            f"cohort={c};avail=low;avg={res['avg']:.4f};"
+            f"worst={res['worst']:.4f};ul_models_per_round={ul}"))
         print(rows[-1], flush=True)
     return rows

@@ -11,6 +11,12 @@ Measures the per-round wall time of the jitted round in three regimes:
                          region; the fixed-shape masked engine compiles
                          once, so this should sit within ~1.2x of the
                          fixed-size cohort round.
+  * ``refresh``        — the fixed-size cohort regime with the streaming
+                         W refresh on (``FedConfig.w_refresh``). The
+                         refresh runs inside the same jitted round (one
+                         compiled shape, donated buffers), so it must
+                         also sit within ~1.2x of the plain cohort round
+                         — the second ratio the CI gate enforces.
 
 When the host exposes multiple devices (e.g. under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, the CI
@@ -35,6 +41,7 @@ import jax
 import numpy as np
 
 from benchmarks import common
+from repro.core.similarity import RefreshConfig
 from repro.federated import participation as part
 from repro.federated import simulation
 from repro.models import lenet
@@ -124,6 +131,11 @@ def run(scale) -> list[str]:
     entries = [(name, common.make_strategy("ucfl", params0, s,
                                            chunk_size=chunk), pcfg)
                for name, pcfg in regimes.items()]
+    entries.append(("refresh",
+                    common.make_strategy("ucfl", params0, s,
+                                         chunk_size=chunk,
+                                         w_refresh=RefreshConfig()),
+                    cohort_cfg))
 
     # sharded cohort regimes (only with a multi-device host platform,
     # e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8)
@@ -144,11 +156,11 @@ def run(scale) -> list[str]:
     total_s = time.time() - t0
 
     results, sharded = {}, {}
-    for name, _ in regimes.items():
+    for name in list(regimes) + ["refresh"]:
         results[name] = {"round_us": times[name], "rounds": rounds}
         rows.append(common.csv_row(
             f"round_engine/ucfl_{name}", times[name],
-            f"m={s.m};cohort={cohort if regimes[name] else s.m};"
+            f"m={s.m};cohort={s.m if name == 'dense' else cohort};"
             f"rounds={rounds}"))
         print(rows[-1], flush=True)
     for nshard in shard_counts:
@@ -162,6 +174,8 @@ def run(scale) -> list[str]:
 
     ratio = results["availability"]["round_us"] / \
         max(results["cohort"]["round_us"], 1e-9)
+    refresh_ratio = results["refresh"]["round_us"] / \
+        max(results["cohort"]["round_us"], 1e-9)
     payload = {
         "config": {"m": s.m, "cohort_size": cohort, "rounds": rounds,
                    "model": "lenet", "scenario": "label_shift",
@@ -170,10 +184,15 @@ def run(scale) -> list[str]:
         "results": results,
         "sharded": sharded,
         "availability_over_cohort_ratio": ratio,
+        "refresh_over_cohort_ratio": refresh_ratio,
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
     rows.append(common.csv_row(
         "round_engine/availability_over_cohort", ratio,
+        f"target<=1.2;json={BENCH_JSON.name}"))
+    print(rows[-1], flush=True)
+    rows.append(common.csv_row(
+        "round_engine/refresh_over_cohort", refresh_ratio,
         f"target<=1.2;json={BENCH_JSON.name}"))
     print(rows[-1], flush=True)
     return rows

@@ -246,6 +246,79 @@ def masked_column_mixing(w, idx, mask):
     return cols / jnp.maximum(s, 1e-12), s[:, 0] > 1e-12
 
 
+def masked_ewma_rows(buf, obs, idx, mask, alpha):
+    """EWMA-fold per-slot observations into rows of a running buffer.
+
+    ``buf`` is (m, ...) and ``obs`` is (c, ...): real slot i rewrites row
+    ``idx[i]`` as ``(1−α)·buf + α·obs``; pad slots (sentinel index m,
+    dropped by the scatter; mask False, blend suppressed) leave the
+    buffer untouched. Used by the streaming W refresh for the (m, d)
+    gradient-proxy buffer and the (m,) σ² buffer.
+    """
+    safe = safe_gather_index(idx, buf.shape[0])
+    prev = jnp.take(buf, safe, axis=0)
+    fmask = mask.reshape((-1,) + (1,) * (obs.ndim - 1)).astype(buf.dtype)
+    blended = prev + fmask * alpha * (obs.astype(buf.dtype) - prev)
+    return buf.at[idx].set(blended, mode="drop")
+
+
+def masked_unit_ewma_rows(buf, obs, idx, mask, alpha, eps=1e-12):
+    """:func:`masked_ewma_rows` re-projected onto the unit sphere.
+
+    The streaming refresh keeps its (m, d) gradient-DIRECTION buffer
+    unit-norm (the scale-free statistic space, see
+    :mod:`repro.core.similarity`); a plain EWMA of two unit vectors has
+    norm < 1, which would shrink every subsequent distance against the
+    blended row, so the blend is renormalized before the scatter.
+    """
+    safe = safe_gather_index(idx, buf.shape[0])
+    prev = jnp.take(buf, safe, axis=0)
+    blended = prev + alpha * (obs.astype(buf.dtype) - prev)
+    blended = blended / jnp.maximum(
+        jnp.linalg.norm(blended, axis=-1, keepdims=True), eps)
+    rows = jnp.where(mask[:, None], blended, prev)
+    return buf.at[idx].set(rows, mode="drop")
+
+
+def masked_delta_rows(delta, grads, idx, mask):
+    """Refresh the observed clients' rows AND columns of the Δ buffer.
+
+    Recomputes ``Δ[idx_i, j] = ‖grads[idx_i] − grads[j]‖²`` for every
+    real slot against the full (already refreshed) gradient buffer and
+    scatters it into both the rows and the (symmetric) columns; entries
+    between two absent clients keep their previous value. Both of a
+    cohort pair's entries derive from the same matmul, so the refreshed
+    Δ stays symmetric with a zero diagonal up to matmul round-off (the
+    expansion is clamped at 0; Eq. 9 needs no exact symmetry). Pad slots
+    are dropped by the sentinel-index scatter and masked out of the row
+    values.
+    """
+    m = delta.shape[0]
+    safe = safe_gather_index(idx, m)
+    g = jnp.take(grads, safe, axis=0).astype(jnp.float32)  # (c, d)
+    gm = grads.astype(jnp.float32)  # (m, d)
+    sq = jnp.sum(g * g, axis=-1)[:, None] + \
+        jnp.sum(gm * gm, axis=-1)[None, :] - 2.0 * (g @ gm.T)
+    rows = jnp.maximum(sq, 0.0)  # (c, m); clamp matmul round-off
+    prev = jnp.take(delta, safe, axis=0)
+    rows = jnp.where(mask[:, None], rows, prev)
+    out = delta.at[idx].set(rows, mode="drop")       # observed rows
+    return out.at[:, idx].set(rows.T, mode="drop")   # symmetric columns
+
+
+def staleness_update(stale, idx, mask):
+    """Advance the per-client staleness counters by one cohort round.
+
+    Every client's counter (rounds since its Δ/σ² stats were observed)
+    increments; the real cohort slots then reset to 0. Pad slots are
+    dropped by the sentinel scatter and masked out of the reset.
+    """
+    bumped = stale + 1
+    safe = safe_gather_index(idx, stale.shape[0])
+    reset = jnp.where(mask, 0, jnp.take(bumped, safe))
+    return bumped.at[idx].set(reset, mode="drop")
+
+
 def mix_scatter(full, cohort_updated, rows, idx, mask, *, impl=None):
     """Apply per-slot mixing rows and scatter into the full stacked state.
 

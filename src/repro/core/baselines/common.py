@@ -34,7 +34,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation
+from repro.core import aggregation, similarity
 from repro.core.pytree import gather_rows, scatter_rows  # noqa: F401  (re-export)
 from repro.federated import mesh as mesh_lib
 from repro.federated import participation
@@ -59,6 +59,39 @@ def group_mixing_matrix(assignment, n):
 def group_average(stacked, assignment, n, *, impl=None):
     w = group_mixing_matrix(assignment, n)
     return aggregation.user_centric(stacked, w, impl=impl)
+
+
+# ------------------------------------------------------------ W refresh hook
+
+def w_refresh_hook(refresh_cfg):
+    """Build the in-jit streaming W-refresh step for W-owning strategies.
+
+    Returns ``None`` when the knob is off, else a traceable
+    ``hook(pre_flat, post_flat, refresh, idx, mask, n) -> (refresh', W')``
+    where ``pre_flat``/``post_flat`` are the (c, d) raveled cohort params
+    before/after local SGD (the upload the round already has — refreshing
+    W adds NO uplink bytes). The hook introduces no new shapes, so one
+    compiled round per policy still holds (recompile-guard tested in
+    tests/test_w_refresh.py).
+    """
+    if refresh_cfg is None:
+        return None
+
+    def hook(pre_flat, post_flat, refresh, idx, mask, n):
+        obs = similarity.grad_proxy(pre_flat, post_flat)
+        return similarity.streaming_refresh(refresh, obs, idx, mask, n,
+                                            cfg=refresh_cfg)
+
+    return hook
+
+
+def staleness_metrics(refresh):
+    """Round metrics for the refresh buffers: the per-client staleness
+    counters plus their max/mean (device scalars, like ``streams`` — no
+    host sync in-round)."""
+    stale = refresh["staleness"]
+    return {"staleness": stale, "staleness_max": jnp.max(stale),
+            "staleness_mean": jnp.mean(stale.astype(jnp.float32))}
 
 
 # ------------------------------------------------------------------ engine

@@ -110,6 +110,23 @@ def downlink_bytes_per_round(model_bytes: int, scheme: str, m: int,
     raise ValueError(f"unknown scheme {scheme!r}")
 
 
+def uplink_bytes_per_round(model_bytes: int, scheme: str, m: int,
+                           cohort_size: int | None = None) -> int:
+    """Raw UL payload per round: every active client uploads ONE model.
+
+    This holds for every scheme — broadcast/groupcast/unicast servers and
+    FedFomo-style client mixing all consume exactly one locally-updated
+    model per participant (``ucfl_parallel`` is the deliberate exception,
+    the §V-E upper bound, and is priced by its own m× factor elsewhere).
+    The streaming W refresh (``FedConfig.w_refresh``) re-estimates Δ/σ²
+    from these same c uploads, so refreshed and stale-W runs have
+    IDENTICAL per-round uplink bytes — pinned by a regression test.
+    """
+    if scheme not in ("broadcast", "groupcast", "unicast", "client_mixing"):
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return _active(m, cohort_size) * model_bytes
+
+
 def ici_collective_bytes(model_bytes: int, scheme: str, m: int,
                          num_streams: int | None = None,
                          cohort_size: int | None = None) -> int:

@@ -77,6 +77,16 @@ class FedConfig:
     each shard) and the cohort dispatcher pads slot counts to a shard
     multiple; the (c, c) mix and the fused scatter stay replicated.
     ``None`` keeps the single-device path bit-exact.
+
+    ``w_refresh`` (a :class:`repro.core.similarity.RefreshConfig`, or
+    ``None`` = off) opts the W-owning strategies (ucfl, clustered ucfl,
+    ucfl_parallel) into the streaming W refresh: every masked cohort
+    round folds the cohort's gradient proxies into running Δ/σ² buffers
+    and recomputes W on device, with per-client staleness counters in
+    the round metrics. Off (the default, the paper's compute-W-once
+    rule) keeps every existing trajectory bit-identical; the dense
+    ``cohort=None`` path never refreshes either way. Strategies without
+    a W ignore the knob.
     """
     lr: float = 0.1
     momentum: float = 0.9
@@ -84,3 +94,4 @@ class FedConfig:
     batch_size: int = 50
     chunk_size: int | None = None
     mesh: Any = None
+    w_refresh: Any = None

@@ -16,6 +16,32 @@ compile one round shape, the stacked-params buffer is donated, the PS mix
 runs as one fused ``masked_mix_scatter`` kernel pass, and the downlink
 stream count is computed on device from cluster-membership one-hots
 precomputed at init (no per-round ``np.unique`` host sync).
+
+State layout
+------------
+``init`` returns a dict of stacked device state plus host bookkeeping:
+
+  * ``params`` — (m, ...) client-stacked personalized models;
+  * ``W`` — the (m, m) mixing matrix (static without refresh, replaced
+    every cohort round with refresh on);
+  * ``labels`` / ``cluster_onehot`` / ``streams`` — clustered-variant
+    bookkeeping (labels are fixed at init even under refresh: the
+    downlink group structure stays static so one compiled round and a
+    stable stream count survive — re-clustering is a host-side concern a
+    caller can layer on top);
+  * ``collab`` — the special round's raw statistics (kept for
+    diagnostics/benchmarks; never donated);
+  * ``refresh`` — only with ``FedConfig.w_refresh`` on: the streaming
+    Δ/σ²/gradient-proxy/staleness buffers
+    (:func:`repro.core.similarity.init_refresh_state`).
+
+Donation caveat: the jitted masked round donates BOTH the stacked
+``params`` tree and (when present) the ``refresh`` buffers — they are
+rewritten every cohort round. Callers that keep a pre-round state alive
+must copy it (:func:`repro.federated.simulation.donation_safe_copy`
+copies every ``jax.Array`` leaf, refresh buffers included); ``W`` and
+``collab`` are not donated, so the init-time collaboration statistics
+stay readable for the whole run.
 """
 from __future__ import annotations
 
@@ -70,11 +96,16 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     num_streams: None -> full personalization (m streams, Eq. 8);
                  int k -> clustered with k streams (§IV-B);
                  "auto" -> Alg. 2 silhouette selection.
+
+    ``cfg.w_refresh`` opts the cohort rounds into the streaming W refresh
+    (see :mod:`repro.core.similarity`): the cohort's uploads re-estimate
+    its Δ/σ² statistics and W is recomputed on device before the mix.
     """
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
+    refresh_hook = common.w_refresh_hook(cfg.w_refresh)
 
     def init(key, data):
         m = data.num_clients
@@ -99,8 +130,11 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (m,) + x.shape) + 0.0, params0
         )
-        return {"params": stacked, "W": w, "labels": labels,
-                "cluster_onehot": onehot, "streams": k, "collab": collab}
+        state = {"params": stacked, "W": w, "labels": labels,
+                 "cluster_onehot": onehot, "streams": k, "collab": collab}
+        if refresh_hook is not None:
+            state["refresh"] = similarity.init_refresh_state(collab, m)
+        return state
 
     @functools.partial(jax.jit, static_argnames=("streams",))
     def _round(params, w, labels, x, y, key, streams):
@@ -112,14 +146,7 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                           impl=kernel_impl)
         return mixed
 
-    @functools.partial(jax.jit, static_argnames=("streams",),
-                       donate_argnums=(0,))
-    def _masked(params, w, labels, onehot, idx, mask, x, y, key, streams):
-        # masked gather -> cohort local SGD -> fused masked mix + scatter
-        safe = aggregation.safe_gather_index(idx, x.shape[0])
-        keys = common.cohort_keys(key, x.shape[0], safe)
-        updated, _ = local(gather_rows(params, safe), x[safe], y[safe],
-                           None, keys=keys)
+    def _mix_rows(w, labels, onehot, idx, mask, safe, streams):
         if streams is None:
             rows = aggregation.masked_cohort_matrix(w, idx, mask)
             n_streams = jnp.sum(mask)
@@ -130,29 +157,71 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             # centroid model on the downlink
             oc = jnp.take(onehot, safe, axis=0) * mask[:, None]
             n_streams = jnp.sum(jnp.max(oc, axis=0) > 0)
+        return rows, n_streams
+
+    @functools.partial(jax.jit, static_argnames=("streams",),
+                       donate_argnums=(0,))
+    def _masked(params, w, labels, onehot, idx, mask, x, y, key, streams):
+        # masked gather -> cohort local SGD -> fused masked mix + scatter
+        safe = aggregation.safe_gather_index(idx, x.shape[0])
+        keys = common.cohort_keys(key, x.shape[0], safe)
+        updated, _ = local(gather_rows(params, safe), x[safe], y[safe],
+                           None, keys=keys)
+        rows, n_streams = _mix_rows(w, labels, onehot, idx, mask, safe,
+                                    streams)
         new = aggregation.mix_scatter(params, updated, rows, idx, mask,
                                       impl=kernel_impl)
         return new, n_streams
 
+    @functools.partial(jax.jit, static_argnames=("streams",),
+                       donate_argnums=(0, 1))
+    def _masked_refresh(params, refresh, w, labels, onehot, idx, mask, n,
+                        x, y, key, streams):
+        # masked gather -> cohort local SGD -> streaming W refresh from
+        # the uploads -> fused masked mix + scatter with the FRESH rows
+        safe = aggregation.safe_gather_index(idx, x.shape[0])
+        keys = common.cohort_keys(key, x.shape[0], safe)
+        pc = gather_rows(params, safe)
+        updated, _ = local(pc, x[safe], y[safe], None, keys=keys)
+        refresh, w = refresh_hook(stacked_ravel(pc),
+                                  stacked_ravel(updated), refresh, idx,
+                                  mask, n)
+        rows, n_streams = _mix_rows(w, labels, onehot, idx, mask, safe,
+                                    streams)
+        new = aggregation.mix_scatter(params, updated, rows, idx, mask,
+                                      impl=kernel_impl)
+        return new, refresh, w, n_streams
+
     def dense(state, data, key):
+        # the dense path never refreshes: cohort=None must stay bit-exact
+        # with the paper's compute-W-once engine (and has no staleness)
         new = _round(state["params"], state["W"], state["labels"],
                      data.x, data.y, key, state["streams"])
         return dict(state, params=new), {
             "streams": state["streams"] or data.num_clients}
 
     def masked(state, data, key, idx, mask):
-        new, n_streams = _masked(state["params"], state["W"],
-                                 state["labels"], state["cluster_onehot"],
-                                 idx, mask, data.x, data.y, key,
-                                 state["streams"])
-        return dict(state, params=new), {"streams": n_streams}
+        if refresh_hook is None:
+            new, n_streams = _masked(state["params"], state["W"],
+                                     state["labels"],
+                                     state["cluster_onehot"],
+                                     idx, mask, data.x, data.y, key,
+                                     state["streams"])
+            return dict(state, params=new), {"streams": n_streams}
+        new, refresh, w, n_streams = _masked_refresh(
+            state["params"], state["refresh"], state["W"],
+            state["labels"], state["cluster_onehot"], idx, mask, data.n,
+            data.x, data.y, key, state["streams"])
+        return (dict(state, params=new, refresh=refresh, W=w),
+                {"streams": n_streams, **common.staleness_metrics(refresh)})
 
     scheme = "unicast" if num_streams is None else "groupcast"
     return Strategy(
         name="ucfl" if num_streams is None else f"ucfl_k{num_streams}",
-        init=init, round=common.cohort_round(dense, masked,
-                                             masked_jit=_masked,
-                                             mesh=cfg.mesh),
+        init=init, round=common.cohort_round(
+            dense, masked,
+            masked_jit=_masked if refresh_hook is None else _masked_refresh,
+            mesh=cfg.mesh),
         eval_params=lambda s: s["params"], comm_scheme=scheme,
         num_streams=None if num_streams in (None, "auto") else num_streams,
     )
@@ -171,6 +240,7 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
+    refresh_hook = common.w_refresh_hook(cfg.w_refresh)
 
     def init(key, data):
         m = data.num_clients
@@ -181,7 +251,10 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (m,) + x.shape) + 0.0, params0
         )
-        return {"params": stacked, "W": collab["W"]}
+        state = {"params": stacked, "W": collab["W"]}
+        if refresh_hook is not None:
+            state["refresh"] = similarity.init_refresh_state(collab, m)
+        return state
 
     @jax.jit
     def _round(params, w, x, y, key):
@@ -203,12 +276,9 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             lambda u: jnp.einsum("ij,ij...->i...", w, u), all_updates
         )
 
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def _masked(params, w, idx, mask, x, y, key):
+    def _all_updates(params, idx, mask, x, y, key):
         # Only cohort clients compute, but they still optimize ALL m stream
-        # models (the defining m× cost of this upper bound); every stream
-        # mixes over the cohort's uploads with masked renormalized weights
-        # (pad slots carry zero weight).
+        # models (the defining m× cost of this upper bound).
         m = jax.tree.leaves(params)[0].shape[0]
         c = idx.shape[0]
         safe = aggregation.safe_gather_index(idx, x.shape[0])
@@ -223,7 +293,13 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             )[0]
 
         keys = jax.random.split(key, m)
-        all_updates = jax.vmap(per_stream)(params, keys)  # leaves (i=m, j=c, ...)
+        # leaves (i=m, j=c, ...)
+        return jax.vmap(per_stream)(params, keys), safe
+
+    def _masked_mix(params, w, all_updates, idx, mask):
+        # every stream mixes over the cohort's uploads with masked
+        # renormalized weights (pad slots carry zero weight).
+        m = jax.tree.leaves(params)[0].shape[0]
         wc, alive = aggregation.masked_column_mixing(w, idx, mask)  # (m, c)
         mixed = jax.tree.map(
             lambda u: jnp.einsum("ij,ij...->i...", wc, u), all_updates
@@ -237,6 +313,23 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             mixed, params,
         )
 
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def _masked(params, w, idx, mask, x, y, key):
+        all_updates, _ = _all_updates(params, idx, mask, x, y, key)
+        return _masked_mix(params, w, all_updates, idx, mask)
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def _masked_refresh(params, refresh, w, idx, mask, n, x, y, key):
+        all_updates, safe = _all_updates(params, idx, mask, x, y, key)
+        # client j's own personalized trajectory is stream idx_j: use its
+        # update of its OWN stream model as the gradient-proxy upload
+        c = idx.shape[0]
+        own = jax.tree.map(lambda u: u[safe, jnp.arange(c)], all_updates)
+        pre = gather_rows(params, safe)
+        refresh, w = refresh_hook(stacked_ravel(pre), stacked_ravel(own),
+                                  refresh, idx, mask, n)
+        return _masked_mix(params, w, all_updates, idx, mask), refresh, w
+
     def dense(state, data, key):
         new = _round(state["params"], state["W"], data.x, data.y, key)
         return dict(state, params=new), {"streams": data.num_clients}
@@ -245,13 +338,22 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         # streams stays m even under a cohort: every participant downloads
         # ALL m stream models to optimize them (the m x cost that makes
         # this the upper bound), so m distinct models hit the downlink.
-        new = _masked(state["params"], state["W"], idx, mask,
-                      data.x, data.y, key)
-        return dict(state, params=new), {"streams": data.num_clients}
+        if refresh_hook is None:
+            new = _masked(state["params"], state["W"], idx, mask,
+                          data.x, data.y, key)
+            return dict(state, params=new), {"streams": data.num_clients}
+        new, refresh, w = _masked_refresh(
+            state["params"], state["refresh"], state["W"], idx, mask,
+            data.n, data.x, data.y, key)
+        return (dict(state, params=new, refresh=refresh, W=w),
+                {"streams": data.num_clients,
+                 **common.staleness_metrics(refresh)})
 
     return Strategy(
         name="ucfl_parallel", init=init,
-        round=common.cohort_round(dense, masked, masked_jit=_masked,
-                                  mesh=cfg.mesh),
+        round=common.cohort_round(
+            dense, masked,
+            masked_jit=_masked if refresh_hook is None else _masked_refresh,
+            mesh=cfg.mesh),
         eval_params=lambda s: s["params"], comm_scheme="unicast",
     )

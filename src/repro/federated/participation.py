@@ -27,7 +27,10 @@ Samplers
 ``weighted``
     Without-replacement sampling with inclusion probability proportional
     to the local dataset size ``n`` (biased selection; cf. the
-    Pareto-optimal client-selection line of work).
+    Pareto-optimal client-selection line of work). Zero-size clients are
+    never drawn; when fewer than ``cohort_size`` clients carry positive
+    mass the whole positive-mass set participates and the remaining
+    slots are masked pads (all-zero sizes raise a ``ValueError``).
 ``round_robin``
     Deterministic cyclic schedule: round t takes clients
     ``[t*c, ..., (t+1)*c) mod m``. Every client is visited once every
@@ -47,6 +50,7 @@ Full participation (``fraction=1.0``, the default) is represented by a
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import numpy as np
@@ -62,15 +66,34 @@ class Cohort:
       indices: (cohort_size,) int32; real members form a sorted prefix,
         pad slots hold the out-of-range sentinel ``m``.
       mask: (cohort_size,) bool; True exactly on the real-member prefix.
+
+    Construction validates the engine invariants the masked rules and the
+    client-indexed PRNG keys rely on: ``indices``/``mask`` are 1-D and the
+    same length, the mask is a *prefix* (no real slot after a pad slot),
+    and the real members are strictly increasing (sorted, no duplicates).
     """
 
     indices: np.ndarray
     mask: np.ndarray
 
     def __post_init__(self):
-        object.__setattr__(self, "indices",
-                           np.asarray(self.indices, np.int32))
-        object.__setattr__(self, "mask", np.asarray(self.mask, bool))
+        idx = np.asarray(self.indices, np.int32)
+        mask = np.asarray(self.mask, bool)
+        if idx.ndim != 1 or mask.shape != idx.shape:
+            raise ValueError(
+                f"indices/mask must be 1-D and the same length, got shapes "
+                f"{idx.shape} and {mask.shape}")
+        if mask.size and np.any(mask[1:] & ~mask[:-1]):
+            raise ValueError(
+                "mask must be a sorted prefix: every real slot (mask True) "
+                "must precede every pad slot (mask False)")
+        members = idx[mask]
+        if members.size > 1 and not np.all(np.diff(members) > 0):
+            raise ValueError(
+                "real member indices must be strictly increasing "
+                f"(sorted, unique), got {members.tolist()}")
+        object.__setattr__(self, "indices", idx)
+        object.__setattr__(self, "mask", mask)
 
     def __len__(self) -> int:
         """Number of REAL members (pad slots excluded)."""
@@ -101,16 +124,27 @@ def as_cohort(cohort, m: int) -> Cohort | None:
 
 def pad_slots(cohort: Cohort, slots: int, m: int) -> Cohort:
     """Extend a cohort with extra sentinel pad slots (index ``m``, mask
-    False) up to ``slots`` total; no-op when already that size.
+    False) up to ``slots`` total; no-op when already exactly that size.
 
     Pad slots are bit-invisible to the masked engine (zero weight in
     every masked rule, dropped by the scatter, client-indexed PRNG
     keys), so the result is equivalent to the input cohort. The mesh
     layer uses this to make the slot count divisible by the shard count
     (:func:`repro.federated.mesh.pad_cohort`).
+
+    Raises:
+      ValueError: if ``slots < cohort.num_slots``. Padding can only ever
+        *extend*; silently returning the larger cohort used to let a
+        mis-sized mesh pad through, surfacing much later as a slot axis
+        the shard count doesn't divide.
     """
     extra = slots - cohort.num_slots
-    if extra <= 0:
+    if extra < 0:
+        raise ValueError(
+            f"cannot pad a {cohort.num_slots}-slot cohort down to {slots} "
+            "slots; pad_slots only extends (check the mesh shard count / "
+            "slot-count computation)")
+    if extra == 0:
         return cohort
     return Cohort(
         indices=np.concatenate(
@@ -158,9 +192,20 @@ class ParticipationConfig:
             raise ValueError("availability sampler needs an availability trace")
 
     def resolve_size(self, m: int) -> int:
+        """Number of cohort slots for ``m`` clients.
+
+        Fractional targets use an explicit CEIL rule:
+        ``ceil(fraction * m)``, clamped to [1, m]. ``int(round(...))``
+        banker's-rounds half-way fractions down (fraction=0.25, m=10 ->
+        2, not 3), silently under-provisioning the cohort; ceil
+        guarantees at least the requested participation fraction. The
+        product is snapped to 9 decimals first so binary float fuzz
+        (0.1 * 130 == 13.000000000000002) cannot bump an exact target up
+        a slot.
+        """
         if self.cohort_size is not None:
             return max(1, min(int(self.cohort_size), m))
-        return max(1, min(m, int(round(self.fraction * m))))
+        return max(1, min(m, math.ceil(round(self.fraction * m, 9))))
 
     def is_full(self, m: int) -> bool:
         return self.sampler != "availability" and self.resolve_size(m) == m
@@ -198,9 +243,22 @@ def sample_cohort(cfg: ParticipationConfig | None, rnd: int, m: int,
     elif cfg.sampler == "weighted":
         if n is None:
             raise ValueError("weighted sampler needs per-client sizes n")
-        p = np.asarray(jax.device_get(n), np.float64)
-        p = p / p.sum()
-        members = rng.choice(m, size=c, replace=False, p=p)
+        p = np.clip(np.asarray(jax.device_get(n), np.float64), 0.0, None)
+        pos = np.flatnonzero(p > 0)
+        if pos.size == 0:
+            raise ValueError(
+                "weighted sampler: every client has zero dataset size, so "
+                "no inclusion probability can be formed (n must have at "
+                "least one positive entry)")
+        if pos.size <= c:
+            # fewer clients carry mass than the cohort has slots: take the
+            # whole positive-mass set (weights are irrelevant then) and
+            # pad the remaining slots masked, availability-style —
+            # rng.choice would raise on size > nonzero(p) and zero-mass
+            # clients must never be drawn
+            members = pos
+        else:
+            members = rng.choice(m, size=c, replace=False, p=p / p.sum())
     elif cfg.sampler == "round_robin":
         start = ((rnd - 1) * c) % m
         members = (start + np.arange(c)) % m

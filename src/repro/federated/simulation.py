@@ -10,6 +10,11 @@ Because every cohort of a policy has the same slot count, the jitted
 round compiles exactly once even when the availability sampler's
 eligible set varies.
 
+Round metrics flow through untouched: strategies running the streaming
+W refresh (``FedConfig.w_refresh``) report the per-client ``staleness``
+vector plus ``staleness_max``/``staleness_mean`` device scalars each
+cohort round; ``verbose=True`` prints the scalar pair.
+
 Timing: ``strategy.round`` is warmed up once (result discarded) before the
 wall-clock timer starts, so ``History.wall_s`` measures steady-state
 rounds, not XLA compilation. The warm-up key is ``fold_in``-derived and
@@ -80,10 +85,13 @@ def donation_safe_copy(state):
     """Copy the device-array leaves so a donating round can't eat them.
 
     The masked cohort round donates its stacked state buffers
-    (``donate_argnums``), so any caller of ``strategy.round`` that keeps
+    (``donate_argnums``) — the (m, ·) params trees AND, with the
+    streaming W refresh on, the Δ/σ²/gradient-proxy/staleness buffers in
+    ``state["refresh"]`` — so any caller of ``strategy.round`` that keeps
     the pre-round state alive — warm-ups, A/B comparisons from one start
     state, benchmarks — must run the round on a copy. This is the
-    sanctioned helper for that.
+    sanctioned helper for that (it copies every ``jax.Array`` leaf, the
+    refresh buffers included).
     """
     return jax.tree.map(
         lambda x: x.copy() if isinstance(x, jax.Array) else x, state)
@@ -131,9 +139,12 @@ def run(strategy, apply_fn, data, key, *, rounds: int, eval_every: int = 1,
         hist.worst_acc.append(float(accs.min()))
         hist.metrics.append(metrics)
         if verbose:
+            stale = ("" if "staleness_max" not in metrics else
+                     f" stale_max={int(metrics['staleness_max'])}"
+                     f" stale_mean={float(metrics['staleness_mean']):.1f}")
             print(f"[{strategy.name}] round {rnd:4d} "
                   f"avg={accs.mean():.4f} worst={accs.min():.4f} "
-                  f"cohort={metrics.get('cohort_size', m)}")
+                  f"cohort={metrics.get('cohort_size', m)}{stale}")
 
     metrics: Dict[str, Any] = {}
     for rnd in range(1, rounds + 1):

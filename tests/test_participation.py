@@ -17,7 +17,10 @@ from repro.core import FedConfig, REGISTRY, ucfl
 from repro.data import synthetic
 from repro.federated import client as fedclient
 from repro.federated import simulation
-from repro.federated.participation import ParticipationConfig, sample_cohort
+from repro.federated.participation import (Cohort, ParticipationConfig,
+                                           as_cohort, pad_slots,
+                                           sample_cohort)
+from tests.hypothesis_compat import HAVE_HYPOTHESIS, given, st  # noqa: F401
 from repro.models import lenet
 
 
@@ -173,6 +176,96 @@ def test_config_validation():
         ParticipationConfig(sampler="nope")
     with pytest.raises(ValueError):
         ParticipationConfig(sampler="availability")
+
+
+@pytest.mark.parametrize("fraction,m,want", [
+    # half-way fractions: int(round(...)) banker's-rounded these DOWN
+    # (0.25*10 = 2.5 -> 2); the explicit ceil rule provisions at least
+    # the requested participation fraction
+    (0.25, 10, 3),
+    (0.5, 5, 3),
+    (0.75, 10, 8),
+    (0.05, 10, 1),
+    (0.125, 4, 1),
+    # exact targets stay exact, including ones float fuzz pushes just
+    # above an integer (0.1 * 130 == 13.000000000000002)
+    (0.5, 8, 4),
+    (0.1, 130, 13),
+    (0.1, 128, 13),
+    (1.0, 7, 7),
+])
+def test_resolve_size_ceil_rule(fraction, m, want):
+    assert ParticipationConfig(fraction=fraction).resolve_size(m) == want
+
+
+def test_resolve_size_explicit_cohort_size_clamps():
+    assert ParticipationConfig(cohort_size=5).resolve_size(3) == 3
+    assert ParticipationConfig(cohort_size=5).resolve_size(20) == 5
+
+
+def test_pad_slots_rejects_shrinking():
+    c = Cohort(indices=np.asarray([1, 4, 6], np.int32),
+               mask=np.ones(3, bool))
+    assert pad_slots(c, 3, m=8) is c  # equal size stays a no-op
+    with pytest.raises(ValueError, match="only extends"):
+        pad_slots(c, 2, m=8)
+
+
+def test_weighted_sampler_all_zero_sizes_raises():
+    cfg = ParticipationConfig(cohort_size=2, sampler="weighted")
+    with pytest.raises(ValueError, match="zero dataset size"):
+        sample_cohort(cfg, 1, 4, np.zeros(4))
+
+
+def test_weighted_sampler_few_positive_takes_them_all():
+    """Fewer positive-mass clients than slots: the whole positive set
+    participates and the remaining slots are masked pads (rng.choice
+    used to crash; a renormalized p used to emit NaNs on sum 0)."""
+    cfg = ParticipationConfig(cohort_size=4, sampler="weighted")
+    n = np.asarray([0.0, 3.0, 0.0, 0.0, 2.0, 0.0])
+    c = sample_cohort(cfg, 1, 6, n)
+    assert c.num_slots == 4 and len(c) == 2
+    np.testing.assert_array_equal(c.members, [1, 4])
+    np.testing.assert_array_equal(c.indices[2:], [6, 6])
+
+
+def test_weighted_sampler_never_draws_zero_mass_clients():
+    cfg = ParticipationConfig(cohort_size=2, sampler="weighted")
+    n = np.asarray([1.0, 0.0, 1.0, 0.0, 1.0, 0.0])
+    for rnd in range(1, 30):
+        assert set(sample_cohort(cfg, rnd, 6, n).members) <= {0, 2, 4}
+
+
+# ------------------------------------------------------- cohort invariants
+
+def test_cohort_validates_shapes_and_prefix():
+    with pytest.raises(ValueError, match="same length"):
+        Cohort(indices=np.asarray([1, 2, 3], np.int32),
+               mask=np.asarray([True, True], bool))
+    with pytest.raises(ValueError, match="sorted prefix"):
+        Cohort(indices=np.asarray([1, 8, 3], np.int32),
+               mask=np.asarray([True, False, True], bool))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        Cohort(indices=np.asarray([4, 1, 8], np.int32),
+               mask=np.asarray([True, True, False], bool))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        Cohort(indices=np.asarray([4, 4], np.int32),
+               mask=np.asarray([True, True], bool))
+
+
+@given(st.sets(st.integers(min_value=0, max_value=31), min_size=1,
+               max_size=16),
+       st.integers(min_value=0, max_value=8))
+def test_pad_slots_and_as_cohort_preserve_members(members, extra):
+    members = np.sort(np.asarray(sorted(members), np.int32))
+    m = 32
+    c = as_cohort(members, m)
+    np.testing.assert_array_equal(c.members, members)  # as_cohort exact
+    p = pad_slots(c, c.num_slots + extra, m)
+    np.testing.assert_array_equal(p.members, members)  # padding exact
+    assert p.num_slots == c.num_slots + extra
+    assert not p.mask[len(members):].any()
+    assert (p.indices[len(members):] == m).all()
 
 
 # ------------------------------------------------------- engine invariants

@@ -1,0 +1,368 @@
+"""Streaming W-refresh subsystem tests.
+
+Covers the PR 4 guarantees:
+  (a) buffer math — :func:`repro.core.similarity.streaming_refresh`
+      touches exactly the observed clients' rows/columns (Δ̂ stays
+      symmetric with a zero diagonal, unobserved pairs keep their
+      values), the direction buffer stays on the unit sphere, staleness
+      counters advance/reset correctly, and pad slots are bit-invisible.
+      Engine-level padded-vs-unpadded equivalence is allclose (1e-6)
+      rather than bit-exact for the refresh path ONLY: Δ̂ rows are a
+      (c, d) × (d, m) matmul and XLA picks its reduction tiling per slot
+      count (observed ulp-level, ~2e-9 — the same phenomenon as the
+      shard_map tolerance in tests/test_sharded_cohort.py). The masked
+      rules themselves are exact, and the no-refresh engine keeps its
+      bit-exact padding guarantee untouched (tests/test_masked_cohort.py).
+  (b) engine threading — a refresh-enabled ucfl round updates
+      ``state["W"]``/``state["refresh"]`` and reports staleness metrics;
+      the dense (``cohort=None``) path never refreshes; absent clients
+      keep their models; ``state["collab"]`` stays intact (the refresh
+      buffers are donated, the collaboration statistics are not).
+  (c) one compiled round — the availability sampler's varying eligible
+      sets hit ONE compiled masked round with refresh on
+      (``round.masked_jit._cache_size() == 1``), matching the
+      no-refresh engine's guarantee.
+  (d) mesh — ``FedConfig(mesh=...)`` composes with the refresh (it runs
+      on the replicated post-all-gather updates): results match the
+      unsharded run within the documented float tolerance, and the
+      recompile guard holds. The CI ``multi-device`` job runs this file
+      under 8 forced host devices.
+  (e) communication — refreshing W consumes the uploads the cohort
+      already sends: per-round uplink bytes are identical for stale-W
+      and refreshed-W runs (the §V-D comm model pins this).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedConfig, aggregation, comm_model as cm, similarity, ucfl
+from repro.core.similarity import RefreshConfig
+from repro.data import synthetic
+from repro.federated import simulation
+from repro.federated.participation import Cohort, ParticipationConfig
+from repro.models import lenet
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    key = jax.random.PRNGKey(17)
+    dkey, mkey = jax.random.split(key)
+    data = synthetic.concept_shift(dkey, m=8, n=120, n_test=30,
+                                   num_classes=6, groups=2, hw=(16, 16),
+                                   channels=1, noise=1.0)
+    params0 = lenet.init(mkey, input_hw=(16, 16), channels=1, num_classes=6)
+    return data, params0
+
+
+def _make(refresh=RefreshConfig(), *, num_streams=None, mesh=None,
+          parallel=False):
+    data, params0 = _setup()
+    cfg = FedConfig(lr=0.1, momentum=0.9, epochs=1, batch_size=40,
+                    w_refresh=refresh, mesh=mesh)
+    if parallel:
+        return ucfl.make_ucfl_parallel(lenet.apply, params0, cfg,
+                                       var_batch_size=40)
+    return ucfl.make_ucfl(lenet.apply, params0, cfg, num_streams=num_streams,
+                          var_batch_size=40)
+
+
+def _leaves(strat, state):
+    return [np.asarray(x) for x in jax.tree.leaves(strat.eval_params(state))]
+
+
+# ----------------------------------------------------------- (a) buffer math
+
+def _toy_refresh(m=5, d=4, seed=0):
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=(m, d)).astype(np.float32)
+    collab = {
+        "full_grads": jnp.asarray(g),
+        "sigma_sq": jnp.asarray(rng.uniform(0.1, 0.5, m).astype(np.float32)),
+        "delta": None,  # unused by init_refresh_state
+    }
+    return similarity.init_refresh_state(collab, m)
+
+
+def test_refresh_config_validation():
+    with pytest.raises(ValueError):
+        RefreshConfig(alpha=0.0)
+    with pytest.raises(ValueError):
+        RefreshConfig(sigma_alpha=1.5)
+    RefreshConfig(alpha=1.0, sigma_alpha=1.0)  # replace-mode is legal
+
+
+def test_init_refresh_state_is_normalized():
+    r = _toy_refresh()
+    g = np.asarray(r["grads"])
+    np.testing.assert_allclose(np.linalg.norm(g, axis=-1), 1.0, rtol=1e-6)
+    d = np.asarray(r["delta"])
+    np.testing.assert_allclose(d, d.T, atol=1e-6)
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-6)
+    # delta really is the unit-direction distance 2(1 - cos)
+    np.testing.assert_allclose(d, ((g[:, None] - g[None, :]) ** 2).sum(-1),
+                               atol=1e-5)
+    assert np.asarray(r["staleness"]).tolist() == [0] * 5
+
+
+def test_streaming_refresh_touches_only_observed_rows():
+    m = 5
+    r = _toy_refresh(m=m)
+    rng = np.random.default_rng(3)
+    obs = jnp.asarray(rng.normal(size=(2, 4)).astype(np.float32))
+    idx = jnp.asarray([1, 3], jnp.int32)
+    mask = jnp.ones(2, bool)
+    n = jnp.ones(m, jnp.float32)
+    new, w = similarity.streaming_refresh(
+        r, obs, idx, mask, n, cfg=RefreshConfig(alpha=0.5, sigma_alpha=0.5))
+
+    d0, d1 = np.asarray(r["delta"]), np.asarray(new["delta"])
+    touched = np.zeros((m, m), bool)
+    touched[[1, 3], :] = True
+    touched[:, [1, 3]] = True
+    np.testing.assert_array_equal(d1[~touched], d0[~touched])
+    assert np.abs(d1[touched] - d0[touched]).max() > 0
+    np.testing.assert_allclose(d1, d1.T, atol=1e-6)  # still symmetric
+    np.testing.assert_allclose(np.diag(d1), 0.0, atol=1e-6)
+
+    g1 = np.asarray(new["grads"])
+    np.testing.assert_array_equal(g1[[0, 2, 4]],
+                                  np.asarray(r["grads"])[[0, 2, 4]])
+    np.testing.assert_allclose(np.linalg.norm(g1, axis=-1), 1.0, rtol=1e-6)
+
+    s0, s1 = np.asarray(r["sigma_sq"]), np.asarray(new["sigma_sq"])
+    np.testing.assert_array_equal(s1[[0, 2, 4]], s0[[0, 2, 4]])
+    assert (s1[[1, 3]] != s0[[1, 3]]).all()
+
+    assert np.asarray(new["staleness"]).tolist() == [1, 0, 1, 0, 1]
+    wn = np.asarray(w)
+    assert (wn >= 0).all()
+    np.testing.assert_allclose(wn.sum(axis=1), 1.0, rtol=1e-5)
+
+
+def test_streaming_refresh_pad_slots_invisible():
+    """The padded cohort must produce bit-identical buffers and W."""
+    m = 5
+    rng = np.random.default_rng(7)
+    obs2 = jnp.asarray(rng.normal(size=(2, 4)).astype(np.float32))
+    obs4 = jnp.concatenate([obs2, jnp.full((2, 4), 99.0)], axis=0)
+    n = jnp.ones(m, jnp.float32)
+    cfg = RefreshConfig()
+    a, wa = similarity.streaming_refresh(
+        _toy_refresh(m=m), obs2, jnp.asarray([0, 2], jnp.int32),
+        jnp.ones(2, bool), n, cfg=cfg)
+    b, wb = similarity.streaming_refresh(
+        _toy_refresh(m=m), obs4, jnp.asarray([0, 2, m, m], jnp.int32),
+        jnp.asarray([1, 1, 0, 0], bool), n, cfg=cfg)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    np.testing.assert_array_equal(np.asarray(wa), np.asarray(wb))
+
+
+def test_masked_ewma_rows_blend():
+    buf = jnp.zeros((4, 2), jnp.float32)
+    obs = jnp.ones((2, 2), jnp.float32)
+    out = aggregation.masked_ewma_rows(
+        buf, obs, jnp.asarray([1, 4], jnp.int32),
+        jnp.asarray([True, False], bool), 0.25)
+    want = np.zeros((4, 2), np.float32)
+    want[1] = 0.25
+    np.testing.assert_allclose(np.asarray(out), want)
+
+
+def test_staleness_update_resets_only_real_slots():
+    stale = jnp.asarray([5, 0, 2, 7], jnp.int32)
+    out = aggregation.staleness_update(
+        stale, jnp.asarray([1, 3, 4], jnp.int32),
+        jnp.asarray([True, False, False], bool))
+    assert np.asarray(out).tolist() == [6, 0, 3, 8]
+
+
+# ------------------------------------------------------ (b) engine threading
+
+def test_refresh_round_updates_state_and_metrics():
+    data, _ = _setup()
+    strat = _make()
+    state = strat.init(jax.random.PRNGKey(3), data)
+    assert "refresh" in state
+    w0 = np.asarray(state["W"]).copy()
+    collab0 = {k: np.asarray(v).copy() for k, v in state["collab"].items()}
+    cohort = np.asarray([1, 4, 6], np.int32)
+
+    state, metrics = strat.round(state, data, jax.random.PRNGKey(5), cohort)
+    assert metrics["cohort_size"] == 3
+    assert int(metrics["staleness_max"]) == 1
+    assert np.asarray(metrics["staleness"]).tolist() == \
+        [1, 0, 1, 1, 0, 1, 0, 1]
+    assert abs(np.asarray(state["W"]) - w0).max() > 0  # W refreshed
+    # the collaboration statistics are NOT donated away by the refresh
+    for k, v in collab0.items():
+        np.testing.assert_array_equal(np.asarray(state["collab"][k]), v)
+    # a second round advances staleness for the still-absent clients
+    state, metrics = strat.round(state, data, jax.random.PRNGKey(6),
+                                 np.asarray([0, 1], np.int32))
+    assert np.asarray(metrics["staleness"]).tolist() == \
+        [0, 0, 2, 2, 1, 2, 1, 2]
+
+
+def test_dense_path_never_refreshes():
+    """cohort=None must stay the paper's compute-W-once engine even with
+    the refresh knob on — bit-exact with a refresh-disabled strategy."""
+    data, _ = _setup()
+    a = _make(refresh=None)
+    b = _make()
+    sa = a.init(jax.random.PRNGKey(3), data)
+    sb = b.init(jax.random.PRNGKey(3), data)
+    w0 = np.asarray(sb["W"]).copy()
+    stale0 = np.asarray(sb["refresh"]["staleness"]).copy()
+    ra, _ = a.round(sa, data, jax.random.PRNGKey(9))
+    rb, _ = b.round(sb, data, jax.random.PRNGKey(9))
+    for x, y in zip(_leaves(a, ra), _leaves(b, rb)):
+        np.testing.assert_array_equal(x, y)
+    np.testing.assert_array_equal(np.asarray(rb["W"]), w0)
+    np.testing.assert_array_equal(np.asarray(rb["refresh"]["staleness"]),
+                                  stale0)
+
+
+@pytest.mark.parametrize("kind", ["ucfl", "clustered", "parallel"])
+def test_refresh_padded_cohort_bit_exact(kind):
+    data, _ = _setup()
+    strat = (_make(parallel=True) if kind == "parallel"
+             else _make(num_streams=2 if kind == "clustered" else None))
+    state = strat.init(jax.random.PRNGKey(3), data)
+    rkey = jax.random.PRNGKey(101)
+    members = np.asarray([1, 4, 6], np.int32)
+    padded = Cohort(indices=np.asarray([1, 4, 6, 8, 8], np.int32),
+                    mask=np.asarray([1, 1, 1, 0, 0], bool))
+    s_u, m_u = strat.round(simulation.donation_safe_copy(state), data,
+                           rkey, members)
+    s_p, m_p = strat.round(simulation.donation_safe_copy(state), data,
+                           rkey, padded)
+    assert m_u["cohort_size"] == m_p["cohort_size"] == 3
+    # allclose, not bit-exact: see the module docstring (XLA retiles the
+    # (c, d) Δ̂ matmul per slot count; observed differences are ulp-level)
+    tol = dict(rtol=1e-6, atol=1e-6)
+    for a, b in zip(_leaves(strat, s_u), _leaves(strat, s_p)):
+        np.testing.assert_allclose(a, b, **tol)
+    np.testing.assert_allclose(np.asarray(s_u["W"]), np.asarray(s_p["W"]),
+                               **tol)
+    np.testing.assert_array_equal(np.asarray(s_u["refresh"]["staleness"]),
+                                  np.asarray(s_p["refresh"]["staleness"]))
+    for k in ("grads", "sigma_sq", "delta"):
+        np.testing.assert_allclose(np.asarray(s_u["refresh"][k]),
+                                   np.asarray(s_p["refresh"][k]), **tol)
+
+
+def test_absent_clients_keep_model_under_refresh():
+    data, _ = _setup()
+    strat = _make()
+    state = strat.init(jax.random.PRNGKey(3), data)
+    before = [np.asarray(x) for x in
+              jax.tree.leaves(strat.eval_params(state))]
+    cohort = np.asarray([1, 4, 6], np.int32)
+    absent = np.asarray([0, 2, 3, 5, 7])
+    new_state, _ = strat.round(state, data, jax.random.PRNGKey(5), cohort)
+    for a, b in zip(before, _leaves(strat, new_state)):
+        np.testing.assert_array_equal(a[absent], b[absent])
+        assert np.abs(a[cohort] - b[cohort]).max() > 0
+
+
+# --------------------------------------------------- (c) one compiled round
+
+@pytest.mark.parametrize("kind", ["ucfl", "clustered"])
+def test_refresh_availability_one_compile(kind):
+    data, _ = _setup()
+    m = data.num_clients
+    trace = np.zeros((m, 3), bool)
+    trace[:4, 0] = True   # 4 eligible
+    trace[:2, 1] = True   # 2 eligible (padded)
+    trace[:, 2] = True    # 8 eligible (subsampled)
+    part = ParticipationConfig(cohort_size=4, sampler="availability",
+                               availability=trace)
+    strat = _make(num_streams=2 if kind == "clustered" else None)
+    h = simulation.run(strat, lenet.apply, data, jax.random.PRNGKey(1),
+                       rounds=6, eval_every=6, participation=part)
+    assert strat.round.masked_jit._cache_size() == 1
+    assert int(h.metrics[-1]["staleness_max"]) > 0
+
+
+# ------------------------------------------------------------------ (d) mesh
+
+def test_refresh_under_mesh_matches_unsharded():
+    """The refresh runs on the replicated post-all-gather updates, so a
+    meshed round must match mesh=None within the sharding tolerance
+    documented in tests/test_sharded_cohort.py — relaxed to 1e-4 here
+    because Eq. 9's exp/softmax amplifies the ulp-level local-SGD
+    tiling differences into the refreshed W (observed ~3e-5 relative at
+    8 shards)."""
+    data, _ = _setup()
+    a = _make()
+    b = _make(mesh="auto")
+    sa = a.init(jax.random.PRNGKey(3), data)
+    sb = b.init(jax.random.PRNGKey(3), data)
+    rkey = jax.random.PRNGKey(101)
+    cohort = np.asarray([1, 4, 6], np.int32)
+    ra, ma = a.round(simulation.donation_safe_copy(sa), data, rkey, cohort)
+    rb, mb = b.round(simulation.donation_safe_copy(sb), data, rkey, cohort)
+    assert np.asarray(ma["staleness"]).tolist() == \
+        np.asarray(mb["staleness"]).tolist()
+    tol = dict(rtol=1e-4, atol=1e-6)
+    for x, y in zip(_leaves(a, ra), _leaves(b, rb)):
+        np.testing.assert_allclose(x, y, **tol)
+    np.testing.assert_allclose(np.asarray(ra["W"]), np.asarray(rb["W"]),
+                               **tol)
+    np.testing.assert_allclose(np.asarray(ra["refresh"]["delta"]),
+                               np.asarray(rb["refresh"]["delta"]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_refresh_availability_one_compile_under_mesh():
+    data, _ = _setup()
+    m = data.num_clients
+    trace = np.zeros((m, 3), bool)
+    trace[:4, 0] = True
+    trace[:2, 1] = True
+    trace[:, 2] = True
+    part = ParticipationConfig(cohort_size=3, sampler="availability",
+                               availability=trace)
+    strat = _make(mesh="auto")
+    h = simulation.run(strat, lenet.apply, data, jax.random.PRNGKey(1),
+                       rounds=6, eval_every=6, participation=part)
+    assert h.metrics[-1]["cohort_size"] in (2, 3)
+    assert strat.round.masked_jit._cache_size() == 1
+
+
+# --------------------------------------------------------- (e) communication
+
+def test_uplink_bytes_unchanged_by_refresh():
+    """The refresh consumes the c uploads the cohort already sends: the
+    §V-D uplink cost is a function of the cohort size alone, identical
+    for stale-W and refreshed-W rounds of every scheme."""
+    model_bytes = 1234
+    for scheme in ("broadcast", "groupcast", "unicast", "client_mixing"):
+        stale = cm.uplink_bytes_per_round(model_bytes, scheme, 20,
+                                          cohort_size=5)
+        assert stale == 5 * model_bytes
+        # no refresh parameter exists to change it — same call, same bytes
+        assert cm.uplink_bytes_per_round(model_bytes, scheme, 20,
+                                         cohort_size=5) == stale
+    assert cm.uplink_bytes_per_round(8, "unicast", 6) == 6 * 8  # dense
+    with pytest.raises(ValueError):
+        cm.uplink_bytes_per_round(8, "nope", 6)
+
+
+def test_refresh_metrics_report_no_extra_upload():
+    """Engine-level pin: a refreshed round's metrics carry staleness
+    telemetry but no additional upload accounting — cohort_size (what
+    the comm model prices the uplink by) matches the stale run's."""
+    data, _ = _setup()
+    cohort = np.asarray([1, 4, 6], np.int32)
+    sizes = {}
+    for label, refresh in (("stale", None), ("refreshed", RefreshConfig())):
+        strat = _make(refresh=refresh)
+        state = strat.init(jax.random.PRNGKey(3), data)
+        _, metrics = strat.round(state, data, jax.random.PRNGKey(5), cohort)
+        sizes[label] = metrics["cohort_size"]
+    assert sizes["stale"] == sizes["refreshed"] == 3
