@@ -14,6 +14,15 @@ Turns the ROADMAP's engine targets into enforced checks:
     same jitted fixed-shape round; a ratio above the gate means it broke
     the one-compilation guarantee or grew the round body past the cheap
     on-device buffer-fold it is specified to be.
+  * async overhead — the ``async`` regime (buffered-async server on,
+    ``FedConfig.async_buffer``, flushing every measured round) must stay
+    within ``--max-async-ratio`` (default 1.2) of the barrier cohort
+    round. Deposit + staleness-weighted flush are one jitted fixed-shape
+    round with donated buffers; a ratio above the gate means a
+    recompile, a host sync, or a flush that stopped reusing the fused
+    masked mix-scatter path. (The §V-D wall-clock WIN of async is priced
+    by the comm model in ``participation_sweep.py`` — this gate only
+    bounds its host-compute overhead.)
 
 Run the benchmark first, then the gate::
 
@@ -58,6 +67,8 @@ def main(argv=None) -> int:
                     help="gate on availability_over_cohort_ratio")
     ap.add_argument("--max-refresh-ratio", type=float, default=1.2,
                     help="gate on refresh_over_cohort_ratio")
+    ap.add_argument("--max-async-ratio", type=float, default=1.2,
+                    help="gate on async_over_cohort_ratio")
     args = ap.parse_args(argv)
 
     try:
@@ -71,6 +82,12 @@ def main(argv=None) -> int:
                     "the streaming W refresh is no longer a cheap "
                     "in-round buffer fold — check for a recompile or a "
                     "host sync in the refresh path")
+        ok &= _gate(payload, "async_over_cohort_ratio", "cohort",
+                    "async", args.max_async_ratio,
+                    "the buffered-async round is no longer a cheap "
+                    "deposit + cond-flush on top of the barrier mix — "
+                    "check for a recompile, a host sync, or a flush "
+                    "path that stopped reusing the fused mix-scatter")
     except (OSError, KeyError, ValueError) as e:
         print(f"check_regression: cannot read ratios from {args.json}: {e}",
               file=sys.stderr)

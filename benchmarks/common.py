@@ -60,9 +60,9 @@ def make_params0(key, s: BenchScale, num_classes=None):
 
 
 def make_strategy(name: str, params0, s: BenchScale, *, chunk_size=None,
-                  mesh=None, w_refresh=None, **kw):
+                  mesh=None, w_refresh=None, async_buffer=None, **kw):
     cfg = FedConfig(batch_size=s.batch_size, chunk_size=chunk_size, mesh=mesh,
-                    w_refresh=w_refresh)
+                    w_refresh=w_refresh, async_buffer=async_buffer)
     if name == "ucfl":
         return ucfl.make_ucfl(lenet.apply, params0, cfg,
                               var_batch_size=s.var_batch, **kw)
@@ -106,7 +106,9 @@ def run_trials(scenario: str, strat_name: str, s: BenchScale, *, seed=0,
         hists.append(h)
     return {
         "avg": float(np.mean(finals)), "avg_std": float(np.std(finals)),
-        "worst": float(np.mean(worsts)), "hists": hists,
+        "worst": float(np.mean(worsts)),
+        # the worst-node headline needs its spread alongside avg_std
+        "worst_std": float(np.std(worsts)), "hists": hists,
     }
 
 

@@ -17,6 +17,19 @@ Measures the per-round wall time of the jitted round in three regimes:
                          compiled shape, donated buffers), so it must
                          also sit within ~1.2x of the plain cohort round
                          — the second ratio the CI gate enforces.
+  * ``async``          — the fixed-size cohort regime with the
+                         buffered-async server on
+                         (``FedConfig.async_buffer``, flush_k = half the
+                         cohort so every round deposits AND flushes —
+                         the most expensive dynamics). Deposit + cond
+                         flush run inside the same jitted round (one
+                         compiled shape, donated params + buffer), so
+                         this too must sit within ~1.2x of the barrier
+                         cohort round — the third CI ratio gate. Note
+                         this measures HOST compute per round; the §V-D
+                         win async buys (flush time replacing the
+                         straggler max) is priced by the comm model in
+                         ``participation_sweep.py``, not here.
 
 When the host exposes multiple devices (e.g. under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, the CI
@@ -44,6 +57,7 @@ from benchmarks import common
 from repro.core.similarity import RefreshConfig
 from repro.federated import participation as part
 from repro.federated import simulation
+from repro.federated.async_buffer import AsyncConfig
 from repro.models import lenet
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
@@ -136,6 +150,12 @@ def run(scale) -> list[str]:
                                          chunk_size=chunk,
                                          w_refresh=RefreshConfig()),
                     cohort_cfg))
+    entries.append(("async",
+                    common.make_strategy(
+                        "ucfl", params0, s, chunk_size=chunk,
+                        async_buffer=AsyncConfig(
+                            flush_k=max(1, cohort // 2))),
+                    cohort_cfg))
 
     # sharded cohort regimes (only with a multi-device host platform,
     # e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8)
@@ -156,7 +176,7 @@ def run(scale) -> list[str]:
     total_s = time.time() - t0
 
     results, sharded = {}, {}
-    for name in list(regimes) + ["refresh"]:
+    for name in list(regimes) + ["refresh", "async"]:
         results[name] = {"round_us": times[name], "rounds": rounds}
         rows.append(common.csv_row(
             f"round_engine/ucfl_{name}", times[name],
@@ -176,6 +196,8 @@ def run(scale) -> list[str]:
         max(results["cohort"]["round_us"], 1e-9)
     refresh_ratio = results["refresh"]["round_us"] / \
         max(results["cohort"]["round_us"], 1e-9)
+    async_ratio = results["async"]["round_us"] / \
+        max(results["cohort"]["round_us"], 1e-9)
     payload = {
         "config": {"m": s.m, "cohort_size": cohort, "rounds": rounds,
                    "model": "lenet", "scenario": "label_shift",
@@ -185,14 +207,14 @@ def run(scale) -> list[str]:
         "sharded": sharded,
         "availability_over_cohort_ratio": ratio,
         "refresh_over_cohort_ratio": refresh_ratio,
+        "async_over_cohort_ratio": async_ratio,
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
-    rows.append(common.csv_row(
-        "round_engine/availability_over_cohort", ratio,
-        f"target<=1.2;json={BENCH_JSON.name}"))
-    print(rows[-1], flush=True)
-    rows.append(common.csv_row(
-        "round_engine/refresh_over_cohort", refresh_ratio,
-        f"target<=1.2;json={BENCH_JSON.name}"))
-    print(rows[-1], flush=True)
+    for label, r in (("availability_over_cohort", ratio),
+                     ("refresh_over_cohort", refresh_ratio),
+                     ("async_over_cohort", async_ratio)):
+        rows.append(common.csv_row(
+            f"round_engine/{label}", r,
+            f"target<=1.2;json={BENCH_JSON.name}"))
+        print(rows[-1], flush=True)
     return rows

@@ -21,6 +21,7 @@ def run(scale) -> list[str]:
             dt = (time.time() - t0) * 1e6 / max(scale.rounds * scale.trials, 1)
             rows.append(common.csv_row(
                 f"table1/{scen}/{algo}", dt,
-                f"avg_acc={res['avg']:.4f}±{res['avg_std']:.4f}"))
+                f"avg_acc={res['avg']:.4f}±{res['avg_std']:.4f};"
+                f"worst_acc={res['worst']:.4f}±{res['worst_std']:.4f}"))
             print(rows[-1], flush=True)
     return rows

@@ -180,10 +180,17 @@ def safe_gather_index(idx, m):
     return jnp.minimum(idx, m - 1)
 
 
-def masked_cohort_matrix(w, idx, mask):
+def masked_cohort_matrix(w, idx, mask, weights=None):
     """Fixed-shape :func:`cohort_mixing_matrix`: (c, c) with zeroed pad
-    columns, row-renormalized; degenerate rows fall back to identity."""
-    fmask = mask.astype(w.dtype)
+    columns, row-renormalized; degenerate rows fall back to identity.
+
+    ``weights`` optionally replaces the binary mask as the per-slot
+    COLUMN weight (the buffered-async engine passes staleness discounts
+    ``(1+τ)^{-α}``, zero on empty slots); the row renormalization keeps
+    every row a convex combination either way, and ``weights=None`` is
+    bit-identical to the mask path.
+    """
+    fmask = mask.astype(w.dtype) if weights is None else weights
     safe = safe_gather_index(idx, w.shape[0])
     wc = w[safe][:, safe] * fmask[None, :]
     s = jnp.sum(wc, axis=1, keepdims=True)
@@ -191,7 +198,7 @@ def masked_cohort_matrix(w, idx, mask):
     return jnp.where(s > 1e-12, wc / jnp.maximum(s, 1e-12), eye)
 
 
-def masked_clustered_rows(w, labels, num_clusters, idx, mask):
+def masked_clustered_rows(w, labels, num_clusters, idx, mask, weights=None):
     """Fixed-shape :func:`clustered_cohort` as per-slot rows.
 
     Returns (c, c): slot i's row is its cluster's centroid rule rebuilt
@@ -199,12 +206,20 @@ def masked_clustered_rows(w, labels, num_clusters, idx, mask):
     centroid rule has no mass on the cohort falls back to the identity
     row (keeps its own locally-updated model), and pad slots are
     don't-care.
+
+    ``weights`` optionally replaces the binary mask as the per-slot
+    column weight of the uploads being mixed (staleness discounts in the
+    buffered-async engine). Cluster MEMBERSHIP stays mask-based — a
+    stale member still belongs to its cluster; only its upload's
+    contribution is discounted. ``weights=None`` is bit-identical to the
+    mask path.
     """
     fmask = mask.astype(w.dtype)
+    colw = fmask if weights is None else weights
     safe = safe_gather_index(idx, w.shape[0])
     lc = jnp.take(labels, safe)
     onehot = jax.nn.one_hot(lc, num_clusters, dtype=w.dtype) * fmask[:, None]
-    raw = onehot.T @ (w[safe][:, safe] * fmask[None, :])  # (mt, c)
+    raw = onehot.T @ (w[safe][:, safe] * colw[None, :])  # (mt, c)
     rules = renormalize_rows(raw)
     alive = (jnp.sum(raw, axis=1) > 1e-12)[lc]  # (c,)
     eye = jnp.eye(safe.shape[0], dtype=w.dtype)
@@ -225,13 +240,17 @@ def masked_group_rows(assignment_c, n_c, mask):
     return jnp.where(s > 1e-12, w / jnp.maximum(s, 1e-12), eye)
 
 
-def masked_fedavg_weights(n_c, mask):
+def masked_fedavg_weights(n_c, mask, weights=None):
     """Fixed-shape Eq. 1 weights over the cohort: (1, c), pad slots 0.
 
     An all-masked cohort yields all-zero weights (0/eps) rather than NaN;
     ``fedavg_masked_mix`` uses that to fall back to the previous model.
+    ``weights`` optionally replaces the binary mask (staleness discounts
+    in the buffered-async engine, zero on empty slots); ``None`` is
+    bit-identical to the mask path.
     """
-    wn = n_c.astype(jnp.float32) * mask.astype(jnp.float32)
+    wn = n_c.astype(jnp.float32) * (
+        mask.astype(jnp.float32) if weights is None else weights)
     return (wn / jnp.maximum(jnp.sum(wn), 1e-12))[None, :]
 
 
@@ -347,6 +366,27 @@ def mix_scatter(full, cohort_updated, rows, idx, mask, *, impl=None):
         return jax.tree.unflatten(treedef, [out.reshape(leaf.shape)])
     mixed = ops.mix_aggregate(rows, flat_c, impl=impl)  # one launch
     return scatter_rows(full, idx, stacked_unravel(cohort_updated, mixed))
+
+
+def mix_scatter_flat(full, flat_c, rows, idx, mask, *, impl=None):
+    """:func:`mix_scatter` for an ALREADY-raveled (c, d) update matrix.
+
+    The buffered-async flush stores pending uploads as raveled rows, so
+    there is no cohort-stacked tree to ravel: single-leaf states take the
+    same fused ``masked_mix_scatter`` kernel pass, multi-leaf trees mix
+    once on (c, d) and unravel/row-scatter per leaf against ``full``'s
+    trailing shapes. Sentinel/mask semantics are identical to
+    :func:`mix_scatter`.
+    """
+    leaves, treedef = jax.tree.flatten(full)
+    if len(leaves) == 1:
+        leaf = leaves[0]
+        flat = leaf.reshape(leaf.shape[0], -1)  # zero-copy view
+        out = ops.masked_mix_scatter(rows, flat_c, idx, mask, flat,
+                                     impl=impl)
+        return jax.tree.unflatten(treedef, [out.reshape(leaf.shape)])
+    mixed = ops.mix_aggregate(rows, flat_c, impl=impl)  # one launch
+    return scatter_rows(full, idx, stacked_unravel(full, mixed))
 
 
 def centroid_rules(w, labels, num_clusters):

@@ -35,9 +35,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation, similarity
-from repro.core.pytree import gather_rows, scatter_rows  # noqa: F401  (re-export)
+from repro.core.pytree import (  # noqa: F401  (re-export)
+    gather_rows, scatter_rows, stacked_ravel, stacked_unravel,
+    tree_count_params,
+)
+from repro.federated import async_buffer
 from repro.federated import mesh as mesh_lib
 from repro.federated import participation
+from repro.kernels import ops
 
 
 def broadcast_params(params0, m):
@@ -94,9 +99,26 @@ def staleness_metrics(refresh):
             "staleness_mean": jnp.mean(stale.astype(jnp.float32))}
 
 
+def refresh_skip_round(state):
+    """``Strategy.skip_round`` hook for W-refresh strategies.
+
+    A round nobody attends still ages every client's Δ/σ² statistics:
+    the per-client staleness counters advance exactly as
+    :func:`repro.core.aggregation.staleness_update` would with an
+    all-masked cohort (bump everyone, reset nobody). Without this, an
+    all-offline round between two refresh rounds under-reported
+    staleness by one — the simulation loop used to skip strategy state
+    entirely.
+    """
+    refresh = state["refresh"]
+    return dict(state,
+                refresh=dict(refresh, staleness=refresh["staleness"] + 1))
+
+
 # ------------------------------------------------------------------ engine
 
-def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None):
+def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None,
+                 async_fn=None, async_cfg=None):
     """Build ``round(state, data, key, cohort=None)`` from the two paths.
 
     Args:
@@ -117,11 +139,27 @@ def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None):
         evenly partitionable slot axis; the extra sentinel slots are
         bit-invisible and the padded count is the same every round, so
         the one-compilation guarantee holds under a fixed mesh.
+      async_fn: the strategy's buffered-async cohort body (same
+        signature as ``masked_fn``), used in place of it when
+        ``async_cfg`` is set — the one dispatch point is how ALL
+        strategies share the ``FedConfig.async_buffer`` knob.
+      async_cfg: the ``FedConfig.async_buffer`` value. Setting it
+        without an ``async_fn`` raises ``NotImplementedError`` here, at
+        construction time: the strategy's PS step has no buffered form
+        (SCAFFOLD controls, Ditto/pFedMe personal models, FedFomo
+        client-side mixing, ucfl_parallel's m× streams).
 
     The returned ``round`` accepts ``cohort=None`` (dense), a
     :class:`~repro.federated.participation.Cohort`, or a plain index
     array (normalized to an unpadded all-real cohort).
     """
+    if async_cfg is not None and async_fn is None:
+        raise NotImplementedError(
+            "FedConfig.async_buffer is set but this strategy has no "
+            "buffered-async aggregation rule (supported: ucfl "
+            "full/clustered and the FedAvg family — strategies whose PS "
+            "step is the masked row aggregation)")
+    use_async = async_cfg is not None
     mesh = mesh_lib.resolve(mesh)
 
     def round(state, data, key, cohort=None):
@@ -134,6 +172,11 @@ def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None):
             state = mesh_lib.commit_replicated(state, mesh)
         cohort = participation.as_cohort(cohort, data.num_clients)
         if cohort is None:
+            if use_async:
+                raise ValueError(
+                    "the buffered-async engine processes arrival cohorts; "
+                    "cohort=None is the bulk-synchronous dense path — pass "
+                    "a participation config (or drop FedConfig.async_buffer)")
             state, metrics = dense_fn(state, data, key)
             size = data.num_clients
         else:
@@ -141,8 +184,9 @@ def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None):
                 cohort = mesh_lib.pad_cohort(cohort, mesh, data.num_clients)
             # idx/mask stay host numpy here (jit converts at dispatch), so
             # wrappers can derive host-side metrics without a device sync
-            state, metrics = masked_fn(state, data, key, cohort.indices,
-                                       cohort.mask)
+            fn = async_fn if use_async else masked_fn
+            state, metrics = fn(state, data, key, cohort.indices,
+                                cohort.mask)
             size = len(cohort)
         return state, {**metrics, "cohort_size": size}
 
@@ -227,3 +271,120 @@ def make_fedavg_masked_round(local, *, impl=None, donate=True):
         train,
         functools.partial(fedavg_masked_mix, impl=impl),
         donate=donate)
+
+
+# ------------------------------------------------------- buffered-async path
+
+def state_async_buffer(state, acfg, m, slots, dim, mesh=None):
+    """Fetch — or lazily create — the strategy state's upload buffer.
+
+    The buffer's slot count depends on the participation policy's cohort
+    slot count, which the strategy cannot know at ``init`` time, so the
+    first cohort round creates it here (host-side, outside jit; the
+    shapes are the same every round, so the one-compilation guarantee is
+    unaffected — a warm-up that discards its state merely re-creates the
+    same-shaped zeros on round 1).
+
+    ``mesh`` (a resolved Mesh or None) replicate-commits the fresh
+    buffer exactly like the dispatcher commits the rest of the state: a
+    buffer born uncommitted on round 1 would re-enter round 2 with the
+    round's replicated output sharding and trigger a second compile.
+    """
+    buf = state.get("abuf")
+    if buf is None:
+        buf = async_buffer.init_buffer(acfg, m, slots, dim)
+        if mesh is not None:
+            buf = mesh_lib.commit_replicated(buf, mesh)
+    return buf
+
+
+def make_fedavg_async_round(train, acfg, *, impl=None):
+    """The FedAvg-family buffered-async round (FedAvg/FedProx reuse it).
+
+    FedBuff's server rule in delta form: the buffer holds the cohort's
+    model DELTAS ``θ_upload − θ_base`` (each computed against the global
+    model current at its upload round), and a flush adds the n-weighted
+    mean delta to the current global — with an all-fresh buffer this
+    reproduces the barrier :func:`fedavg_masked_mix` exactly
+    (θ + Σ w̃(u − θ) = Σ w̃ u). Mixing raw stale MODELS instead would
+    drag the global back toward old versions, which is why the delta
+    form is load-bearing here.
+
+    Honest staleness note: under the flush-the-whole-buffer rule the
+    FedAvg-family τ is STRUCTURALLY ZERO — the server version only moves
+    at a flush, a flush clears every pending slot, and a client samples
+    the current global at deposit, so no upload can ever outlive a
+    version bump. The ``(1+τ)^{-α}`` machinery is kept in the shared
+    body (a partial-flush rule would make it live, and the user-centric
+    rules — whose base is the client's own last-rewritten row — exercise
+    it for real), but for this family the discount never engages and
+    ``tau_max``/``tau_mean`` report 0.
+
+    ``train(pc, xc, yc, keys, n) -> updated`` as in
+    :func:`make_fedavg_masked_round`. Returns a jitted
+    ``body(params, abuf, idx, mask, x, y, key, n) ->
+    (params', abuf', metrics)`` with ``params`` AND the buffer donated.
+    """
+    flush_k = int(acfg.flush_k)
+
+    def body(params, abuf, idx, mask, x, y, key, n):
+        m = x.shape[0]
+        safe = aggregation.safe_gather_index(idx, m)
+        keys = cohort_keys(key, m, safe)
+        pc = gather_rows(params, safe)
+        updated = train(pc, x[safe], y[safe], keys, n)
+        delta = stacked_ravel(updated) - stacked_ravel(pc)
+        # FedAvg clients download the CURRENT global when sampled, so the
+        # upload's base version is the version at deposit time
+        base_ver = jnp.broadcast_to(abuf["version"], idx.shape)
+        abuf = async_buffer.deposit(abuf, delta, idx, mask, base_ver, m)
+        flush = abuf["count"] >= flush_k
+        weights = async_buffer.staleness_weights(abuf, m, acfg.alpha)
+        tau = async_buffer.staleness(abuf)
+        applied = abuf["count"]
+        bvalid = async_buffer.valid_mask(abuf, m)
+        bsafe = aggregation.safe_gather_index(abuf["idx"], m)
+
+        def do_flush(params, abuf):
+            w = aggregation.masked_fedavg_weights(jnp.take(n, bsafe),
+                                                  bvalid, weights)
+            step = ops.mix_aggregate(w, abuf["upd"], impl=impl)  # (1, d)
+            new = jax.tree.map(jnp.add, params,
+                               stacked_unravel(params, step))
+            return new, async_buffer.flush_reset(abuf, m)
+
+        params, abuf = jax.lax.cond(flush, do_flush,
+                                    lambda p, b: (p, b), params, abuf)
+        metrics = async_buffer.flush_metrics(flush, applied, tau, weights,
+                                             abuf["count"])
+        # one broadcast stream hits the downlink only when a flush ships
+        # a new global
+        metrics["streams"] = flush.astype(jnp.int32)
+        return params, abuf, metrics
+
+    return jax.jit(body, donate_argnums=(0, 1))
+
+
+def fedavg_async_wrapper(train, params0, acfg, *, impl=None, mesh=None):
+    """Build the FedAvg-family buffered-async cohort body + jit handle.
+
+    Returns ``(amasked, jitted_body)`` for ``cohort_round(async_fn=...,
+    masked_jit=...)``, or ``(None, None)`` when the knob is off.
+    ``train`` as in :func:`make_fedavg_async_round`; the body manages the
+    lazily-created buffer in ``state["abuf"]`` (replicate-committed when
+    ``mesh`` — the raw ``FedConfig.mesh`` knob — is set).
+    """
+    if acfg is None:
+        return None, None
+    body = make_fedavg_async_round(train, acfg, impl=impl)
+    dim = tree_count_params(params0)
+    mesh = mesh_lib.resolve(mesh)
+
+    def amasked(state, data, key, idx, mask):
+        abuf = state_async_buffer(state, acfg, data.num_clients,
+                                  idx.shape[0], dim, mesh)
+        new, abuf, metrics = body(state["params"], abuf, idx, mask,
+                                  data.x, data.y, key, data.n)
+        return dict(state, params=new, abuf=abuf), metrics
+
+    return amasked, body

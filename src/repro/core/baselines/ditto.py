@@ -80,6 +80,7 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
     return Strategy(f"ditto_lam{lam}", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
-                                        mesh=cfg.mesh),
+                                        mesh=cfg.mesh,
+                                        async_cfg=cfg.async_buffer),
                     lambda s: s["personal"], comm_scheme="broadcast",
                     num_streams=1)

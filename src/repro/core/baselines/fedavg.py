@@ -43,8 +43,14 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                       data.n)
         return {"params": new}, {"streams": 1}
 
+    amasked, masked_jit = common.fedavg_async_wrapper(
+        lambda pc, xc, yc, keys, n: local(pc, xc, yc, None, keys=keys)[0],
+        params0, cfg.async_buffer, impl=kernel_impl, mesh=cfg.mesh)
+
     return Strategy("fedavg", init,
-                    common.cohort_round(dense, masked, masked_jit=_masked,
-                                        mesh=cfg.mesh),
+                    common.cohort_round(dense, masked,
+                                        masked_jit=masked_jit or _masked,
+                                        mesh=cfg.mesh, async_fn=amasked,
+                                        async_cfg=cfg.async_buffer),
                     lambda s: s["params"], comm_scheme="broadcast",
                     num_streams=1)

@@ -100,5 +100,6 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
     return Strategy("fedfomo", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
-                                        mesh=cfg.mesh),
+                                        mesh=cfg.mesh,
+                                        async_cfg=cfg.async_buffer),
                     lambda s: s["params"], comm_scheme="client_mixing")

@@ -44,6 +44,7 @@ def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
 
     return Strategy("local", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
-                                        mesh=cfg.mesh),
+                                        mesh=cfg.mesh,
+                                        async_cfg=cfg.async_buffer),
                     lambda s: s["params"], comm_scheme="broadcast",
                     num_streams=0)

@@ -104,6 +104,7 @@ def make_pfedme(apply_fn, params0,
 
     return Strategy("pfedme", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
-                                        mesh=cfg.mesh),
+                                        mesh=cfg.mesh,
+                                        async_cfg=cfg.async_buffer),
                     lambda s: s["personal"], comm_scheme="broadcast",
                     num_streams=1)

@@ -100,6 +100,7 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
 
     return Strategy("scaffold", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
-                                        mesh=cfg.mesh),
+                                        mesh=cfg.mesh,
+                                        async_cfg=cfg.async_buffer),
                     lambda s: s["params"], comm_scheme="broadcast",
                     num_streams=1)

@@ -26,6 +26,16 @@ streams, client mixing charges c downloads, and groupcast needs at most
 min(m_t, c) distinct streams. This is what makes round cost O(cohort)
 instead of O(m) on the wireless side.
 
+Buffered-async rounds (``FedConfig.async_buffer``): the server applies
+the pending uploads as soon as the K-th lands, so the wait term is the
+K-th ORDER STATISTIC of the c shifted-exponential completion times —
+``T_min + (H_c − H_{c−K})/μ`` in expectation — instead of the c-way max
+``T_min + H_c/μ`` (:func:`expected_kth_compute_time`,
+:func:`async_round_time`), and the downlink serves only the applied
+batch. :func:`sample_arrival_times` draws per-client completion times
+from the same shifted-exponential compute + ρ-asymmetric link model for
+trace replays that want realized (not expected) arrivals.
+
 TPU-adaptation note (DESIGN.md §2): on a pod these DL streams become ICI
 collective volume; this module keeps the paper's analytic wireless model so
 the Fig. 5 benchmark can be reproduced, while the measured ICI counterpart
@@ -35,6 +45,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+
+import numpy as np
 
 
 def harmonic(m: int) -> float:
@@ -52,6 +64,20 @@ class SystemParams:
 
 def _active(m: int, cohort_size: int | None) -> int:
     return m if cohort_size is None else max(1, min(cohort_size, m))
+
+
+def _require_streams(num_streams, scheme: str) -> int:
+    """Groupcast pricing is undefined without a stream count.
+
+    A bare ``assert`` here would be stripped under ``python -O`` and the
+    groupcast costs would silently misprice (``min(None, c)`` raising a
+    TypeError at best) — this must stay a real runtime check.
+    """
+    if num_streams is None:
+        raise ValueError(
+            f"{scheme!r} pricing needs num_streams (the m_t downlink "
+            "stream count); got None")
+    return int(num_streams)
 
 
 def expected_compute_time(p: SystemParams,
@@ -76,12 +102,92 @@ def round_time(p: SystemParams, scheme: str, num_streams: int | None = None,
     if scheme == "broadcast":
         dl = p.t_dl
     elif scheme == "groupcast":
-        assert num_streams is not None
-        dl = min(num_streams, c) * p.t_dl
+        dl = min(_require_streams(num_streams, scheme), c) * p.t_dl
     elif scheme == "unicast":
         dl = c * p.t_dl
     elif scheme == "client_mixing":  # FedFomo-style client-side aggregation
         dl = c * p.t_dl
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return dl + t_comp + t_ul
+
+
+def sample_arrival_times(p: SystemParams, rng, cohort_size: int | None = None):
+    """Draw per-client upload completion times for one round.
+
+    Each active client downloads (``t_dl``), computes for a
+    shifted-exponential ``T_min + Exp(1/μ)``, and uploads over the
+    ρ-asymmetric link (``ρ·t_dl``); the returned (c,) array is when each
+    upload lands at the PS. A buffered-async server flushes at the K-th
+    smallest of these; the bulk-synchronous barrier waits for the max.
+
+    Args:
+      p: §V-D system parameters.
+      rng: ``numpy.random.Generator``.
+      cohort_size: active clients this round (None = all m).
+    """
+    c = _active(p.m, cohort_size)
+    compute = np.full(c, p.t_min, float)
+    if p.inv_mu > 0.0:
+        compute = compute + rng.exponential(p.inv_mu, size=c)
+    return p.t_dl + compute + p.rho * p.t_dl
+
+
+def expected_kth_compute_time(p: SystemParams, k: int,
+                              cohort_size: int | None = None) -> float:
+    """E[k-th order statistic of the active clients' compute times].
+
+    For c iid shifted exponentials the k-th smallest has mean
+    ``T_min + (H_c − H_{c−k})/μ`` (partial sums of the exponential
+    spacings); ``k = c`` recovers :func:`expected_compute_time`'s
+    straggler max ``T_min + H_c/μ``.
+    """
+    c = _active(p.m, cohort_size)
+    k = max(1, min(int(k), c))
+    if p.inv_mu == 0.0:
+        return p.t_min
+    tail = harmonic(c - k) if k < c else 0.0
+    return p.t_min + (harmonic(c) - tail) * p.inv_mu
+
+
+def async_round_time(p: SystemParams, scheme: str,
+                     num_streams: int | None = None,
+                     cohort_size: int | None = None, *, flush_k: int,
+                     applied: int | None = None) -> float:
+    """Wall-clock §V-D price of one buffered-async round.
+
+    Same ``dl + compute + ul`` structure as :func:`round_time`, with two
+    substitutions: the server stops waiting at the ``flush_k``-th
+    arrival (the K-th order statistic of the c active compute times, not
+    the straggler max), and the downlink serves only the APPLIED batch:
+
+      * ``applied`` is how many uploads the flush shipped back (the
+        buffer may hold more than K when earlier rounds deposited
+        without flushing); ``None`` means exactly the flush threshold.
+      * ``applied=0`` prices a deposit-only round: nothing is served
+        (dl = 0) but the round still spans the arrivals it banked — the
+        full c-way max, like a barrier round without its downlink.
+      * ``flush_k >= c`` with ``applied = c`` degrades to
+        :func:`round_time` exactly, so async pricing is never optimistic
+        on availability-starved rounds.
+
+    Strictly below :func:`round_time` whenever ``flush_k < c`` and
+    stragglers exist (``inv_mu > 0``) — the trade the paper's Fig. 5
+    studies, bought at the accuracy cost of staleness-discounted
+    aggregation.
+    """
+    c = _active(p.m, cohort_size)
+    t_ul = p.rho * p.t_dl
+    if applied is not None and applied <= 0:
+        return expected_compute_time(p, cohort_size) + t_ul
+    b = min(min(int(flush_k), c) if applied is None else int(applied), p.m)
+    t_comp = expected_kth_compute_time(p, min(int(flush_k), c), cohort_size)
+    if scheme == "broadcast":
+        dl = p.t_dl
+    elif scheme == "groupcast":
+        dl = min(_require_streams(num_streams, scheme), b) * p.t_dl
+    elif scheme in ("unicast", "client_mixing"):
+        dl = b * p.t_dl
     else:
         raise ValueError(f"unknown scheme {scheme!r}")
     return dl + t_comp + t_ul
@@ -103,8 +209,7 @@ def downlink_bytes_per_round(model_bytes: int, scheme: str, m: int,
     if scheme == "broadcast":
         return model_bytes
     if scheme == "groupcast":
-        assert num_streams is not None
-        return min(num_streams, c) * model_bytes
+        return min(_require_streams(num_streams, scheme), c) * model_bytes
     if scheme in ("unicast", "client_mixing"):
         return c * model_bytes
     raise ValueError(f"unknown scheme {scheme!r}")
@@ -142,8 +247,7 @@ def ici_collective_bytes(model_bytes: int, scheme: str, m: int,
     if scheme == "broadcast":
         return 2 * model_bytes
     if scheme == "groupcast":
-        assert num_streams is not None
-        return 2 * min(num_streams, c) * model_bytes
+        return 2 * min(_require_streams(num_streams, scheme), c) * model_bytes
     if scheme in ("unicast", "client_mixing"):
         return c * model_bytes
     raise ValueError(f"unknown scheme {scheme!r}")

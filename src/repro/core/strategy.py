@@ -51,6 +51,12 @@ class Strategy:
     # "groupcast", "unicast", "client_mixing") and the stream count.
     comm_scheme: str = "broadcast"
     num_streams: int | None = None
+    # optional ``skip_round(state) -> state`` hook the simulation loop
+    # calls on rounds nobody attends (an all-offline availability
+    # cohort): time still passes for per-client bookkeeping — e.g. the
+    # streaming W refresh's staleness counters advance — even though no
+    # training/aggregation runs. None = skipped rounds don't touch state.
+    skip_round: Callable[[Any], Any] | None = None
 
 
 def register(name):
@@ -78,6 +84,18 @@ class FedConfig:
     multiple; the (c, c) mix and the fused scatter stay replicated.
     ``None`` keeps the single-device path bit-exact.
 
+    ``async_buffer`` (a :class:`repro.federated.async_buffer.AsyncConfig`,
+    or ``None`` = off) opts cohort rounds into the buffered-async
+    FedBuff-style server: uploads land in a fixed-shape pending buffer
+    and the PS applies them — staleness-discounted by
+    ``(1+τ)^{-α}`` — once ``flush_k`` have accumulated, instead of
+    barrier-mixing every round. Supported by the strategies whose PS
+    step is the masked row aggregation (ucfl full/clustered and the
+    FedAvg family); the rest raise at construction. Requires cohort
+    rounds (a participation config) — the dense ``cohort=None`` path is
+    the bulk-synchronous barrier by definition. ``None`` (the default)
+    keeps every existing trajectory bit-identical.
+
     ``w_refresh`` (a :class:`repro.core.similarity.RefreshConfig`, or
     ``None`` = off) opts the W-owning strategies (ucfl, clustered ucfl,
     ucfl_parallel) into the streaming W refresh: every masked cohort
@@ -95,3 +113,4 @@ class FedConfig:
     chunk_size: int | None = None
     mesh: Any = None
     w_refresh: Any = None
+    async_buffer: Any = None

@@ -33,11 +33,15 @@ State layout
     diagnostics/benchmarks; never donated);
   * ``refresh`` — only with ``FedConfig.w_refresh`` on: the streaming
     Δ/σ²/gradient-proxy/staleness buffers
-    (:func:`repro.core.similarity.init_refresh_state`).
+    (:func:`repro.core.similarity.init_refresh_state`);
+  * ``abuf`` — only with ``FedConfig.async_buffer`` on: the fixed-shape
+    pending-upload buffer of the buffered-async server
+    (:mod:`repro.federated.async_buffer`), created lazily on the first
+    cohort round (its slot count is a participation-policy property).
 
 Donation caveat: the jitted masked round donates BOTH the stacked
-``params`` tree and (when present) the ``refresh`` buffers — they are
-rewritten every cohort round. Callers that keep a pre-round state alive
+``params`` tree and (when present) the ``refresh`` or ``abuf`` buffers —
+they are rewritten every cohort round. Callers that keep a pre-round state alive
 must copy it (:func:`repro.federated.simulation.donation_safe_copy`
 copies every ``jax.Array`` leaf, refresh buffers included); ``W`` and
 ``collab`` are not donated, so the init-time collaboration statistics
@@ -52,10 +56,12 @@ import jax.numpy as jnp
 
 from repro.core import aggregation, clustering, similarity
 from repro.core.baselines import common
-from repro.core.pytree import gather_rows, stacked_ravel
+from repro.core.pytree import gather_rows, stacked_ravel, tree_count_params
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.data.loader import fixed_partition
+from repro.federated import async_buffer
 from repro.federated import client as fedclient
+from repro.federated import mesh as mesh_lib
 
 
 def compute_collaboration(apply_fn, params0, data, *, var_batch_size=100,
@@ -100,12 +106,27 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     ``cfg.w_refresh`` opts the cohort rounds into the streaming W refresh
     (see :mod:`repro.core.similarity`): the cohort's uploads re-estimate
     its Δ/σ² statistics and W is recomputed on device before the mix.
+
+    ``cfg.async_buffer`` opts the cohort rounds into the buffered-async
+    server (see :mod:`repro.federated.async_buffer`): uploads land in a
+    fixed-shape pending buffer and the Eq. 8 / §IV-B mix is applied —
+    staleness-discounted — only when ``flush_k`` have accumulated.
+    Mutually exclusive with ``w_refresh`` for now (the refresh folds the
+    barrier round's uploads; buffering them too would need a second
+    (B, d) pre-params slab — recorded in ROADMAP).
     """
+    if cfg.async_buffer is not None and cfg.w_refresh is not None:
+        raise ValueError(
+            "FedConfig.async_buffer and FedConfig.w_refresh cannot be "
+            "combined yet: the streaming refresh consumes each barrier "
+            "round's (pre, post) upload pair, which the async buffer "
+            "does not retain (see ROADMAP)")
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
     refresh_hook = common.w_refresh_hook(cfg.w_refresh)
+    acfg = cfg.async_buffer
 
     def init(key, data):
         m = data.num_clients
@@ -146,13 +167,16 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                           impl=kernel_impl)
         return mixed
 
-    def _mix_rows(w, labels, onehot, idx, mask, safe, streams):
+    def _mix_rows(w, labels, onehot, idx, mask, safe, streams,
+                  weights=None):
+        # ``weights`` (buffered-async staleness discounts) replaces the
+        # binary mask as the upload-column weight; None = the barrier mix
         if streams is None:
-            rows = aggregation.masked_cohort_matrix(w, idx, mask)
+            rows = aggregation.masked_cohort_matrix(w, idx, mask, weights)
             n_streams = jnp.sum(mask)
         else:
             rows = aggregation.masked_clustered_rows(w, labels, streams,
-                                                     idx, mask)
+                                                     idx, mask, weights)
             # only the clusters actually represented in the cohort put a
             # centroid model on the downlink
             oc = jnp.take(onehot, safe, axis=0) * mask[:, None]
@@ -192,6 +216,68 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                       impl=kernel_impl)
         return new, refresh, w, n_streams
 
+    amasked = _amasked_jit = None
+    if acfg is not None:
+        flush_k = int(acfg.flush_k)
+        dim = tree_count_params(params0)
+        amesh = mesh_lib.resolve(cfg.mesh)
+
+        @functools.partial(jax.jit, static_argnames=("streams",),
+                           donate_argnums=(0, 1))
+        def _amasked(params, abuf, w, labels, onehot, idx, mask, x, y, key,
+                     streams):
+            # masked gather -> cohort local SGD -> buffer deposit ->
+            # staleness-weighted flush (fused mix + scatter) when >= K
+            # uploads are pending. ONE compiled shape covers deposit-only
+            # and flush rounds (lax.cond), so the one-compilation
+            # guarantee of the barrier engine carries over.
+            m = x.shape[0]
+            safe = aggregation.safe_gather_index(idx, m)
+            keys = common.cohort_keys(key, m, safe)
+            updated, _ = local(gather_rows(params, safe), x[safe], y[safe],
+                               None, keys=keys)
+            # a client trains from its OWN row, untouched since the flush
+            # that last wrote it — that version is the upload's base
+            base_ver = jnp.take(abuf["last_sync"], safe)
+            abuf = async_buffer.deposit(abuf, stacked_ravel(updated), idx,
+                                        mask, base_ver, m)
+            flush = abuf["count"] >= flush_k
+            weights = async_buffer.staleness_weights(abuf, m, acfg.alpha)
+            tau = async_buffer.staleness(abuf)
+            applied = abuf["count"]
+            bidx = abuf["idx"]
+            bvalid = async_buffer.valid_mask(abuf, m)
+            bsafe = aggregation.safe_gather_index(bidx, m)
+
+            def do_flush(params, abuf):
+                rows, n_streams = _mix_rows(w, labels, onehot, bidx, bvalid,
+                                            bsafe, streams, weights)
+                new = aggregation.mix_scatter_flat(params, abuf["upd"],
+                                                   rows, bidx, bvalid,
+                                                   impl=kernel_impl)
+                return new, async_buffer.flush_reset(abuf, m), n_streams
+
+            def no_flush(params, abuf):
+                return params, abuf, jnp.zeros((), jnp.int32)
+
+            params, abuf, n_streams = jax.lax.cond(
+                flush, do_flush, no_flush, params, abuf)
+            metrics = {**async_buffer.flush_metrics(
+                flush, applied, tau, weights, abuf["count"]),
+                "streams": n_streams}
+            return params, abuf, metrics
+
+        _amasked_jit = _amasked
+
+        def amasked(state, data, key, idx, mask):
+            abuf = common.state_async_buffer(state, acfg, data.num_clients,
+                                             idx.shape[0], dim, amesh)
+            new, abuf, am = _amasked(state["params"], abuf, state["W"],
+                                     state["labels"],
+                                     state["cluster_onehot"], idx, mask,
+                                     data.x, data.y, key, state["streams"])
+            return dict(state, params=new, abuf=abuf), am
+
     def dense(state, data, key):
         # the dense path never refreshes: cohort=None must stay bit-exact
         # with the paper's compute-W-once engine (and has no staleness)
@@ -216,14 +302,21 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                 {"streams": n_streams, **common.staleness_metrics(refresh)})
 
     scheme = "unicast" if num_streams is None else "groupcast"
+    if acfg is not None:
+        masked_jit = _amasked_jit
+    elif refresh_hook is not None:
+        masked_jit = _masked_refresh
+    else:
+        masked_jit = _masked
     return Strategy(
         name="ucfl" if num_streams is None else f"ucfl_k{num_streams}",
         init=init, round=common.cohort_round(
-            dense, masked,
-            masked_jit=_masked if refresh_hook is None else _masked_refresh,
-            mesh=cfg.mesh),
+            dense, masked, masked_jit=masked_jit, mesh=cfg.mesh,
+            async_fn=amasked, async_cfg=acfg),
         eval_params=lambda s: s["params"], comm_scheme=scheme,
         num_streams=None if num_streams in (None, "auto") else num_streams,
+        skip_round=common.refresh_skip_round if refresh_hook is not None
+        else None,
     )
 
 
@@ -354,6 +447,8 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         round=common.cohort_round(
             dense, masked,
             masked_jit=_masked if refresh_hook is None else _masked_refresh,
-            mesh=cfg.mesh),
+            mesh=cfg.mesh, async_cfg=cfg.async_buffer),
         eval_params=lambda s: s["params"], comm_scheme="unicast",
+        skip_round=common.refresh_skip_round if refresh_hook is not None
+        else None,
     )

@@ -1,0 +1,223 @@
+"""Buffered-async server aggregation (FedBuff-style) for cohort rounds.
+
+The bulk-synchronous engine prices every round by the cohort's straggler
+max: the PS waits for all c uploads before it mixes. The buffered-async
+server instead applies uploads as they land — it keeps a small pending
+buffer and *flushes* (applies a staleness-weighted aggregation and bumps
+its model version) as soon as ``flush_k`` uploads have accumulated, so
+the §V-D round time is set by the K-th arrival, not the c-th (see
+:func:`repro.core.comm_model.async_round_time`). Rarely-available
+clients stop gating the round clock AND stop keeping frozen models:
+their uploads are applied whenever they land, merely discounted by how
+stale they are.
+
+Fixed-shape buffer contract
+---------------------------
+Everything lives in strategy state as fixed-shape device arrays so ONE
+compiled round serves every dynamics (deposit-only rounds, flush rounds,
+availability-starved rounds) — the recompile guard in
+tests/test_async_buffer.py pins this:
+
+  * ``upd``   — (B, d) float32 pending upload rows (raveled; model
+    uploads for the user-centric rules, model *deltas* for the
+    FedAvg-family rule). ``B = flush_k - 1 + slots`` where ``slots`` is
+    the participation policy's static cohort slot count: a flush clears
+    the buffer whenever it holds ≥ flush_k uploads at round end, so at
+    most ``flush_k - 1`` pend across rounds and one round deposits at
+    most ``slots`` more — B can never overflow.
+  * ``idx``   — (B,) int32 uploading client per slot; the sentinel ``m``
+    marks an empty slot (exactly the padded-cohort convention: sentinel
+    rows are dropped by every scatter and carry zero weight). Slot
+    VALIDITY is ``idx < m`` — a flush only resets ``idx``/``count``;
+    the ``upd``/``ver`` payloads of cleared slots are stale garbage
+    that nothing may read.
+  * ``ver``   — (B,) int32 server version of the base model the slot's
+    upload was computed against; at flush time the slot's staleness is
+    ``tau = version - ver`` and its aggregation weight is discounted by
+    ``(1 + tau) ** -alpha`` (FedBuff's polynomial discount).
+  * ``count`` — () int32 number of pending uploads.
+  * ``version`` — () int32 flush counter (the server's model version).
+  * ``last_sync`` — (m,) int32 server version at which each client's
+    model row was last rewritten by a flush; the user-centric rules use
+    it as the base version of a client's next upload (the client trains
+    from its own row, which has not moved since).
+
+Dedupe rule: a client with an upload already pending overwrites it in
+place (latest upload wins) instead of occupying a second slot, so buffer
+indices stay unique and the masked (B, B)-row aggregation and sentinel
+scatter apply unchanged.
+
+Wiring: opt in via ``FedConfig.async_buffer`` (an :class:`AsyncConfig`).
+The cohort dispatcher (:func:`repro.core.baselines.common.cohort_round`)
+routes every cohort round to the strategy's buffered body; strategies
+whose PS step is not expressible as the masked row aggregation
+(SCAFFOLD's controls, Ditto/pFedMe's personal models, FedFomo's
+client-side mixing, ucfl_parallel's m× streams) raise at construction
+time. The buffer is created lazily on the first cohort round (its slot
+count is a participation-policy property the strategy cannot know at
+init) and is donated by the jitted round alongside the params — callers
+keeping a pre-round state alive must
+:func:`repro.federated.simulation.donation_safe_copy` it.
+
+Under ``FedConfig.mesh`` the buffer is replicated like the rest of the
+stacked state: local SGD runs shard_mapped and the deposit/flush operate
+on the post-all-gather updates (the same place the sync mix runs). The
+ROADMAP records the sharded-buffer refinement (each device accumulating
+its own slots' uploads so a flush's gather is the only collective).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Buffered-async server policy.
+
+    Attributes:
+      flush_k: the server applies the buffered uploads as soon as at
+        least ``flush_k`` are pending at the end of a round (the flush
+        applies the WHOLE buffer — uploads beyond the K-th landed in the
+        same round and waiting for a later flush would only age them).
+      alpha: staleness-discount exponent; an upload computed against a
+        base model ``tau`` versions old is weighted by
+        ``(1 + tau) ** -alpha`` before the usual row renormalization.
+        0 disables the discount (pure FIFO buffering).
+    """
+
+    flush_k: int = 2
+    alpha: float = 0.5
+
+    def __post_init__(self):
+        if int(self.flush_k) < 1:
+            raise ValueError(f"flush_k must be >= 1, got {self.flush_k}")
+        if not 0.0 <= float(self.alpha):
+            raise ValueError(f"alpha must be >= 0, got {self.alpha}")
+
+    def capacity(self, slots: int) -> int:
+        """Buffer slot count for a policy with ``slots`` cohort slots."""
+        return int(self.flush_k) - 1 + int(slots)
+
+
+def init_buffer(cfg: AsyncConfig, m: int, slots: int, dim: int) -> dict:
+    """Fresh (empty) fixed-shape buffer state (see the module docstring)."""
+    b = cfg.capacity(slots)
+    return {
+        "upd": jnp.zeros((b, dim), jnp.float32),
+        "idx": jnp.full((b,), m, jnp.int32),
+        "ver": jnp.zeros((b,), jnp.int32),
+        "count": jnp.zeros((), jnp.int32),
+        "version": jnp.zeros((), jnp.int32),
+        "last_sync": jnp.zeros((m,), jnp.int32),
+    }
+
+
+def valid_mask(buf, m: int):
+    """(B,) bool — slots holding a pending upload (sentinel ``m`` = empty)."""
+    return buf["idx"] < m
+
+
+def deposit(buf, rows, idx, mask, base_ver, m: int):
+    """Land one cohort's uploads in the buffer (fixed-shape, traceable).
+
+    Args:
+      buf: buffer state (:func:`init_buffer`).
+      rows: (c, d) raveled upload rows (pad-slot rows are ignored).
+      idx / mask: the padded cohort's slot arrays (sentinel index ``m``,
+        mask False on pad slots).
+      base_ver: (c,) int32 server version of the base model each upload
+        was computed against (becomes the slot's ``ver``).
+      m: client count (the sentinel).
+
+    Real slots whose client already has a pending upload overwrite that
+    slot in place (latest wins); the rest append at ``count``-onward
+    positions. Pad slots deposit nothing — a padded cohort deposits
+    bit-identically to the unpadded one.
+    """
+    bcap = buf["idx"].shape[0]
+    pending = valid_mask(buf, m)  # (B,)
+    # (c, B) membership of each incoming client among the pending slots;
+    # buffer indices are unique, so each row has at most one hit
+    dup = (idx[:, None] == buf["idx"][None, :]) & mask[:, None] & \
+        pending[None, :]
+    has_dup = jnp.any(dup, axis=1)
+    dup_pos = jnp.argmax(dup, axis=1)
+    fresh = mask & ~has_dup
+    append_pos = buf["count"] + jnp.cumsum(fresh.astype(jnp.int32)) - 1
+    # sentinel destination B drops the write (pads and nothing else);
+    # last_sync is deliberately untouched — only a flush rewrites model
+    # rows, so only flush_reset may move it (the documented contract)
+    dest = jnp.where(mask, jnp.where(has_dup, dup_pos, append_pos), bcap)
+    return dict(
+        buf,
+        upd=buf["upd"].at[dest].set(rows.astype(buf["upd"].dtype),
+                                    mode="drop"),
+        idx=buf["idx"].at[dest].set(idx, mode="drop"),
+        ver=buf["ver"].at[dest].set(base_ver, mode="drop"),
+        count=buf["count"] + jnp.sum(fresh.astype(jnp.int32)),
+    )
+
+
+def staleness(buf):
+    """(B,) int32 per-slot staleness ``tau = version - ver`` (>= 0)."""
+    return jnp.maximum(buf["version"] - buf["ver"], 0)
+
+
+def staleness_weights(buf, m: int, alpha: float):
+    """(B,) float32 flush weights ``valid * (1 + tau) ** -alpha``.
+
+    These multiply the masked aggregation rules' columns in place of the
+    binary mask (empty slots get exactly 0, like pad slots); the rules'
+    own row renormalization turns them into convex combinations.
+    """
+    tau = staleness(buf).astype(jnp.float32)
+    w = (1.0 + tau) ** (-float(alpha))
+    return jnp.where(valid_mask(buf, m), w, 0.0)
+
+
+def flush_reset(buf, m: int):
+    """Post-flush buffer: version bumped, all slots cleared.
+
+    Only ``idx`` and ``count`` are reset (slot validity is ``idx < m``);
+    the ``upd``/``ver`` payloads of cleared slots keep stale garbage by
+    design — nothing may read a slot whose idx is the sentinel.
+    ``last_sync`` of the applied clients is raised to the NEW version:
+    their model rows were just rewritten by the flush, so their next
+    upload's base is this version.
+    """
+    new_version = buf["version"] + 1
+    synced = buf["last_sync"].at[buf["idx"]].set(
+        jnp.full_like(buf["ver"], new_version), mode="drop")
+    return dict(
+        buf,
+        idx=jnp.full_like(buf["idx"], m),
+        count=jnp.zeros_like(buf["count"]),
+        version=new_version,
+        last_sync=synced,
+    )
+
+
+def flush_metrics(flushed, applied, tau, weights, fill):
+    """Device-scalar round metrics shared by every async strategy body.
+
+    Args:
+      flushed: () bool — did this round apply the buffer.
+      applied: () int32 — uploads applied (0 on deposit-only rounds).
+      tau: (B,) int32 per-slot staleness at flush time.
+      weights: (B,) float32 the flush weights (0 on empty slots).
+      fill: () int32 buffer occupancy AFTER the round.
+    """
+    live = weights > 0
+    wsum = jnp.maximum(jnp.sum(live.astype(jnp.float32)), 1.0)
+    return {
+        "flushed": flushed.astype(jnp.int32),
+        "applied": jnp.where(flushed, applied, 0),
+        "buffer_fill": fill,
+        "tau_max": jnp.where(flushed, jnp.max(jnp.where(live, tau, 0)), 0),
+        "tau_mean": jnp.where(
+            flushed,
+            jnp.sum(jnp.where(live, tau, 0).astype(jnp.float32)) / wsum,
+            0.0),
+    }

@@ -42,7 +42,10 @@ Samplers
     masked slots when fewer than ``cohort_size`` clients are up (an
     all-masked cohort — nobody online — makes the engine skip the round
     entirely). The trace is an (m, period) boolean array, cycled over
-    rounds — e.g. diurnal device availability.
+    rounds — e.g. diurnal device availability. :func:`diurnal_trace`
+    (time-of-day cosine with per-client offsets) and
+    :func:`battery_trace` (charge-limited duty cycles) generate
+    realistic such traces.
 
 Full participation (``fraction=1.0``, the default) is represented by a
 ``None`` cohort so the engine can keep the legacy dense path bit-exact.
@@ -214,6 +217,72 @@ class ParticipationConfig:
 def _rng(cfg: ParticipationConfig, rnd: int) -> np.random.Generator:
     return np.random.default_rng(
         np.random.SeedSequence([cfg.seed, rnd, 0x5EED]))
+
+
+# ---------------------------------------------------------- trace generators
+#
+# Deterministic (m, period) boolean availability traces for the
+# ``availability`` sampler, modeling the two dominant edge-device effects:
+# time-of-day usage cycles (diurnal) and charge-limited duty cycles
+# (battery). Both guarantee every client is up in at least one phase —
+# a never-up client can never train, which makes worst-node metrics
+# vacuous — but make NO per-phase guarantee: a phase where nobody is up
+# is a legitimate all-offline round the engine skips.
+
+
+def diurnal_trace(m: int, period: int = 24, *, peak: float = 0.9,
+                  trough: float = 0.1, spread: bool = True,
+                  seed: int = 0) -> np.ndarray:
+    """Sinusoidal time-of-day availability with per-client phase offsets.
+
+    Client i is up in phase t with probability following a cosine
+    between ``trough`` and ``peak`` over the ``period``-phase cycle,
+    shifted by a per-client offset (time zones / usage habits) when
+    ``spread`` is True — offsets are what keeps SOME clients up in the
+    global trough, the regime where a buffered-async server banks
+    deposits across skinny rounds.
+    """
+    if not 0.0 <= trough <= peak <= 1.0:
+        raise ValueError(
+            f"need 0 <= trough <= peak <= 1, got {trough}, {peak}")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0xD1E1]))
+    offsets = rng.integers(0, period, m) if spread else np.zeros(m, int)
+    t = (np.arange(period)[None, :] + offsets[:, None]) % period
+    up_p = trough + (peak - trough) * 0.5 * (
+        1.0 + np.cos(2.0 * np.pi * t / period))
+    trace = rng.random((m, period)) < up_p
+    return _ensure_each_client_up(trace, rng)
+
+
+def battery_trace(m: int, period: int = 24, *, duty: int = 3,
+                  recharge: int = 2, seed: int = 0) -> np.ndarray:
+    """Charge-limited duty cycles: up ``duty`` phases, down ``recharge``.
+
+    Each device cycles through ``duty`` consecutive up phases (draining)
+    followed by ``recharge`` down phases (charging), from a random
+    initial charge state — the classic battery/plugged-in gating of
+    cross-device FL. Different initial states de-synchronize the fleet,
+    so the eligible set size varies per phase without ever collapsing
+    the whole fleet at once (unless duty/recharge make it so).
+    """
+    if duty < 1 or recharge < 0:
+        raise ValueError(
+            f"need duty >= 1 and recharge >= 0, got {duty}, {recharge}")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0xBA77]))
+    cycle = duty + recharge
+    phase0 = rng.integers(0, cycle, m)
+    t = (np.arange(period)[None, :] + phase0[:, None]) % cycle
+    trace = t < duty
+    return _ensure_each_client_up(trace, rng)
+
+
+def _ensure_each_client_up(trace: np.ndarray, rng) -> np.ndarray:
+    """Force at least one up phase per client (see the section comment)."""
+    trace = np.asarray(trace, bool)
+    never = np.flatnonzero(~trace.any(axis=1))
+    if never.size:
+        trace[never, rng.integers(0, trace.shape[1], never.size)] = True
+    return trace
 
 
 def sample_cohort(cfg: ParticipationConfig | None, rnd: int, m: int,

@@ -1,0 +1,386 @@
+"""Buffered-async cohort engine tests.
+
+Covers the PR 5 guarantees:
+  (a) buffer math — :mod:`repro.federated.async_buffer` deposits are
+      fixed-shape and pad-invisible, a client re-depositing before a
+      flush replaces its pending upload in place (indices stay unique),
+      staleness weights are ``(1+τ)^{-α}`` on valid slots and exactly 0
+      on empty ones, and a flush resets the buffer / bumps the server
+      version / re-syncs the applied clients.
+  (b) engine — with ``flush_k=1`` the buffer is flushed fresh every
+      round, and the async ucfl round (and its whole trajectory) is
+      BIT-EXACT with the barrier masked round over the same cohorts and
+      keys (the buffer slot count equals the cohort slot count, so even
+      the matmul shapes agree); the FedAvg-family delta form matches
+      within float round-off (θ + Σ w̃(u − θ) vs Σ w̃ u). With
+      ``flush_k > c`` a round deposits without touching params, and the
+      eventual flush applies uploads from several rounds with the right
+      staleness. ``async_buffer=None`` is the untouched barrier engine.
+  (c) one compiled round — the availability sampler's varying eligible
+      sets hit ONE compiled async round (deposit-only and flush rounds
+      share the shape via lax.cond), matching the barrier engine's
+      guarantee — also under ``FedConfig.mesh``.
+  (d) dispatch — strategies without a buffered aggregation rule raise at
+      construction; the dense ``cohort=None`` path refuses to run async;
+      ``async_buffer`` + ``w_refresh`` is rejected (documented in ucfl).
+  (e) traces — the diurnal/battery availability-trace generators emit
+      deterministic (m, period) booleans where every client is up at
+      least once.
+
+The CI ``multi-device`` job re-runs this file under 8 forced host
+devices, so the mesh path is exercised at both 1 and 8 shards.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedConfig, ucfl
+from repro.core.baselines.fedavg import make_fedavg
+from repro.core.baselines.scaffold import make_scaffold
+from repro.core.similarity import RefreshConfig
+from repro.data import synthetic
+from repro.federated import async_buffer, simulation
+from repro.federated.participation import (ParticipationConfig,
+                                           battery_trace, diurnal_trace)
+from repro.models import lenet
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    key = jax.random.PRNGKey(17)
+    dkey, mkey = jax.random.split(key)
+    data = synthetic.concept_shift(dkey, m=8, n=120, n_test=30,
+                                   num_classes=6, groups=2, hw=(16, 16),
+                                   channels=1, noise=1.0)
+    params0 = lenet.init(mkey, input_hw=(16, 16), channels=1, num_classes=6)
+    return data, params0
+
+
+def _make(acfg, *, num_streams=None, mesh=None):
+    data, params0 = _setup()
+    cfg = FedConfig(lr=0.1, momentum=0.9, epochs=1, batch_size=40,
+                    async_buffer=acfg, mesh=mesh)
+    return ucfl.make_ucfl(lenet.apply, params0, cfg, num_streams=num_streams,
+                          var_batch_size=40)
+
+
+def _leaves(strat, state):
+    return [np.asarray(x) for x in jax.tree.leaves(strat.eval_params(state))]
+
+
+# ----------------------------------------------------------- (a) buffer math
+
+def test_async_config_validation():
+    with pytest.raises(ValueError):
+        async_buffer.AsyncConfig(flush_k=0)
+    with pytest.raises(ValueError):
+        async_buffer.AsyncConfig(alpha=-0.5)
+    cfg = async_buffer.AsyncConfig(flush_k=3, alpha=0.0)  # no discount ok
+    assert cfg.capacity(slots=4) == 6  # K-1 pending + one cohort
+
+
+def _rows(vals, d=3):
+    return jnp.asarray(np.outer(vals, np.ones(d)), jnp.float32)
+
+
+def test_deposit_appends_and_pads_invisible():
+    m = 6
+    cfg = async_buffer.AsyncConfig(flush_k=3)
+    b0 = async_buffer.init_buffer(cfg, m, slots=4, dim=3)
+    rows = _rows([1.0, 2.0])
+    a = async_buffer.deposit(
+        b0, rows, jnp.asarray([1, 4], jnp.int32), jnp.ones(2, bool),
+        jnp.zeros(2, jnp.int32), m)
+    padded_rows = jnp.concatenate([rows, jnp.full((2, 3), 99.0)], axis=0)
+    b = async_buffer.deposit(
+        async_buffer.init_buffer(cfg, m, slots=4, dim=3), padded_rows,
+        jnp.asarray([1, 4, m, m], jnp.int32),
+        jnp.asarray([1, 1, 0, 0], bool), jnp.zeros(4, jnp.int32), m)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    assert int(a["count"]) == 2
+    assert np.asarray(a["idx"]).tolist()[:2] == [1, 4]
+    assert np.asarray(async_buffer.valid_mask(a, m)).tolist() == \
+        [True, True] + [False] * 4
+
+
+def test_deposit_dedupe_replaces_latest():
+    m = 6
+    cfg = async_buffer.AsyncConfig(flush_k=4)
+    buf = async_buffer.init_buffer(cfg, m, slots=2, dim=3)
+    buf = async_buffer.deposit(
+        buf, _rows([1.0, 2.0]), jnp.asarray([1, 4], jnp.int32),
+        jnp.ones(2, bool), jnp.zeros(2, jnp.int32), m)
+    # client 4 uploads again before any flush: replaced in place
+    buf = async_buffer.deposit(
+        buf, _rows([7.0, 3.0]), jnp.asarray([4, 5], jnp.int32),
+        jnp.ones(2, bool), jnp.zeros(2, jnp.int32), m)
+    assert int(buf["count"]) == 3
+    idx = np.asarray(buf["idx"]).tolist()
+    assert idx[:3] == [1, 4, 5]  # slots: 1, 4 (replaced in place), 5
+    np.testing.assert_allclose(np.asarray(buf["upd"])[1], 7.0)
+    # indices stay unique among valid slots
+    valid = np.asarray(async_buffer.valid_mask(buf, m))
+    assert len(set(np.asarray(buf["idx"])[valid])) == int(valid.sum())
+
+
+def test_staleness_weights_and_reset():
+    m = 6
+    cfg = async_buffer.AsyncConfig(flush_k=2, alpha=1.0)
+    buf = async_buffer.init_buffer(cfg, m, slots=2, dim=3)
+    buf = dict(buf, version=jnp.asarray(3, jnp.int32))
+    buf = async_buffer.deposit(
+        buf, _rows([1.0, 2.0]), jnp.asarray([1, 4], jnp.int32),
+        jnp.ones(2, bool), jnp.asarray([3, 1], jnp.int32), m)
+    tau = np.asarray(async_buffer.staleness(buf))
+    assert tau[:2].tolist() == [0, 2]
+    w = np.asarray(async_buffer.staleness_weights(buf, m, cfg.alpha))
+    np.testing.assert_allclose(w[:2], [1.0, 1.0 / 3.0])
+    assert (w[2:] == 0.0).all()  # empty slots carry exactly zero weight
+
+    out = async_buffer.flush_reset(buf, m)
+    assert int(out["version"]) == 4
+    assert int(out["count"]) == 0
+    assert np.asarray(out["idx"]).tolist() == [m] * 3
+    ls = np.asarray(out["last_sync"]).tolist()
+    assert ls[1] == 4 and ls[4] == 4  # applied clients synced to new version
+    assert ls[0] == 0
+
+
+# --------------------------------------------------------------- (b) engine
+
+def test_async_flush1_bit_exact_with_barrier_round():
+    data, _ = _setup()
+    cohort = np.asarray([1, 4, 6], np.int32)
+    sync = _make(None)
+    asy = _make(async_buffer.AsyncConfig(flush_k=1, alpha=0.5))
+    ss = sync.init(jax.random.PRNGKey(3), data)
+    sa = asy.init(jax.random.PRNGKey(3), data)
+    rs, ms = sync.round(ss, data, jax.random.PRNGKey(5), cohort)
+    ra, ma = asy.round(sa, data, jax.random.PRNGKey(5), cohort)
+    for a, b in zip(_leaves(sync, rs), _leaves(asy, ra)):
+        np.testing.assert_array_equal(a, b)
+    assert int(ma["flushed"]) == 1 and int(ma["applied"]) == 3
+    assert int(ma["tau_max"]) == 0
+    assert int(ma["streams"]) == int(ms["streams"]) == 3
+
+
+def test_async_clustered_flush1_bit_exact_with_barrier_round():
+    data, _ = _setup()
+    cohort = np.asarray([1, 4, 6], np.int32)
+    sync = _make(None, num_streams=2)
+    asy = _make(async_buffer.AsyncConfig(flush_k=1), num_streams=2)
+    rs, ms = sync.round(sync.init(jax.random.PRNGKey(3), data), data,
+                        jax.random.PRNGKey(5), cohort)
+    ra, ma = asy.round(asy.init(jax.random.PRNGKey(3), data), data,
+                       jax.random.PRNGKey(5), cohort)
+    for a, b in zip(_leaves(sync, rs), _leaves(asy, ra)):
+        np.testing.assert_array_equal(a, b)
+    assert int(ma["streams"]) == int(ms["streams"])
+
+
+def test_async_flush1_trajectory_bit_exact_with_barrier():
+    """flush_k=1 applies every round's deposits fresh — the whole
+    trajectory must reproduce the barrier engine bit-for-bit (same
+    cohorts, same client-indexed keys, τ = 0 weights everywhere)."""
+    data, _ = _setup()
+    part = ParticipationConfig(cohort_size=3, seed=2)
+    hs = simulation.run(_make(None), lenet.apply, data,
+                        jax.random.PRNGKey(1), rounds=4, eval_every=1,
+                        participation=part)
+    ha = simulation.run(_make(async_buffer.AsyncConfig(flush_k=1)),
+                        lenet.apply, data, jax.random.PRNGKey(1), rounds=4,
+                        eval_every=1, participation=part)
+    assert hs.avg_acc == ha.avg_acc
+    assert hs.worst_acc == ha.worst_acc
+
+
+def test_async_fedavg_flush1_matches_barrier_round():
+    data, params0 = _setup()
+    cohort = np.asarray([1, 4, 6], np.int32)
+    sync = make_fedavg(lenet.apply, params0, FedConfig(batch_size=40))
+    asy = make_fedavg(lenet.apply, params0, FedConfig(
+        batch_size=40, async_buffer=async_buffer.AsyncConfig(flush_k=1)))
+    rs, _ = sync.round(sync.init(jax.random.PRNGKey(3), data), data,
+                       jax.random.PRNGKey(5), cohort)
+    ra, ma = asy.round(asy.init(jax.random.PRNGKey(3), data), data,
+                       jax.random.PRNGKey(5), cohort)
+    # delta form: θ + Σ w̃ (u − θ) equals Σ w̃ u only up to float re-
+    # association, so allclose rather than bit-exact
+    for a, b in zip(_leaves(sync, rs), _leaves(asy, ra)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    assert int(ma["streams"]) == 1 and int(ma["flushed"]) == 1
+
+
+def test_async_deposit_only_round_keeps_params():
+    data, _ = _setup()
+    asy = _make(async_buffer.AsyncConfig(flush_k=4))
+    state = asy.init(jax.random.PRNGKey(3), data)
+    before = _leaves(asy, state)
+    cohort = np.asarray([1, 4, 6], np.int32)
+    s1, m1 = asy.round(state, data, jax.random.PRNGKey(5), cohort)
+    assert int(m1["flushed"]) == 0 and int(m1["applied"]) == 0
+    assert int(m1["buffer_fill"]) == 3 and int(m1["streams"]) == 0
+    for a, b in zip(before, _leaves(asy, s1)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_async_flush_applies_across_rounds_with_staleness():
+    """Uploads banked over rounds flush together; clients whose base
+    model predates the last flush carry τ > 0."""
+    data, _ = _setup()
+    asy = _make(async_buffer.AsyncConfig(flush_k=2, alpha=0.5))
+    state = asy.init(jax.random.PRNGKey(3), data)
+    # round 1: clients {1, 4} flush immediately -> version 1
+    state, m1 = asy.round(state, data, jax.random.PRNGKey(5),
+                          np.asarray([1, 4], np.int32))
+    assert int(m1["flushed"]) == 1 and int(m1["tau_max"]) == 0
+    # round 2: client {2} deposits only (base version 0)
+    state, m2 = asy.round(state, data, jax.random.PRNGKey(6),
+                          np.asarray([2], np.int32))
+    assert int(m2["flushed"]) == 0 and int(m2["buffer_fill"]) == 1
+    # round 3: client {6} arrives -> flush of {2, 6}, both trained from
+    # version-0 rows while the server is at version 1 -> τ = 1
+    state, m3 = asy.round(state, data, jax.random.PRNGKey(7),
+                          np.asarray([6], np.int32))
+    assert int(m3["flushed"]) == 1 and int(m3["applied"]) == 2
+    assert int(m3["tau_max"]) == 1
+    assert float(m3["tau_mean"]) == pytest.approx(1.0)
+    assert int(np.asarray(state["abuf"]["version"])) == 2
+
+
+def test_async_absent_clients_keep_models():
+    data, _ = _setup()
+    asy = _make(async_buffer.AsyncConfig(flush_k=2))
+    state = asy.init(jax.random.PRNGKey(3), data)
+    before = _leaves(asy, state)
+    cohort = np.asarray([1, 4, 6], np.int32)
+    absent = np.asarray([0, 2, 3, 5, 7])
+    s1, m1 = asy.round(state, data, jax.random.PRNGKey(5), cohort)
+    assert int(m1["flushed"]) == 1
+    for a, b in zip(before, _leaves(asy, s1)):
+        np.testing.assert_array_equal(a[absent], b[absent])
+        assert np.abs(a[cohort] - b[cohort]).max() > 0
+
+
+def test_async_buffer_none_is_the_barrier_engine():
+    """The default stays the PR 4 engine — FedConfig() and an explicit
+    async_buffer=None build the identical dispatch."""
+    data, _ = _setup()
+    a = _make(None)
+    cfg_default = FedConfig(lr=0.1, momentum=0.9, epochs=1, batch_size=40)
+    assert cfg_default.async_buffer is None
+    cohort = np.asarray([1, 4, 6], np.int32)
+    ra, _ = a.round(a.init(jax.random.PRNGKey(3), data), data,
+                    jax.random.PRNGKey(5), cohort)
+    b = ucfl.make_ucfl(lenet.apply, _setup()[1], cfg_default,
+                       var_batch_size=40)
+    rb, _ = b.round(b.init(jax.random.PRNGKey(3), data), data,
+                    jax.random.PRNGKey(5), cohort)
+    for x, y in zip(_leaves(a, ra), _leaves(b, rb)):
+        np.testing.assert_array_equal(x, y)
+
+
+# --------------------------------------------------- (c) one compiled round
+
+@pytest.mark.parametrize("mesh", [None, "auto"])
+def test_async_availability_one_compile(mesh):
+    data, _ = _setup()
+    m = data.num_clients
+    trace = np.zeros((m, 4), bool)
+    trace[:4, 0] = True   # 4 eligible
+    trace[:1, 1] = True   # 1 eligible (deposit-only under flush_k=3)
+    trace[:, 2] = True    # 8 eligible (subsampled)
+    # phase 3: nobody online -> the engine skips the round entirely
+    part = ParticipationConfig(cohort_size=4, sampler="availability",
+                               availability=trace)
+    strat = _make(async_buffer.AsyncConfig(flush_k=3), mesh=mesh)
+    h = simulation.run(strat, lenet.apply, data, jax.random.PRNGKey(1),
+                       rounds=8, eval_every=8, participation=part)
+    assert strat.round.masked_jit._cache_size() == 1
+    flushes = [mt.get("flushed") for mt in h.metrics]
+    assert h.metrics[-1].get("skipped", False) or flushes
+
+
+def test_async_under_mesh_matches_unsharded():
+    data, _ = _setup()
+    a = _make(async_buffer.AsyncConfig(flush_k=2))
+    b = _make(async_buffer.AsyncConfig(flush_k=2), mesh="auto")
+    sa = a.init(jax.random.PRNGKey(3), data)
+    sb = b.init(jax.random.PRNGKey(3), data)
+    cohort = np.asarray([1, 4, 6], np.int32)
+    ra, ma = a.round(sa, data, jax.random.PRNGKey(5), cohort)
+    rb, mb = b.round(sb, data, jax.random.PRNGKey(5), cohort)
+    assert int(ma["applied"]) == int(mb["applied"]) == 3
+    # sharded local SGD matches unsharded within f32 round-off (see
+    # tests/test_sharded_cohort.py for why not bit-exact)
+    for x, y in zip(_leaves(a, ra), _leaves(b, rb)):
+        np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-6)
+    # buffer bookkeeping is integer state and must agree exactly — except
+    # for the slot COUNT, which scales with the mesh-padded cohort (B =
+    # flush_k - 1 + padded slots), so compare shape-independent fields
+    # plus the set of pending clients (empty after this flush in both)
+    for k in ("count", "version", "last_sync"):
+        np.testing.assert_array_equal(np.asarray(ra["abuf"][k]),
+                                      np.asarray(rb["abuf"][k]))
+    for st in (ra, rb):
+        assert not np.asarray(
+            async_buffer.valid_mask(st["abuf"], data.num_clients)).any()
+
+
+# ------------------------------------------------------------- (d) dispatch
+
+def test_async_unsupported_strategy_raises():
+    _, params0 = _setup()
+    with pytest.raises(NotImplementedError):
+        make_scaffold(lenet.apply, params0, FedConfig(
+            async_buffer=async_buffer.AsyncConfig()))
+
+
+def test_async_dense_path_raises():
+    data, _ = _setup()
+    asy = _make(async_buffer.AsyncConfig(flush_k=2))
+    state = asy.init(jax.random.PRNGKey(3), data)
+    with pytest.raises(ValueError):
+        asy.round(state, data, jax.random.PRNGKey(5), None)
+
+
+def test_async_with_w_refresh_raises():
+    _, params0 = _setup()
+    with pytest.raises(ValueError):
+        ucfl.make_ucfl(lenet.apply, params0, FedConfig(
+            w_refresh=RefreshConfig(),
+            async_buffer=async_buffer.AsyncConfig()))
+
+
+# --------------------------------------------------------------- (e) traces
+
+@pytest.mark.parametrize("gen,kw", [
+    (diurnal_trace, {}),
+    (diurnal_trace, {"spread": False, "peak": 0.7, "trough": 0.2}),
+    (battery_trace, {"duty": 2, "recharge": 3}),
+    (battery_trace, {"duty": 1, "recharge": 0}),
+])
+def test_trace_generators_contract(gen, kw):
+    t = gen(12, 8, seed=4, **kw)
+    assert t.shape == (12, 8) and t.dtype == bool
+    assert t.any(axis=1).all()  # every client is up somewhere
+    np.testing.assert_array_equal(t, gen(12, 8, seed=4, **kw))  # determinism
+
+
+def test_trace_generator_validation():
+    with pytest.raises(ValueError):
+        diurnal_trace(4, 8, peak=0.2, trough=0.5)
+    with pytest.raises(ValueError):
+        battery_trace(4, 8, duty=0)
+
+
+def test_battery_trace_duty_cycle_structure():
+    t = battery_trace(6, 10, duty=2, recharge=3, seed=0)
+    # every client's up-fraction matches its duty cycle within one phase
+    per_client = t.sum(axis=1)
+    assert per_client.min() >= 1
+    assert per_client.max() <= 10 * 2 // 5 + 2

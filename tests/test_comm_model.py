@@ -61,3 +61,81 @@ def test_rounds_to_time_cumulative():
     assert len(ts) == 5
     diffs = [b - a for a, b in zip(ts, ts[1:])]
     assert all(abs(d - diffs[0]) < 1e-9 for d in diffs)
+
+
+def test_groupcast_without_streams_raises_not_asserts():
+    """The three groupcast sites must raise a real ValueError — a bare
+    assert is stripped under ``python -O`` and groupcast would silently
+    misprice (regression: comm_model used asserts in all three)."""
+    p = cm.SystemParams(m=20)
+    with pytest.raises(ValueError):
+        cm.round_time(p, "groupcast")
+    with pytest.raises(ValueError):
+        cm.downlink_bytes_per_round(1000, "groupcast", 20)
+    with pytest.raises(ValueError):
+        cm.ici_collective_bytes(1000, "groupcast", 20)
+    with pytest.raises(ValueError):
+        cm.async_round_time(p, "groupcast", cohort_size=8, flush_k=2)
+
+
+def test_expected_kth_compute_time_order_statistics():
+    p = cm.SystemParams(m=16, inv_mu=1.0)
+    # k = c recovers the straggler max; k < c is strictly cheaper and
+    # monotone in k
+    assert cm.expected_kth_compute_time(p, 16) == \
+        pytest.approx(cm.expected_compute_time(p))
+    ts = [cm.expected_kth_compute_time(p, k) for k in range(1, 17)]
+    assert all(a < b for a, b in zip(ts, ts[1:]))
+    # E[min of c] = T_min + 1/(c mu)
+    assert ts[0] == pytest.approx(p.t_min + 1.0 / 16)
+    # reliable clients (inv_mu = 0): every order statistic is T_min
+    rel = cm.SystemParams(m=16, inv_mu=0.0)
+    assert cm.expected_kth_compute_time(rel, 3) == rel.t_min
+
+
+def test_async_round_time_beats_barrier_iff_flush_early():
+    p = cm.SystemParams(m=20, rho=4.0, inv_mu=2.0)
+    sync = cm.round_time(p, "unicast", cohort_size=10)
+    asy = cm.async_round_time(p, "unicast", cohort_size=10, flush_k=4)
+    assert asy < sync  # fewer arrivals waited on AND fewer streams served
+    # flush_k >= c with the full batch applied degrades to the barrier
+    assert cm.async_round_time(p, "unicast", cohort_size=10, flush_k=10,
+                               applied=10) == pytest.approx(sync)
+    # deposit-only rounds span their arrivals but serve nothing
+    idle = cm.async_round_time(p, "unicast", cohort_size=10, flush_k=99,
+                               applied=0)
+    assert idle == pytest.approx(sync - 10 * p.t_dl)
+
+
+def test_async_round_time_schemes_and_applied_batch():
+    p = cm.SystemParams(m=20, rho=4.0, inv_mu=1.0)
+    b = cm.async_round_time(p, "broadcast", cohort_size=8, flush_k=2,
+                            applied=5)
+    g = cm.async_round_time(p, "groupcast", num_streams=3, cohort_size=8,
+                            flush_k=2, applied=5)
+    u = cm.async_round_time(p, "unicast", cohort_size=8, flush_k=2,
+                            applied=5)
+    assert b <= g <= u
+    assert u - b == 4 * p.t_dl  # 5 applied streams vs 1 broadcast
+
+
+def test_sample_arrival_times_model():
+    import numpy as np
+
+    p = cm.SystemParams(m=400, rho=4.0, t_dl=1.0, t_min=1.0, inv_mu=2.0)
+    rng = np.random.default_rng(0)
+    t = cm.sample_arrival_times(p, rng, cohort_size=200)
+    assert t.shape == (200,)
+    floor = p.t_dl + p.t_min + p.rho * p.t_dl
+    assert (t >= floor).all()
+    assert t.mean() == pytest.approx(floor + p.inv_mu, rel=0.2)
+    # reliable fleet: deterministic arrivals
+    rel = cm.SystemParams(m=10, inv_mu=0.0)
+    tr = cm.sample_arrival_times(rel, rng)
+    assert np.allclose(tr, rel.t_dl + rel.t_min + rel.rho * rel.t_dl)
+    # the k-th sampled order statistic tracks its analytic expectation
+    ks = np.sort(t)
+    k = 50
+    want = p.t_dl + p.rho * p.t_dl + cm.expected_kth_compute_time(
+        p, k, cohort_size=200)
+    assert ks[k - 1] == pytest.approx(want, rel=0.2)

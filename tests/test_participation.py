@@ -357,3 +357,51 @@ def test_scale_target_m128_fraction01_chunk16():
                        warmup=False)
     assert h.metrics[-1]["cohort_size"] == 13
     assert 0.0 <= h.final_avg <= 1.0
+
+
+# ------------------------------------------------- reporting satellites
+
+def test_wall_s_excludes_eval_time(monkeypatch):
+    """History.wall_s must measure steady-state ROUNDS only — eval
+    frequency is a measurement choice, and it used to leak into the
+    timer. A deliberately slow (stubbed) evaluate must land in eval_s,
+    not wall_s."""
+    import time
+    import types
+
+    from repro.core.strategy import Strategy
+
+    def slow_eval(apply_fn, params, x, y, batch=None, mesh=None):
+        time.sleep(0.2)
+        return np.zeros(4)
+
+    monkeypatch.setattr(simulation, "evaluate", slow_eval)
+    strat = Strategy("stub", init=lambda key, data: {"p": jnp.zeros(())},
+                     round=lambda s, d, k, c=None: (s, {"streams": 0}),
+                     eval_params=lambda s: s["p"])
+    data = types.SimpleNamespace(num_clients=4, n=np.ones(4), x=None,
+                                 y=None, x_test=None, y_test=None)
+    h = simulation.run(strat, None, data, jax.random.PRNGKey(0), rounds=3,
+                       eval_every=1, warmup=False)
+    assert h.eval_s >= 0.55            # three stubbed eval passes
+    assert h.wall_s < h.eval_s / 2     # rounds are trivial next to them
+    assert len(h.avg_acc) == 3
+
+
+def test_run_trials_reports_worst_std():
+    """The paper's worst-node headline metric ships with its spread:
+    run_trials must report worst_std alongside avg_std (regression — it
+    silently dropped it)."""
+    data_fn = functools.partial(
+        synthetic.label_shift, m=4, n=40, n_test=10, num_classes=4,
+        alpha=0.4, hw=(16, 16))
+    params0 = lenet.init(jax.random.PRNGKey(0), input_hw=(16, 16),
+                         channels=1, num_classes=4)
+    res = simulation.run_trials(
+        lambda t: REGISTRY["fedavg"](lenet.apply, params0,
+                                     FedConfig(batch_size=20)),
+        lenet.apply, lambda key: data_fn(key), trials=2, rounds=2)
+    assert set(res) >= {"avg_mean", "avg_std", "worst_mean", "worst_std"}
+    worsts = [h.paired_best[1] for h in res["histories"]]
+    assert res["worst_std"] == pytest.approx(float(np.std(worsts)))
+    assert res["worst_std"] >= 0.0

@@ -288,6 +288,44 @@ def test_refresh_availability_one_compile(kind):
     assert int(h.metrics[-1]["staleness_max"]) > 0
 
 
+def test_skipped_round_still_ages_staleness():
+    """Regression: an all-offline round between two refresh rounds used
+    to freeze the staleness counters — ``simulation.run`` set
+    ``{"skipped": True}`` without touching strategy state. The
+    ``Strategy.skip_round`` hook now advances them, so a client absent
+    for rounds 1..3 (one of them attended by nobody) reports staleness 3,
+    not 2."""
+    data, _ = _setup()
+    m = data.num_clients
+    trace = np.zeros((m, 3), bool)
+    trace[:4, 0] = True   # round 1: clients 0-3 eligible
+    #                       round 2: nobody online -> engine skips
+    trace[:2, 2] = True   # round 3: clients 0-1 eligible
+    part = ParticipationConfig(cohort_size=2, sampler="availability",
+                               availability=trace)
+    strat = _make()
+    assert strat.skip_round is not None
+    h = simulation.run(strat, lenet.apply, data, jax.random.PRNGKey(1),
+                       rounds=3, eval_every=1, participation=part)
+    assert h.metrics[1].get("skipped") is True
+    # clients 4..7 are never eligible: 3 rounds passed, all 3 must count
+    assert int(h.metrics[-1]["staleness_max"]) == 3
+    stale = np.asarray(h.metrics[-1]["staleness"])
+    assert (stale[4:] == 3).all()
+
+    # the hook itself: only the counters move
+    state = strat.init(jax.random.PRNGKey(3), data)
+    w0 = np.asarray(state["W"]).copy()
+    skipped = strat.skip_round(state)
+    np.testing.assert_array_equal(
+        np.asarray(skipped["refresh"]["staleness"]),
+        np.asarray(state["refresh"]["staleness"]) + 1)
+    np.testing.assert_array_equal(np.asarray(skipped["W"]), w0)
+
+    # no-refresh strategies have nothing to age on a skipped round
+    assert _make(refresh=None).skip_round is None
+
+
 # ------------------------------------------------------------------ (d) mesh
 
 def test_refresh_under_mesh_matches_unsharded():
