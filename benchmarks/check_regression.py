@@ -23,6 +23,10 @@ Turns the ROADMAP's engine targets into enforced checks:
     masked mix-scatter path. (The §V-D wall-clock WIN of async is priced
     by the comm model in ``participation_sweep.py`` — this gate only
     bounds its host-compute overhead.)
+  * m-scaling — a fixed-cohort round must cost O(c·d), not O(m·d). The
+    ``m_scaling_ratio`` (round time at m=512 over m=8, same cohort size)
+    must stay within ``--max-mscale-ratio`` (default 1.3); above it some
+    server component regressed to touching every client row per round.
 
 Run the benchmark first, then the gate::
 
@@ -45,11 +49,11 @@ DEFAULT_JSON = pathlib.Path(__file__).resolve().parent.parent / \
 
 
 def _gate(payload, key, baseline: str, regime: str, max_ratio: float,
-          why: str) -> bool:
+          why: str, section: str = "results") -> bool:
     """Print one ratio against its gate; True = within the gate."""
     ratio = float(payload[key])
-    base = payload.get("results", {}).get(baseline, {}).get("round_us")
-    reg = payload.get("results", {}).get(regime, {}).get("round_us")
+    base = payload.get(section, {}).get(baseline, {}).get("round_us")
+    reg = payload.get(section, {}).get(regime, {}).get("round_us")
     print(f"{key} = {ratio:.3f} ({regime} {reg} us / {baseline} {base} us; "
           f"gate <= {max_ratio})")
     if ratio > max_ratio:
@@ -69,6 +73,9 @@ def main(argv=None) -> int:
                     help="gate on refresh_over_cohort_ratio")
     ap.add_argument("--max-async-ratio", type=float, default=1.2,
                     help="gate on async_over_cohort_ratio")
+    ap.add_argument("--max-mscale-ratio", type=float, default=1.3,
+                    help="gate on m_scaling_ratio (fixed-cohort round "
+                         "time at m=512 over m=8)")
     args = ap.parse_args(argv)
 
     try:
@@ -88,6 +95,13 @@ def main(argv=None) -> int:
                     "deposit + cond-flush on top of the barrier mix — "
                     "check for a recompile, a host sync, or a flush "
                     "path that stopped reusing the fused mix-scatter")
+        ok &= _gate(payload, "m_scaling_ratio", "m8", "m512",
+                    args.max_mscale_ratio,
+                    "a fixed-cohort round's time grew with the client "
+                    "count m — some server component regressed to "
+                    "O(m·d): a broadcast mix, a padding copy of the "
+                    "stacked state, or a host sync touching every row",
+                    section="m_scaling")
     except (OSError, KeyError, ValueError) as e:
         print(f"check_regression: cannot read ratios from {args.json}: {e}",
               file=sys.stderr)

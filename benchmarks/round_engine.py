@@ -45,8 +45,10 @@ the repo root; ``benchmarks/check_regression.py`` turns its
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import pathlib
+import subprocess
 import sys
 import time
 
@@ -123,6 +125,68 @@ def _interleaved_rounds_us(entries, data, rounds: int) -> dict:
     return {name: float(np.min(ts)) * 1e6 for name, ts in samples.items()}
 
 
+def _git_commit() -> str | None:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=pathlib.Path(__file__).resolve().parent.parent)
+        return out.stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+M_SCALING = (8, 64, 512)
+M_SCALING_COHORT = 4
+
+
+def _m_scaling_us(s, base_rounds: int) -> dict[int, float]:
+    """Round time at a FIXED cohort size while m grows 8 -> 512.
+
+    The server-side cost of a cohort round is O(c·d) — gather, (c, c)
+    mix, scatter all touch only cohort rows — so the round time must be
+    ~flat in m (the gate allows 1.3x for cache/allocator noise). A ratio
+    above that means some round component regressed to O(m·d): a
+    broadcast mix, a padding copy of the stacked state, or a host sync
+    touching every row. Same interleaved-min discipline as
+    :func:`_interleaved_rounds_us`, but each m needs its own dataset so
+    the rotation runs over (m, strategy, data) triples.
+    """
+    pcfg = part.ParticipationConfig(cohort_size=M_SCALING_COHORT)
+    rounds = max(6, base_rounds // 2)
+    entries = []
+    for mm in M_SCALING:
+        sm = dataclasses.replace(s, m=mm)
+        data = common.scenario_data(
+            "label_shift", jax.random.fold_in(jax.random.PRNGKey(11), mm),
+            sm)
+        params0 = common.make_params0(jax.random.PRNGKey(12), s)
+        entries.append((mm, common.make_strategy("ucfl", params0, sm), data))
+    states, keys = {}, {}
+    samples = {mm: [] for mm, _, _ in entries}
+    for mm, strat, data in entries:
+        key = jax.random.PRNGKey(1)
+        key, ikey = jax.random.split(key)
+        states[mm] = strat.init(ikey, data)
+        keys[mm] = key
+        wcohort = part.sample_cohort(pcfg, 1, mm, data.n)
+        wstate, _ = strat.round(
+            simulation.donation_safe_copy(states[mm]), data,
+            jax.random.fold_in(key, 0x5EED), wcohort)
+        jax.block_until_ready(wstate)
+        del wstate
+    for rnd in range(1, rounds + 1):
+        offset = rnd % len(entries)
+        for mm, strat, data in entries[offset:] + entries[:offset]:
+            keys[mm], rkey = jax.random.split(keys[mm])
+            cohort = part.sample_cohort(pcfg, rnd, mm, data.n)
+            t0 = time.time()
+            states[mm], _ = strat.round(states[mm], data, rkey, cohort)
+            jax.block_until_ready(states[mm])
+            samples[mm].append(time.time() - t0)
+    return {mm: float(np.min(ts)) * 1e6 for mm, ts in samples.items()}
+
+
 def run(scale) -> list[str]:
     rows = []
     s = scale
@@ -173,6 +237,7 @@ def run(scale) -> list[str]:
 
     t0 = time.time()
     times = _interleaved_rounds_us(entries, data, rounds)
+    mtimes = _m_scaling_us(s, rounds)
     total_s = time.time() - t0
 
     results, sharded = {}, {}
@@ -192,6 +257,16 @@ def run(scale) -> list[str]:
             f"m={s.m};cohort={cohort};shards={nshard};devices={ndev}"))
         print(rows[-1], flush=True)
 
+    m_scaling = {}
+    for mm in M_SCALING:
+        m_scaling[f"m{mm}"] = {"round_us": mtimes[mm], "m": mm,
+                               "cohort_size": M_SCALING_COHORT}
+        rows.append(common.csv_row(
+            f"round_engine/ucfl_mscale_m{mm}", mtimes[mm],
+            f"m={mm};cohort={M_SCALING_COHORT};rounds={max(6, rounds // 2)}"))
+        print(rows[-1], flush=True)
+    m_ratio = mtimes[M_SCALING[-1]] / max(mtimes[M_SCALING[0]], 1e-9)
+
     ratio = results["availability"]["round_us"] / \
         max(results["cohort"]["round_us"], 1e-9)
     refresh_ratio = results["refresh"]["round_us"] / \
@@ -202,19 +277,26 @@ def run(scale) -> list[str]:
         "config": {"m": s.m, "cohort_size": cohort, "rounds": rounds,
                    "model": "lenet", "scenario": "label_shift",
                    "backend": jax.default_backend(),
-                   "device_count": ndev, "timed_s": total_s},
+                   "device_count": ndev, "timed_s": total_s,
+                   # provenance: PR-over-PR artifact comparisons need to
+                   # know what produced the numbers
+                   "jax_version": jax.__version__,
+                   "git_commit": _git_commit()},
         "results": results,
         "sharded": sharded,
+        "m_scaling": m_scaling,
         "availability_over_cohort_ratio": ratio,
         "refresh_over_cohort_ratio": refresh_ratio,
         "async_over_cohort_ratio": async_ratio,
+        "m_scaling_ratio": m_ratio,
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
-    for label, r in (("availability_over_cohort", ratio),
-                     ("refresh_over_cohort", refresh_ratio),
-                     ("async_over_cohort", async_ratio)):
+    for label, r, tgt in (("availability_over_cohort", ratio, 1.2),
+                          ("refresh_over_cohort", refresh_ratio, 1.2),
+                          ("async_over_cohort", async_ratio, 1.2),
+                          ("m_scaling_m512_over_m8", m_ratio, 1.3)):
         rows.append(common.csv_row(
             f"round_engine/{label}", r,
-            f"target<=1.2;json={BENCH_JSON.name}"))
+            f"target<={tgt};json={BENCH_JSON.name}"))
         print(rows[-1], flush=True)
     return rows

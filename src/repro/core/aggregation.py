@@ -338,6 +338,29 @@ def staleness_update(stale, idx, mask):
     return bumped.at[idx].set(reset, mode="drop")
 
 
+def cohort_gather(full, safe, *, impl=None):
+    """Round-start cohort gather ``full[safe]`` as ONE kernel launch.
+
+    A single-leaf stacked tree gathers through the HBM-resident per-row
+    DMA kernel (:func:`repro.kernels.ops.cohort_gather`) on the
+    zero-copy (m, d) flat view — ``full`` never streams through VMEM, so
+    traffic is O(c·d) at any m. Multi-leaf trees fall back to the
+    per-leaf ``jnp.take`` (:func:`repro.core.pytree.gather_rows`) —
+    XLA's gather is already O(c·d) there and raveling the full state
+    would cost the copy this path avoids. ``safe`` must be pre-clamped
+    (:func:`safe_gather_index`); semantics are bit-identical to
+    ``gather_rows``.
+    """
+    leaves, treedef = jax.tree.flatten(full)
+    if len(leaves) == 1:
+        leaf = leaves[0]
+        flat = leaf.reshape(leaf.shape[0], -1)  # zero-copy view
+        out = ops.cohort_gather(flat, safe, impl=impl)
+        return jax.tree.unflatten(
+            treedef, [out.reshape((safe.shape[0],) + leaf.shape[1:])])
+    return jax.tree.map(lambda x: jnp.take(x, safe, axis=0), full)
+
+
 def mix_scatter(full, cohort_updated, rows, idx, mask, *, impl=None):
     """Apply per-slot mixing rows and scatter into the full stacked state.
 
@@ -375,10 +398,16 @@ def mix_scatter_flat(full, flat_c, rows, idx, mask, *, impl=None):
     there is no cohort-stacked tree to ravel: single-leaf states take the
     same fused ``masked_mix_scatter`` kernel pass, multi-leaf trees mix
     once on (c, d) and unravel/row-scatter per leaf against ``full``'s
-    trailing shapes. Sentinel/mask semantics are identical to
+    trailing shapes. ``flat_c`` wider than the state's flat dim (the
+    async buffer allocates rows at the 128-aligned width,
+    ``ops.aligned_dim``) is sliced back — the tail columns are the
+    deposit-time zero padding. Sentinel/mask semantics are identical to
     :func:`mix_scatter`.
     """
     leaves, treedef = jax.tree.flatten(full)
+    d = sum(l.size // l.shape[0] for l in leaves)
+    if flat_c.shape[1] > d:
+        flat_c = flat_c[:, :d]
     if len(leaves) == 1:
         leaf = leaves[0]
         flat = leaf.reshape(leaf.shape[0], -1)  # zero-copy view

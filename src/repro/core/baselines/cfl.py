@@ -25,7 +25,7 @@ import numpy as np
 from repro.core import aggregation
 from repro.core.baselines import common
 from repro.core.baselines.common import broadcast_params, group_average
-from repro.core.pytree import gather_rows, stacked_ravel
+from repro.core.pytree import stacked_ravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 
@@ -70,19 +70,21 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         new_params = group_average(updated, assignment, n, impl=kernel_impl)
         return new_params, stacked_ravel(delta)
 
+    sops = common.StateOps(cfg.mesh, cfg.shard_state)
+
     @functools.partial(jax.jit, donate_argnums=(0,))
     def _masked(params, idx, mask, assignment_c, n, x, y, key):
         # within-cluster FedAvg over the masked cohort members of each
         # cluster; absent clients keep their last model.
         safe = aggregation.safe_gather_index(idx, x.shape[0])
-        pc = gather_rows(params, safe)
+        pc = sops.gather(params, safe)
         keys = common.cohort_keys(key, x.shape[0], safe)
         updated, _ = local(pc, x[safe], y[safe], None, keys=keys)
         delta = jax.tree.map(lambda a, b: a - b, updated, pc)
         rows = aggregation.masked_group_rows(assignment_c,
                                              jnp.take(n, safe), mask)
-        new_params = aggregation.mix_scatter(params, updated, rows, idx,
-                                             mask, impl=kernel_impl)
+        new_params = sops.mix_scatter(params, updated, rows, idx, mask,
+                                      impl=kernel_impl)
         return new_params, stacked_ravel(delta)
 
     def _maybe_split(assignment, members_pool, dmat_rows):
@@ -147,5 +149,6 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     return Strategy("cfl", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
-                                        async_cfg=cfg.async_buffer),
+                                        async_cfg=cfg.async_buffer,
+                                        sops=sops),
                     lambda s: s["params"], comm_scheme="groupcast")

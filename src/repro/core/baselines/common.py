@@ -115,10 +115,180 @@ def refresh_skip_round(state):
                 refresh=dict(refresh, staleness=refresh["staleness"] + 1))
 
 
+# ----------------------------------------------------------- state layout
+
+class StateOps:
+    """Layout-aware primitives over the (m, ·) stacked server state.
+
+    One object per strategy, built from the ``FedConfig`` knobs
+    (``StateOps(cfg.mesh, cfg.shard_state)``) and closed over by the
+    jitted round bodies, so every gather/scatter/mix against the stacked
+    state goes through ONE dispatch point:
+
+      * replicated (``shard_state=False``, the default): every method is
+        exactly the pre-existing helper (``gather_rows``,
+        ``aggregation.mix_scatter``, :func:`fedavg_masked_mix`, ...) —
+        bit-exact with the unsharded engine, mesh or not.
+      * row-sharded (``shard_state=True``): the state's leading axis
+        lives partitioned across the ``clients`` mesh (see the
+        row-sharded section of :mod:`repro.federated.mesh`); gathers
+        assemble the cohort with a (c, d) psum, scatters/mixes rewrite
+        only the owner shard's block, and the buffered-async flush's
+        tiled all-gather of its (B, d) buffer is the only model-sized
+        collective. Requires a mesh and ``m % num_shards == 0``.
+
+    Cohort-shaped intermediates (the (c, ·) gathered trees, (c, c) mix
+    rows, per-slot arrays) are always replicated — only (m, ·) /(B, ·)
+    stacked state changes layout.
+    """
+
+    def __init__(self, mesh=None, shard_state: bool = False):
+        mesh = mesh_lib.resolve(mesh)
+        if shard_state and mesh is None:
+            raise ValueError(
+                "FedConfig.shard_state requires a mesh (FedConfig.mesh): "
+                "row-sharding partitions the state across the clients "
+                "mesh's devices")
+        self.mesh = mesh
+        self.sharded = bool(shard_state)
+
+    # ---- cohort row movement
+
+    def gather(self, tree, safe):
+        """Cohort gather ``tree[safe]`` (``safe`` pre-clamped).
+
+        Replicated single-leaf states route through the HBM-resident
+        per-row DMA gather kernel (:func:`aggregation.cohort_gather` —
+        bit-identical to ``gather_rows``, O(c·d) traffic at any m)."""
+        if self.sharded:
+            return mesh_lib.shard_gather_rows(tree, safe, self.mesh)
+        return aggregation.cohort_gather(tree, safe)
+
+    def scatter(self, tree, idx, updates):
+        """Sentinel-drop cohort scatter (pads never write)."""
+        if self.sharded:
+            return mesh_lib.shard_scatter_rows(tree, idx, updates,
+                                               self.mesh)
+        return scatter_rows(tree, idx, updates)
+
+    # ---- fused PS mixes
+
+    def mix_scatter(self, full, cohort_updated, rows, idx, mask, *,
+                    impl=None):
+        """:func:`repro.core.aggregation.mix_scatter` in either layout."""
+        if not self.sharded:
+            return aggregation.mix_scatter(full, cohort_updated, rows,
+                                           idx, mask, impl=impl)
+        return self.mix_scatter_flat(full, stacked_ravel(cohort_updated),
+                                     rows, idx, mask, impl=impl)
+
+    def mix_scatter_flat(self, full, flat_c, rows, idx, mask, *,
+                         impl=None, flat_sharded=False):
+        """:func:`repro.core.aggregation.mix_scatter_flat` in either
+        layout. Sharded: the (c, c) × (c, d) mix is computed redundantly
+        per device (c ≪ m — cheaper than a collective) and each device's
+        fused kernel rewrites only the rows its block owns (localized
+        indices; non-owned slots become per-block sentinels).
+        ``flat_sharded=True`` marks ``flat_c`` as itself row-sharded
+        (the async buffer's pending ``upd`` rows): it is all-gathered
+        INSIDE the same shard_map — the flush's one model-sized
+        collective."""
+        if not self.sharded:
+            return aggregation.mix_scatter_flat(full, flat_c, rows, idx,
+                                                mask, impl=impl)
+        update = mesh_lib.shard_block_update(
+            lambda block, loc, lm, fc, w: aggregation.mix_scatter_flat(
+                block, fc, w, loc, lm, impl=impl),
+            self.mesh, gather_args=1 if flat_sharded else 0)
+        return update(full, idx, mask, flat_c, rows)
+
+    def fedavg_mix(self, params, updated, idx, mask, n, *, impl=None):
+        """:func:`fedavg_masked_mix` in either layout (the (1, c) mix is
+        replicated; sharded states broadcast it block-wise)."""
+        if not self.sharded:
+            return fedavg_masked_mix(params, updated, idx, mask, n,
+                                     impl=impl)
+        safe = aggregation.safe_gather_index(idx, n.shape[0])
+        w = aggregation.masked_fedavg_weights(jnp.take(n, safe), mask)
+        mixed = aggregation.user_centric(updated, w, impl=impl)
+        return mesh_lib.shard_broadcast_rows(params, mixed,
+                                             jnp.any(mask), self.mesh)
+
+    def constrain(self, tree):
+        """Pin a traced (m, ·) output to the state's layout (no-op when
+        replicated) — used where plain jnp ops produce the new state."""
+        if self.sharded:
+            return mesh_lib.constrain_rows(tree, self.mesh)
+        return tree
+
+    # ---- host-side commits (outside jit)
+
+    def commit_state(self, state, shard_keys=("params",)):
+        """Commit a strategy-state dict to its steady-state shardings.
+
+        ``shard_keys`` names the row-sharded (m, ·) entries; everything
+        else (W, cohort bookkeeping, refresh buffers, host leaves) is
+        replicate-committed. No-op without a mesh, copy-free once
+        committed — the dispatcher calls this every round to keep the
+        one-compilation guarantee (see :func:`mesh.commit_replicated`).
+        """
+        if self.mesh is None:
+            return state
+        if not self.sharded:
+            return mesh_lib.commit_replicated(state, self.mesh)
+        out = dict(state)
+        for k, v in state.items():
+            if k in shard_keys:
+                out[k] = mesh_lib.commit_rows(v, self.mesh)
+            elif k == "abuf" and v is not None:
+                out[k] = self.commit_buffer(v)
+            else:
+                out[k] = mesh_lib.commit_replicated(v, self.mesh)
+        return out
+
+    # ---- buffered-async buffer layout
+
+    @property
+    def buffer_shards(self) -> int:
+        """Shard count the async buffer's B axis must divide by."""
+        return mesh_lib.num_shards(self.mesh) if self.sharded else 1
+
+    def buffer_scatter(self):
+        """Deposit hook for :func:`repro.federated.async_buffer.deposit`:
+        routes each upload row to its owner shard of the row-sharded
+        (B, d) ``upd`` array. None (plain ``.at[].set``) when replicated.
+        """
+        if not self.sharded:
+            return None
+        mesh = self.mesh
+        return lambda upd, dest, rows: mesh_lib.shard_scatter_rows(
+            upd, dest, rows, mesh)
+
+    def buffer_gather(self, upd):
+        """Replicate the pending-upload rows for a flush — the ONLY
+        model-sized collective of the sharded async engine."""
+        if self.sharded:
+            return mesh_lib.all_gather_rows(upd, self.mesh)
+        return upd
+
+    def commit_buffer(self, buf):
+        """Commit an async buffer: ``upd`` row-sharded, metadata
+        (idx/ver/count/version/last_sync) replicated."""
+        if self.mesh is None:
+            return buf
+        if not self.sharded:
+            return mesh_lib.commit_replicated(buf, self.mesh)
+        meta = {k: v for k, v in buf.items() if k != "upd"}
+        out = mesh_lib.commit_replicated(meta, self.mesh)
+        out["upd"] = mesh_lib.commit_rows(buf["upd"], self.mesh)
+        return out
+
+
 # ------------------------------------------------------------------ engine
 
 def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None,
-                 async_fn=None, async_cfg=None):
+                 async_fn=None, async_cfg=None, sops=None,
+                 shard_keys=("params",)):
     """Build ``round(state, data, key, cohort=None)`` from the two paths.
 
     Args:
@@ -148,6 +318,12 @@ def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None,
         construction time: the strategy's PS step has no buffered form
         (SCAFFOLD controls, Ditto/pFedMe personal models, FedFomo
         client-side mixing, ucfl_parallel's m× streams).
+      sops: the strategy's :class:`StateOps` (built from
+        ``FedConfig.mesh`` / ``FedConfig.shard_state``). When it is
+        row-sharded, the state is committed per ``shard_keys`` (the
+        names of the (m, ·) stacked entries) and ``cohort=None`` raises
+        — the dense path trains every client and broadcasts the whole
+        state, which is exactly the O(m·d) traffic shard_state removes.
 
     The returned ``round`` accepts ``cohort=None`` (dense), a
     :class:`~repro.federated.participation.Cohort`, or a plain index
@@ -161,17 +337,27 @@ def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None,
             "step is the masked row aggregation)")
     use_async = async_cfg is not None
     mesh = mesh_lib.resolve(mesh)
+    sharded = sops is not None and sops.sharded
 
     def round(state, data, key, cohort=None):
-        if mesh is not None:
-            # replicate-commit the state so round 1 already enters with
-            # the steady-state input shardings (the round's outputs are
-            # replicated over the mesh) — otherwise jit would compile a
-            # second, post-warm-up entry when round 2 first sees a
-            # committed state. No-op after the first round.
+        if sops is not None and sops.mesh is not None:
+            # commit the state so round 1 already enters with the
+            # steady-state input shardings (replicated, or row-sharded
+            # per shard_keys) — otherwise jit would compile a second,
+            # post-warm-up entry when round 2 first sees a committed
+            # state. No-op after the first round.
+            state = sops.commit_state(state, shard_keys)
+        elif mesh is not None:
             state = mesh_lib.commit_replicated(state, mesh)
         cohort = participation.as_cohort(cohort, data.num_clients)
         if cohort is None:
+            if sharded:
+                raise ValueError(
+                    "FedConfig.shard_state requires cohort rounds: "
+                    "cohort=None is the dense full-participation path, "
+                    "whose broadcast is the O(m·d) traffic row-sharding "
+                    "removes — pass a participation config (or drop "
+                    "shard_state)")
             if use_async:
                 raise ValueError(
                     "the buffered-async engine processes arrival cohorts; "
@@ -206,7 +392,7 @@ def cohort_keys(key, m, safe_idx):
     return jnp.take(jax.random.split(key, m), safe_idx, axis=0)
 
 
-def make_masked_round(train, mix, *, donate=True):
+def make_masked_round(train, mix, *, donate=True, sops=None):
     """Jit the standard masked round body with a donated params buffer.
 
     train(pc, xc, yc, keys, *args) -> cohort-stacked updated tree
@@ -222,15 +408,20 @@ def make_masked_round(train, mix, *, donate=True):
     slots partitioned across devices and its per-slot results
     all-gathered (see :func:`repro.federated.client.client_vmap`), so
     ``mix`` — the tiny (c, c) rules and the fused scatter over the
-    host-local (m, d) state — always operates on replicated arrays and
-    needs no sharding awareness. The dispatcher pads slot counts to a
+    (m, d) state — always operates on replicated cohort arrays. The
+    state itself is replicated unless ``sops`` is row-sharded
+    (``FedConfig.shard_state``), in which case the round-start gather
+    routes through the owner shards (``mix`` closures must use the same
+    ``sops`` for their scatters). The dispatcher pads slot counts to a
     shard multiple (:func:`cohort_round`'s ``mesh`` arg).
     """
+    gather = sops.gather if sops is not None else (
+        lambda tree, safe: gather_rows(tree, safe))
 
     def body(params, idx, mask, x, y, key, *args):
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         keys = cohort_keys(key, x.shape[0], safe)
-        updated = train(gather_rows(params, safe), x[safe], y[safe], keys,
+        updated = train(gather(params, safe), x[safe], y[safe], keys,
                         *args)
         return mix(params, updated, idx, mask, *args)
 
@@ -260,22 +451,26 @@ def fedavg_masked_mix(params, updated, idx, mask, n, *, impl=None):
         mixed, params)
 
 
-def make_fedavg_masked_round(local, *, impl=None, donate=True):
+def make_fedavg_masked_round(local, *, impl=None, donate=True, sops=None):
     """The FedAvg-family masked round (FedAvg/FedProx reuse it)."""
 
     def train(pc, xc, yc, keys, n):
         updated, _ = local(pc, xc, yc, None, keys=keys)
         return updated
 
-    return make_masked_round(
-        train,
-        functools.partial(fedavg_masked_mix, impl=impl),
-        donate=donate)
+    if sops is None:
+        mix = functools.partial(fedavg_masked_mix, impl=impl)
+    else:
+        def mix(params, updated, idx, mask, n):
+            return sops.fedavg_mix(params, updated, idx, mask, n,
+                                   impl=impl)
+
+    return make_masked_round(train, mix, donate=donate, sops=sops)
 
 
 # ------------------------------------------------------- buffered-async path
 
-def state_async_buffer(state, acfg, m, slots, dim, mesh=None):
+def state_async_buffer(state, acfg, m, slots, dim, sops=None):
     """Fetch — or lazily create — the strategy state's upload buffer.
 
     The buffer's slot count depends on the participation policy's cohort
@@ -285,20 +480,23 @@ def state_async_buffer(state, acfg, m, slots, dim, mesh=None):
     unaffected — a warm-up that discards its state merely re-creates the
     same-shaped zeros on round 1).
 
-    ``mesh`` (a resolved Mesh or None) replicate-commits the fresh
-    buffer exactly like the dispatcher commits the rest of the state: a
-    buffer born uncommitted on round 1 would re-enter round 2 with the
-    round's replicated output sharding and trigger a second compile.
+    ``sops`` commits the fresh buffer to its steady-state layout —
+    replicated over the mesh, or (``shard_state``) ``upd`` row-sharded
+    with B padded to a shard multiple — exactly like the dispatcher
+    commits the rest of the state: a buffer born uncommitted on round 1
+    would re-enter round 2 with the round's output sharding and trigger
+    a second compile.
     """
     buf = state.get("abuf")
     if buf is None:
-        buf = async_buffer.init_buffer(acfg, m, slots, dim)
-        if mesh is not None:
-            buf = mesh_lib.commit_replicated(buf, mesh)
+        shards = sops.buffer_shards if sops is not None else 1
+        buf = async_buffer.init_buffer(acfg, m, slots, dim, shards=shards)
+        if sops is not None:
+            buf = sops.commit_buffer(buf)
     return buf
 
 
-def make_fedavg_async_round(train, acfg, *, impl=None):
+def make_fedavg_async_round(train, acfg, *, impl=None, sops=None):
     """The FedAvg-family buffered-async round (FedAvg/FedProx reuse it).
 
     FedBuff's server rule in delta form: the buffer holds the cohort's
@@ -324,20 +522,27 @@ def make_fedavg_async_round(train, acfg, *, impl=None):
     :func:`make_fedavg_masked_round`. Returns a jitted
     ``body(params, abuf, idx, mask, x, y, key, n) ->
     (params', abuf', metrics)`` with ``params`` AND the buffer donated.
+    ``sops`` picks the state/buffer layout (row-sharded deposits route
+    each upload to its owner shard; the flush all-gathers the (B, d)
+    rows — the engine's only model-sized collective).
     """
     flush_k = int(acfg.flush_k)
+    gather = sops.gather if sops is not None else (
+        lambda tree, safe: gather_rows(tree, safe))
+    scatter = sops.buffer_scatter() if sops is not None else None
 
     def body(params, abuf, idx, mask, x, y, key, n):
         m = x.shape[0]
         safe = aggregation.safe_gather_index(idx, m)
         keys = cohort_keys(key, m, safe)
-        pc = gather_rows(params, safe)
+        pc = gather(params, safe)
         updated = train(pc, x[safe], y[safe], keys, n)
         delta = stacked_ravel(updated) - stacked_ravel(pc)
         # FedAvg clients download the CURRENT global when sampled, so the
         # upload's base version is the version at deposit time
         base_ver = jnp.broadcast_to(abuf["version"], idx.shape)
-        abuf = async_buffer.deposit(abuf, delta, idx, mask, base_ver, m)
+        abuf = async_buffer.deposit(abuf, delta, idx, mask, base_ver, m,
+                                    scatter=scatter)
         flush = abuf["count"] >= flush_k
         weights = async_buffer.staleness_weights(abuf, m, acfg.alpha)
         tau = async_buffer.staleness(abuf)
@@ -348,13 +553,20 @@ def make_fedavg_async_round(train, acfg, *, impl=None):
         def do_flush(params, abuf):
             w = aggregation.masked_fedavg_weights(jnp.take(n, bsafe),
                                                   bvalid, weights)
-            step = ops.mix_aggregate(w, abuf["upd"], impl=impl)  # (1, d)
+            upd = (sops.buffer_gather(abuf["upd"]) if sops is not None
+                   else abuf["upd"])
+            # (1, d_al); stacked_unravel ignores the aligned-width tail
+            step = ops.mix_aggregate(w, upd, impl=impl)
             new = jax.tree.map(jnp.add, params,
                                stacked_unravel(params, step))
             return new, async_buffer.flush_reset(abuf, m)
 
         params, abuf = jax.lax.cond(flush, do_flush,
                                     lambda p, b: (p, b), params, abuf)
+        if sops is not None:
+            # the flush's broadcast add is plain jnp — pin the output to
+            # the committed layout so round 2 doesn't recompile
+            params = sops.constrain(params)
         metrics = async_buffer.flush_metrics(flush, applied, tau, weights,
                                              abuf["count"])
         # one broadcast stream hits the downlink only when a flush ships
@@ -365,24 +577,23 @@ def make_fedavg_async_round(train, acfg, *, impl=None):
     return jax.jit(body, donate_argnums=(0, 1))
 
 
-def fedavg_async_wrapper(train, params0, acfg, *, impl=None, mesh=None):
+def fedavg_async_wrapper(train, params0, acfg, *, impl=None, sops=None):
     """Build the FedAvg-family buffered-async cohort body + jit handle.
 
     Returns ``(amasked, jitted_body)`` for ``cohort_round(async_fn=...,
     masked_jit=...)``, or ``(None, None)`` when the knob is off.
     ``train`` as in :func:`make_fedavg_async_round`; the body manages the
-    lazily-created buffer in ``state["abuf"]`` (replicate-committed when
-    ``mesh`` — the raw ``FedConfig.mesh`` knob — is set).
+    lazily-created buffer in ``state["abuf"]``, committed to the layout
+    ``sops`` (the strategy's :class:`StateOps`) picks.
     """
     if acfg is None:
         return None, None
-    body = make_fedavg_async_round(train, acfg, impl=impl)
+    body = make_fedavg_async_round(train, acfg, impl=impl, sops=sops)
     dim = tree_count_params(params0)
-    mesh = mesh_lib.resolve(mesh)
 
     def amasked(state, data, key, idx, mask):
         abuf = state_async_buffer(state, acfg, data.num_clients,
-                                  idx.shape[0], dim, mesh)
+                                  idx.shape[0], dim, sops)
         new, abuf, metrics = body(state["params"], abuf, idx, mask,
                                   data.x, data.y, key, data.n)
         return dict(state, params=new, abuf=abuf), metrics

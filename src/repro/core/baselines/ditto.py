@@ -10,8 +10,7 @@ import jax
 
 from repro.core import aggregation
 from repro.core.baselines import common
-from repro.core.baselines.common import broadcast_params, scatter_rows
-from repro.core.pytree import gather_rows
+from repro.core.baselines.common import broadcast_params
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 
@@ -52,21 +51,23 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         new_personal, _ = local_personal(personal, x, y, k2, params)
         return new_global, new_personal
 
+    sops = common.StateOps(cfg.mesh, cfg.shard_state)
+
     @functools.partial(jax.jit, donate_argnums=(0, 1))
     def _masked(params, personal, idx, mask, n, x, y, key):
         k1, k2 = jax.random.split(key)
         m = x.shape[0]
         safe = aggregation.safe_gather_index(idx, m)
-        pc = gather_rows(params, safe)
+        pc = sops.gather(params, safe)
         xc, yc = x[safe], y[safe]
         updated, _ = local_global(pc, xc, yc, None,
                                   keys=common.cohort_keys(k1, m, safe))
-        new_global = common.fedavg_masked_mix(params, updated, idx, mask, n,
-                                              impl=kernel_impl)
+        new_global = sops.fedavg_mix(params, updated, idx, mask, n,
+                                     impl=kernel_impl)
         # only participants advance their personal solver
-        new_pc, _ = local_personal(gather_rows(personal, safe), xc, yc, None,
+        new_pc, _ = local_personal(sops.gather(personal, safe), xc, yc, None,
                                    pc, keys=common.cohort_keys(k2, m, safe))
-        return new_global, scatter_rows(personal, idx, new_pc)
+        return new_global, sops.scatter(personal, idx, new_pc)
 
     def dense(state, data, key):
         g, p = _round(state["params"], state["personal"], data.n, data.x,
@@ -81,6 +82,8 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     return Strategy(f"ditto_lam{lam}", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
-                                        async_cfg=cfg.async_buffer),
+                                        async_cfg=cfg.async_buffer,
+                                        sops=sops,
+                                        shard_keys=("params", "personal")),
                     lambda s: s["personal"], comm_scheme="broadcast",
                     num_streams=1)

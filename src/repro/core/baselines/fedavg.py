@@ -23,6 +23,7 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
+    sops = common.StateOps(cfg.mesh, cfg.shard_state)
 
     def init(key, data):
         return {"params": broadcast_params(params0, data.num_clients)}
@@ -32,7 +33,8 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         updated, _ = local(params, x, y, key)
         return aggregation.fedavg(updated, n, impl=kernel_impl)
 
-    _masked = common.make_fedavg_masked_round(local, impl=kernel_impl)
+    _masked = common.make_fedavg_masked_round(local, impl=kernel_impl,
+                                              sops=sops)
 
     def dense(state, data, key):
         new = _round(state["params"], data.n, data.x, data.y, key)
@@ -45,12 +47,13 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
     amasked, masked_jit = common.fedavg_async_wrapper(
         lambda pc, xc, yc, keys, n: local(pc, xc, yc, None, keys=keys)[0],
-        params0, cfg.async_buffer, impl=kernel_impl, mesh=cfg.mesh)
+        params0, cfg.async_buffer, impl=kernel_impl, sops=sops)
 
     return Strategy("fedavg", init,
                     common.cohort_round(dense, masked,
                                         masked_jit=masked_jit or _masked,
                                         mesh=cfg.mesh, async_fn=amasked,
-                                        async_cfg=cfg.async_buffer),
+                                        async_cfg=cfg.async_buffer,
+                                        sops=sops),
                     lambda s: s["params"], comm_scheme="broadcast",
                     num_streams=1)

@@ -20,8 +20,8 @@ import jax.numpy as jnp
 
 from repro.core import aggregation
 from repro.core.baselines import common
-from repro.core.baselines.common import broadcast_params, scatter_rows
-from repro.core.pytree import gather_rows, stacked_ravel, stacked_unravel
+from repro.core.baselines.common import broadcast_params
+from repro.core.pytree import stacked_ravel, stacked_unravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated.client import make_loss
@@ -78,6 +78,8 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     def _round(params, x, y, key):
         return _mixed_flat(params, x, y, key)
 
+    sops = common.StateOps(cfg.mesh, cfg.shard_state)
+
     @functools.partial(jax.jit, donate_argnums=(0,))
     def _masked(params, idx, mask, x, y, key):
         # client-side mixing restricted to the masked cohort: each
@@ -85,10 +87,10 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         # not m, DL streams per client); absent clients keep their last
         # model and pad slots are dropped by the scatter.
         safe = aggregation.safe_gather_index(idx, x.shape[0])
-        mixed = _mixed_flat(gather_rows(params, safe), x[safe], y[safe],
+        mixed = _mixed_flat(sops.gather(params, safe), x[safe], y[safe],
                             None, col_mask=mask.astype(jnp.float32),
                             keys=common.cohort_keys(key, x.shape[0], safe))
-        return scatter_rows(params, idx, mixed)
+        return sops.scatter(params, idx, mixed)
 
     def dense(state, data, key):
         new = _round(state["params"], data.x, data.y, key)
@@ -101,5 +103,6 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     return Strategy("fedfomo", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
-                                        async_cfg=cfg.async_buffer),
+                                        async_cfg=cfg.async_buffer,
+                                        sops=sops),
                     lambda s: s["params"], comm_scheme="client_mixing")

@@ -36,10 +36,11 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         updated, _ = local(pc, xc, yc, None, pc, keys=keys)  # center = start
         return updated
 
+    sops = common.StateOps(cfg.mesh, cfg.shard_state)
     _masked = common.make_masked_round(
         _train, lambda params, updated, idx, mask, n:
-        common.fedavg_masked_mix(params, updated, idx, mask, n,
-                                 impl=kernel_impl))
+        sops.fedavg_mix(params, updated, idx, mask, n,
+                        impl=kernel_impl), sops=sops)
 
     def dense(state, data, key):
         new = _round(state["params"], data.n, data.x, data.y, key)
@@ -51,12 +52,13 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return {"params": new}, {"streams": 1}
 
     amasked, masked_jit = common.fedavg_async_wrapper(
-        _train, params0, cfg.async_buffer, impl=kernel_impl, mesh=cfg.mesh)
+        _train, params0, cfg.async_buffer, impl=kernel_impl, sops=sops)
 
     return Strategy(f"fedprox_mu{mu}", init,
                     common.cohort_round(dense, masked,
                                         masked_jit=masked_jit or _masked,
                                         mesh=cfg.mesh, async_fn=amasked,
-                                        async_cfg=cfg.async_buffer),
+                                        async_cfg=cfg.async_buffer,
+                                        sops=sops),
                     lambda s: s["params"], comm_scheme="broadcast",
                     num_streams=1)

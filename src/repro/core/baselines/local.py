@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 
 from repro.core.baselines import common
-from repro.core.baselines.common import broadcast_params, scatter_rows
+from repro.core.baselines.common import broadcast_params
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 
@@ -28,11 +28,12 @@ def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
         updated, _ = local(pc, xc, yc, None, keys=keys)
         return updated
 
+    sops = common.StateOps(cfg.mesh, cfg.shard_state)
     # no mixing: each participant keeps its own update (pad slots are
     # dropped by the sentinel-index scatter)
     _masked = common.make_masked_round(
-        _train, lambda params, updated, idx, mask: scatter_rows(
-            params, idx, updated))
+        _train, lambda params, updated, idx, mask: sops.scatter(
+            params, idx, updated), sops=sops)
 
     def dense(state, data, key):
         return {"params": _round(state["params"], data.x, data.y, key)}, \
@@ -45,6 +46,7 @@ def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
     return Strategy("local", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
-                                        async_cfg=cfg.async_buffer),
+                                        async_cfg=cfg.async_buffer,
+                                        sops=sops),
                     lambda s: s["params"], comm_scheme="broadcast",
                     num_streams=0)

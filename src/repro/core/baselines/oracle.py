@@ -37,18 +37,20 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         updated, _ = local(pc, xc, yc, None, keys=keys)
         return updated
 
+    sops = common.StateOps(cfg.mesh, cfg.shard_state)
+
     def _mix(params, updated, idx, mask, group, n, onehot):
         # per-group FedAvg over the cohort members of each ground-truth
         # group; absent clients keep their last model.
         safe = aggregation.safe_gather_index(idx, onehot.shape[0])
         rows = aggregation.masked_group_rows(jnp.take(group, safe),
                                              jnp.take(n, safe), mask)
-        new = aggregation.mix_scatter(params, updated, rows, idx, mask,
-                                      impl=kernel_impl)
+        new = sops.mix_scatter(params, updated, rows, idx, mask,
+                               impl=kernel_impl)
         oc = jnp.take(onehot, safe, axis=0) * mask[:, None]
         return new, jnp.sum(jnp.max(oc, axis=0) > 0)
 
-    _masked = common.make_masked_round(_train, _mix)
+    _masked = common.make_masked_round(_train, _mix, sops=sops)
 
     def dense(state, data, key):
         new = _round(state["params"], data.group, data.n, data.x, data.y,
@@ -64,5 +66,6 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     return Strategy("oracle", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
-                                        async_cfg=cfg.async_buffer),
+                                        async_cfg=cfg.async_buffer,
+                                        sops=sops),
                     lambda s: s["params"], comm_scheme="groupcast")

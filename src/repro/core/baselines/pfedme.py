@@ -14,8 +14,7 @@ import jax
 
 from repro.core import aggregation
 from repro.core.baselines import common
-from repro.core.baselines.common import broadcast_params, scatter_rows
-from repro.core.pytree import gather_rows
+from repro.core.baselines.common import broadcast_params
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.data.loader import epoch_batches
 from repro.federated.client import client_vmap, make_loss
@@ -77,21 +76,25 @@ def make_pfedme(apply_fn, params0,
         mixed = jax.tree.map(lambda a, b: (1 - beta) * a + beta * b, new_w, avg)
         return mixed, phi
 
+    sops = common.StateOps(cfg.mesh, cfg.shard_state)
+
     @functools.partial(jax.jit, donate_argnums=(0, 1))
     def _masked(w, personal, idx, mask, n, x, y, key):
         # masked cohort-only Moreau steps; the β-mix pulls participants
         # toward the zero-weight-padded cohort average, absent clients and
-        # pad slots keep their last w_i / φ_i.
+        # pad slots keep their last w_i / φ_i. The FedAvg broadcast here
+        # is COHORT-shaped (wc is the gathered, replicated cohort), so it
+        # stays the plain masked mix in either state layout.
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         keys = common.cohort_keys(key, x.shape[0], safe)
-        wc = gather_rows(w, safe)
+        wc = sops.gather(w, safe)
         new_wc, phic = run_clients(wc, x[safe], y[safe], keys)
         avg = common.fedavg_masked_mix(wc, new_wc, idx, mask, n,
                                        impl=kernel_impl)
         mixed = jax.tree.map(lambda a, b: (1 - beta) * a + beta * b, new_wc,
                              avg)
-        return (scatter_rows(w, idx, mixed),
-                scatter_rows(personal, idx, phic))
+        return (sops.scatter(w, idx, mixed),
+                sops.scatter(personal, idx, phic))
 
     def dense(state, data, key):
         w, phi = _round(state["params"], data.n, data.x, data.y, key)
@@ -105,6 +108,8 @@ def make_pfedme(apply_fn, params0,
     return Strategy("pfedme", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
-                                        async_cfg=cfg.async_buffer),
+                                        async_cfg=cfg.async_buffer,
+                                        sops=sops,
+                                        shard_keys=("params", "personal")),
                     lambda s: s["personal"], comm_scheme="broadcast",
                     num_streams=1)

@@ -14,8 +14,8 @@ import jax.numpy as jnp
 
 from repro.core import aggregation
 from repro.core.baselines import common
-from repro.core.baselines.common import broadcast_params, scatter_rows
-from repro.core.pytree import gather_rows, tree_zeros_like
+from repro.core.baselines.common import broadcast_params
+from repro.core.pytree import tree_zeros_like
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 
@@ -61,6 +61,8 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
         )
         return new_params, new_c_i, new_c
 
+    sops = common.StateOps(cfg.mesh, cfg.shard_state)
+
     @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
     def _masked(params, c_i, c, idx, mask, n, x, y, key):
         # Option II with partial participation: only the cohort refreshes
@@ -69,8 +71,8 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
         # included) and the new global mixes the cohort's masked uploads.
         steps = (x.shape[1] // cfg.batch_size) * cfg.epochs
         safe = aggregation.safe_gather_index(idx, x.shape[0])
-        pc = gather_rows(params, safe)
-        cic, cc = gather_rows(c_i, safe), gather_rows(c, safe)
+        pc = sops.gather(params, safe)
+        cic, cc = sops.gather(c_i, safe), sops.gather(c, safe)
         keys = common.cohort_keys(key, x.shape[0], safe)
         updated, _ = local(pc, x[safe], y[safe], None, (cic, cc), keys=keys)
         inv = 1.0 / (steps * cfg.lr)
@@ -78,14 +80,16 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
             lambda ci, cg, start, end: ci - cg + inv * (start - end),
             cic, cc, pc, updated,
         )
-        c_i_full = scatter_rows(c_i, idx, new_cic)
-        new_params = common.fedavg_masked_mix(params, updated, idx, mask, n,
-                                              impl=kernel_impl)
-        new_c = jax.tree.map(
+        c_i_full = sops.scatter(c_i, idx, new_cic)
+        new_params = sops.fedavg_mix(params, updated, idx, mask, n,
+                                     impl=kernel_impl)
+        # cross-row mean all-reduces under a sharded layout; re-pin the
+        # broadcast result to the committed row sharding
+        new_c = sops.constrain(jax.tree.map(
             lambda ci: jnp.broadcast_to(jnp.mean(ci, axis=0),
                                         ci.shape) + 0.0,
             c_i_full,
-        )
+        ))
         return new_params, c_i_full, new_c
 
     def dense(state, data, key):
@@ -101,6 +105,8 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
     return Strategy("scaffold", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
-                                        async_cfg=cfg.async_buffer),
+                                        async_cfg=cfg.async_buffer,
+                                        sops=sops,
+                                        shard_keys=("params", "c_i", "c")),
                     lambda s: s["params"], comm_scheme="broadcast",
                     num_streams=1)

@@ -96,6 +96,17 @@ class FedConfig:
     the bulk-synchronous barrier by definition. ``None`` (the default)
     keeps every existing trajectory bit-identical.
 
+    ``shard_state`` row-shards the (m, ·) stacked server state across the
+    ``mesh`` (see the row-sharded section of :mod:`repro.federated.mesh`):
+    device k owns rows ``[k·m/s, (k+1)·m/s)`` of every state leaf, the
+    round-start gather and round-end scatter route each cohort row to its
+    owner shard inside the jitted round, and the only model-sized
+    collectives are O(c·d). Requires a mesh with ``m % num_shards == 0``
+    and cohort rounds (the dense path raises); ``False`` (the default)
+    keeps the replicated layout bit-exact. Results match the replicated
+    layout within float32 round-off (the cohort psum can associate
+    additions differently).
+
     ``w_refresh`` (a :class:`repro.core.similarity.RefreshConfig`, or
     ``None`` = off) opts the W-owning strategies (ucfl, clustered ucfl,
     ucfl_parallel) into the streaming W refresh: every masked cohort
@@ -112,5 +123,6 @@ class FedConfig:
     batch_size: int = 50
     chunk_size: int | None = None
     mesh: Any = None
+    shard_state: bool = False
     w_refresh: Any = None
     async_buffer: Any = None

@@ -61,7 +61,6 @@ from repro.core.strategy import FedConfig, Strategy, register
 from repro.data.loader import fixed_partition
 from repro.federated import async_buffer
 from repro.federated import client as fedclient
-from repro.federated import mesh as mesh_lib
 
 
 def compute_collaboration(apply_fn, params0, data, *, var_batch_size=100,
@@ -127,6 +126,7 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     )
     refresh_hook = common.w_refresh_hook(cfg.w_refresh)
     acfg = cfg.async_buffer
+    sops = common.StateOps(cfg.mesh, cfg.shard_state)
 
     def init(key, data):
         m = data.num_clients
@@ -189,12 +189,12 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         # masked gather -> cohort local SGD -> fused masked mix + scatter
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         keys = common.cohort_keys(key, x.shape[0], safe)
-        updated, _ = local(gather_rows(params, safe), x[safe], y[safe],
+        updated, _ = local(sops.gather(params, safe), x[safe], y[safe],
                            None, keys=keys)
         rows, n_streams = _mix_rows(w, labels, onehot, idx, mask, safe,
                                     streams)
-        new = aggregation.mix_scatter(params, updated, rows, idx, mask,
-                                      impl=kernel_impl)
+        new = sops.mix_scatter(params, updated, rows, idx, mask,
+                               impl=kernel_impl)
         return new, n_streams
 
     @functools.partial(jax.jit, static_argnames=("streams",),
@@ -205,22 +205,22 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         # the uploads -> fused masked mix + scatter with the FRESH rows
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         keys = common.cohort_keys(key, x.shape[0], safe)
-        pc = gather_rows(params, safe)
+        pc = sops.gather(params, safe)
         updated, _ = local(pc, x[safe], y[safe], None, keys=keys)
         refresh, w = refresh_hook(stacked_ravel(pc),
                                   stacked_ravel(updated), refresh, idx,
                                   mask, n)
         rows, n_streams = _mix_rows(w, labels, onehot, idx, mask, safe,
                                     streams)
-        new = aggregation.mix_scatter(params, updated, rows, idx, mask,
-                                      impl=kernel_impl)
+        new = sops.mix_scatter(params, updated, rows, idx, mask,
+                               impl=kernel_impl)
         return new, refresh, w, n_streams
 
     amasked = _amasked_jit = None
     if acfg is not None:
         flush_k = int(acfg.flush_k)
         dim = tree_count_params(params0)
-        amesh = mesh_lib.resolve(cfg.mesh)
+        ascatter = sops.buffer_scatter()
 
         @functools.partial(jax.jit, static_argnames=("streams",),
                            donate_argnums=(0, 1))
@@ -234,13 +234,14 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             m = x.shape[0]
             safe = aggregation.safe_gather_index(idx, m)
             keys = common.cohort_keys(key, m, safe)
-            updated, _ = local(gather_rows(params, safe), x[safe], y[safe],
+            updated, _ = local(sops.gather(params, safe), x[safe], y[safe],
                                None, keys=keys)
             # a client trains from its OWN row, untouched since the flush
             # that last wrote it — that version is the upload's base
             base_ver = jnp.take(abuf["last_sync"], safe)
             abuf = async_buffer.deposit(abuf, stacked_ravel(updated), idx,
-                                        mask, base_ver, m)
+                                        mask, base_ver, m,
+                                        scatter=ascatter)
             flush = abuf["count"] >= flush_k
             weights = async_buffer.staleness_weights(abuf, m, acfg.alpha)
             tau = async_buffer.staleness(abuf)
@@ -252,9 +253,10 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             def do_flush(params, abuf):
                 rows, n_streams = _mix_rows(w, labels, onehot, bidx, bvalid,
                                             bsafe, streams, weights)
-                new = aggregation.mix_scatter_flat(params, abuf["upd"],
-                                                   rows, bidx, bvalid,
-                                                   impl=kernel_impl)
+                new = sops.mix_scatter_flat(params, abuf["upd"],
+                                            rows, bidx, bvalid,
+                                            impl=kernel_impl,
+                                            flat_sharded=sops.sharded)
                 return new, async_buffer.flush_reset(abuf, m), n_streams
 
             def no_flush(params, abuf):
@@ -271,7 +273,7 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
         def amasked(state, data, key, idx, mask):
             abuf = common.state_async_buffer(state, acfg, data.num_clients,
-                                             idx.shape[0], dim, amesh)
+                                             idx.shape[0], dim, sops)
             new, abuf, am = _amasked(state["params"], abuf, state["W"],
                                      state["labels"],
                                      state["cluster_onehot"], idx, mask,
@@ -312,7 +314,7 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         name="ucfl" if num_streams is None else f"ucfl_k{num_streams}",
         init=init, round=common.cohort_round(
             dense, masked, masked_jit=masked_jit, mesh=cfg.mesh,
-            async_fn=amasked, async_cfg=acfg),
+            async_fn=amasked, async_cfg=acfg, sops=sops),
         eval_params=lambda s: s["params"], comm_scheme=scheme,
         num_streams=None if num_streams in (None, "auto") else num_streams,
         skip_round=common.refresh_skip_round if refresh_hook is not None
@@ -329,6 +331,12 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     (m× compute and uplink); the PS applies Eq. 12. Serves as the
     fully-collaborative upper bound in Fig. 6.
     """
+    if cfg.shard_state:
+        raise NotImplementedError(
+            "FedConfig.shard_state is not supported by ucfl_parallel: its "
+            "(m, c) column mix reads every stream's row each round, so "
+            "there is no O(c·d) row-routing to exploit (the m× cost is "
+            "the point of this upper bound)")
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,

@@ -61,15 +61,38 @@ keeping a pre-round state alive must
 
 Under ``FedConfig.mesh`` the buffer is replicated like the rest of the
 stacked state: local SGD runs shard_mapped and the deposit/flush operate
-on the post-all-gather updates (the same place the sync mix runs). The
-ROADMAP records the sharded-buffer refinement (each device accumulating
-its own slots' uploads so a flush's gather is the only collective).
+on the post-all-gather updates (the same place the sync mix runs).
+Under ``FedConfig.shard_state`` the (B, d) ``upd`` rows are additionally
+row-sharded across the mesh (``init_buffer(..., shards=s)`` pads B to a
+shard multiple with extra sentinel slots — bit-invisible: deposits never
+reach them and they carry zero weight), deposits route each row to its
+owner shard via the ``scatter`` hook of :func:`deposit`, and a flush's
+tiled all-gather of ``upd`` is the engine's only model-sized collective;
+the (B,) metadata stays replicated.
+
+Row width: ``upd`` is allocated at ``ops.aligned_dim(dim)`` — the flat
+feature dim padded to the 128-lane multiple — so the flush's fused
+``masked_mix_scatter`` against a flat single-leaf state always takes the
+aliased zero-copy kernel path (never a padding copy; see
+``masked_mix_scatter.padding_copy_needed``). Deposits zero-pad each
+(c, dim) row batch into the aligned width and flush consumers slice the
+mixed rows back to the true dim.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _pad_rows(rows, width: int):
+    """Zero-pad a (c, d) row batch to the buffer's aligned row width."""
+    if rows.shape[1] == width:
+        return rows
+    return jnp.zeros((rows.shape[0], width), rows.dtype).at[
+        :, : rows.shape[1]].set(rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,11 +124,19 @@ class AsyncConfig:
         return int(self.flush_k) - 1 + int(slots)
 
 
-def init_buffer(cfg: AsyncConfig, m: int, slots: int, dim: int) -> dict:
-    """Fresh (empty) fixed-shape buffer state (see the module docstring)."""
+def init_buffer(cfg: AsyncConfig, m: int, slots: int, dim: int, *,
+                shards: int = 1) -> dict:
+    """Fresh (empty) fixed-shape buffer state (see the module docstring).
+
+    ``dim`` is the flat model size; rows are allocated at the 128-aligned
+    width (:func:`repro.kernels.ops.aligned_dim`). ``shards`` pads the
+    slot count B up to a multiple so a row-sharded ``upd`` partitions
+    evenly — the extra slots are permanently-empty sentinels.
+    """
     b = cfg.capacity(slots)
+    b = -(-b // int(shards)) * int(shards)
     return {
-        "upd": jnp.zeros((b, dim), jnp.float32),
+        "upd": jnp.zeros((b, ops.aligned_dim(dim)), jnp.float32),
         "idx": jnp.full((b,), m, jnp.int32),
         "ver": jnp.zeros((b,), jnp.int32),
         "count": jnp.zeros((), jnp.int32),
@@ -119,17 +150,22 @@ def valid_mask(buf, m: int):
     return buf["idx"] < m
 
 
-def deposit(buf, rows, idx, mask, base_ver, m: int):
+def deposit(buf, rows, idx, mask, base_ver, m: int, *, scatter=None):
     """Land one cohort's uploads in the buffer (fixed-shape, traceable).
 
     Args:
       buf: buffer state (:func:`init_buffer`).
-      rows: (c, d) raveled upload rows (pad-slot rows are ignored).
+      rows: (c, d) raveled upload rows (pad-slot rows are ignored);
+        zero-padded here to the buffer's aligned row width.
       idx / mask: the padded cohort's slot arrays (sentinel index ``m``,
         mask False on pad slots).
       base_ver: (c,) int32 server version of the base model each upload
         was computed against (becomes the slot's ``ver``).
       m: client count (the sentinel).
+      scatter: optional ``scatter(upd, dest, rows) -> upd`` hook for a
+        row-sharded ``upd`` (``StateOps.buffer_scatter``) — it must keep
+        the sentinel-drop semantics of the default ``.at[dest].set(...,
+        mode="drop")``.
 
     Real slots whose client already has a pending upload overwrite that
     slot in place (latest wins); the rest append at ``count``-onward
@@ -150,10 +186,12 @@ def deposit(buf, rows, idx, mask, base_ver, m: int):
     # last_sync is deliberately untouched — only a flush rewrites model
     # rows, so only flush_reset may move it (the documented contract)
     dest = jnp.where(mask, jnp.where(has_dup, dup_pos, append_pos), bcap)
+    rows = _pad_rows(rows.astype(buf["upd"].dtype), buf["upd"].shape[1])
+    upd = (buf["upd"].at[dest].set(rows, mode="drop") if scatter is None
+           else scatter(buf["upd"], dest, rows))
     return dict(
         buf,
-        upd=buf["upd"].at[dest].set(rows.astype(buf["upd"].dtype),
-                                    mode="drop"),
+        upd=upd,
         idx=buf["idx"].at[dest].set(idx, mode="drop"),
         ver=buf["ver"].at[dest].set(base_ver, mode="drop"),
         count=buf["count"] + jnp.sum(fresh.astype(jnp.int32)),

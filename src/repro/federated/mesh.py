@@ -45,6 +45,7 @@ from __future__ import annotations
 import inspect
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -152,6 +153,182 @@ def commit_replicated(tree, mesh):
     return jax.tree.map(
         lambda x: jax.device_put(x, sh) if isinstance(x, jax.Array) else x,
         tree)
+
+
+# ------------------------------------------------------- row-sharded state
+#
+# The replicated engine keeps the whole (m, d) stacked state on every
+# device. The row-sharded layout partitions the LEADING (client) axis of
+# every state leaf across the ``clients`` mesh instead — device k owns
+# rows [k·m/s, (k+1)·m/s) — so server memory AND per-round bandwidth
+# scale down with the device count. Every cohort row is routed to its
+# owner shard inside a shard_map body: ownership of slot i on device k
+# is ``lo <= idx[i] < lo + m/s`` (lo = k·m/s); non-owned slots are
+# localized to the per-block sentinel m/s, which the sentinel-drop
+# scatter contract already treats as a pad. The cohort gather is a
+# (c, d) psum of one-hot-owned rows and the scatter/mix write only the
+# owner block, so the only model-sized collectives are O(c·d) — never
+# O(m·d). Opt in via ``FedConfig.shard_state`` (requires a mesh);
+# ``mesh=None`` and the replicated layout stay bit-exact.
+
+
+def row_sharding(mesh) -> NamedSharding:
+    """Sharding of a row-sharded (m, ·) state leaf: leading axis
+    partitioned across the ``clients`` mesh."""
+    return NamedSharding(mesh, P(_axis(mesh)))
+
+
+def commit_rows(tree, mesh):
+    """Commit every ``jax.Array`` leaf of ``tree`` to the row sharding.
+
+    The row-sharded round's state outputs carry this sharding already
+    (shard_map out_specs), so — exactly like :func:`commit_replicated` —
+    this is a copy-free no-op from round 2 on; committing the initial
+    state keeps every call's input shardings identical and preserves the
+    one-compilation guarantee. Host (numpy) leaves are untouched.
+    """
+    s = num_shards(mesh)
+    sh = row_sharding(mesh)
+
+    def put(x):
+        if not isinstance(x, jax.Array):
+            return x
+        if x.shape[0] % s:
+            raise ValueError(
+                f"row-sharded state needs a leading axis divisible by the "
+                f"{s}-device mesh, got shape {x.shape} (pad m to a shard "
+                f"multiple or drop FedConfig.shard_state)")
+        return jax.device_put(x, sh)
+
+    return jax.tree.map(put, tree)
+
+
+def constrain_rows(tree, mesh):
+    """Pin a traced (m, ·) tree to the row sharding inside jit.
+
+    Used where a strategy's state output is produced by plain jnp ops
+    (e.g. SCAFFOLD's broadcast server control) rather than a shard_map —
+    without the constraint the round's output sharding could differ from
+    the committed input sharding and trigger a recompile on round 2.
+    """
+    sh = row_sharding(mesh)
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(x, sh), tree)
+
+
+def _localize(idx, mb: int, axis: str):
+    """Map global row ids to block-local ids on the current shard.
+
+    Returns ``(loc, own)``: ``own`` marks the slots this shard owns and
+    ``loc`` is their block-local row (non-owned slots — including the
+    global sentinel m — get the local sentinel mb, dropped by every
+    ``mode="drop"`` scatter).
+    """
+    lo = jax.lax.axis_index(axis) * mb
+    own = (idx >= lo) & (idx < lo + mb)
+    return jnp.where(own, idx - lo, mb).astype(idx.dtype), own
+
+
+def shard_gather_rows(tree, safe, mesh):
+    """Cohort gather from a row-sharded state: each device contributes
+    the rows it owns (zeros elsewhere) and a (c, d)-sized psum assembles
+    the replicated cohort — O(c·d) traffic, never O(m·d). ``safe`` must
+    be pre-clamped (``aggregation.safe_gather_index``), matching the
+    replicated ``jnp.take`` semantics exactly."""
+    axis = _axis(mesh)
+
+    def body(block, safe):
+        mb = jax.tree.leaves(block)[0].shape[0]
+        lo = jax.lax.axis_index(axis) * mb
+        own = (safe >= lo) & (safe < lo + mb)
+        loc = jnp.clip(safe - lo, 0, mb - 1)
+        part = jax.tree.map(
+            lambda b: jnp.where(
+                own.reshape((-1,) + (1,) * (b.ndim - 1)),
+                jnp.take(b, loc, axis=0), 0), block)
+        return jax.tree.map(lambda x: jax.lax.psum(x, axis), part)
+
+    return _shard_map(body, mesh=mesh, in_specs=(P(axis), P()),
+                      out_specs=P(), **_RELAX)(tree, safe)
+
+
+def shard_scatter_rows(tree, idx, updates, mesh):
+    """Cohort scatter into a row-sharded state: each device writes only
+    the rows it owns (localized indices; non-owned and pad slots drop on
+    the local sentinel). No collective at all — the (c, d) updates are
+    already replicated."""
+    axis = _axis(mesh)
+
+    def body(block, idx, updates):
+        mb = jax.tree.leaves(block)[0].shape[0]
+        loc, _ = _localize(idx, mb, axis)
+        return jax.tree.map(
+            lambda b, u: b.at[loc].set(u.astype(b.dtype), mode="drop"),
+            block, updates)
+
+    return _shard_map(body, mesh=mesh, in_specs=(P(axis), P(), P()),
+                      out_specs=P(axis), **_RELAX)(tree, idx, updates)
+
+
+def shard_block_update(fn, mesh, *, gather_args=0):
+    """Run a masked row-rewrite on each shard's block of the state.
+
+    Builds ``update(tree, idx, mask, *args) -> tree'`` where ``fn(block,
+    loc_idx, loc_mask, *args)`` rewrites one device's (m/s, ·) row block;
+    ``idx``/``mask`` are localized per shard (non-owned slots get the
+    local sentinel / a False mask, so the fused masked kernels and
+    ``mode="drop"`` scatters apply unchanged per block) and ``*args``
+    stay replicated — except the first ``gather_args`` of them, which
+    enter ROW-SHARDED and are all-gathered (tiled) inside the body
+    before ``fn`` sees them (the buffered-async flush passes its sharded
+    (B, d) pending-upload shard this way: that gather is the flush's one
+    model-sized collective).
+    """
+    axis = _axis(mesh)
+
+    def update(tree, idx, mask, *args):
+        def body(block, idx, mask, *args):
+            mb = jax.tree.leaves(block)[0].shape[0]
+            loc, own = _localize(idx, mb, axis)
+            args = tuple(
+                jax.lax.all_gather(a, axis, axis=0, tiled=True)
+                if i < gather_args else a
+                for i, a in enumerate(args))
+            return fn(block, loc, mask & own, *args)
+
+        specs = tuple(P(axis) if i < gather_args else P()
+                      for i in range(len(args)))
+        return _shard_map(body, mesh=mesh,
+                          in_specs=(P(axis), P(), P()) + specs,
+                          out_specs=P(axis), **_RELAX)(tree, idx, mask,
+                                                       *args)
+
+    return update
+
+
+def shard_broadcast_rows(full, mixed, alive, mesh):
+    """FedAvg-family broadcast into a row-sharded state: every device
+    rewrites its block with the replicated (1, ·) mix; ``alive`` False
+    (an all-masked cohort) keeps the previous block instead."""
+    axis = _axis(mesh)
+
+    def body(block, mixed, alive):
+        return jax.tree.map(
+            lambda x, p: jnp.where(
+                alive, jnp.broadcast_to(x, (p.shape[0],) + x.shape[1:]), p),
+            mixed, block)
+
+    return _shard_map(body, mesh=mesh, in_specs=(P(axis), P(), P()),
+                      out_specs=P(axis), **_RELAX)(full, mixed, alive)
+
+
+def all_gather_rows(x, mesh):
+    """Replicate a row-sharded array: tiled all_gather over the leading
+    axis (the buffered-async flush's one model-sized collective)."""
+    axis = _axis(mesh)
+    return _shard_map(
+        lambda b: jax.lax.all_gather(b, axis, axis=0, tiled=True),
+        mesh=mesh, in_specs=P(axis), out_specs=P(), **_RELAX)(x)
 
 
 def shard_clients(fn, mesh):

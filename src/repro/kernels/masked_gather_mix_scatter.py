@@ -1,0 +1,224 @@
+"""HBM-resident fused cohort gather / mix / scatter Pallas TPU kernels.
+
+The VMEM-slab kernel (:mod:`repro.kernels.masked_mix_scatter`) streams the
+whole (m, d) stacked state through VMEM — HBM traffic ~(2·m + c)·d floats
+per call and a hard single-call bound of a few thousand rows from the
+~16 MB VMEM budget. This module is the million-client regime: ``full``
+never leaves :data:`pltpu.ANY` (HBM on TPU). The kernels move exactly the
+c cohort rows with async local DMA (:func:`pltpu.make_async_copy` plus a
+per-slot DMA semaphore array), so HBM traffic is O(c·d) *regardless of m*:
+
+  * :func:`cohort_gather_pallas` — the round-start gather. One DMA per
+    slot copies row ``min(idx[i], m-1)`` of ``full`` into row i of the
+    (c, d) output (pad slots read the clamped row, exactly like the
+    ``jnp.take`` reference). No VMEM staging at all: the rows stream
+    HBM -> HBM.
+  * :func:`masked_gather_mix_scatter_pallas` — the round-end mix +
+    scatter. The grid walks d in tiles; each step DMAs the (c, tile) slab
+    of theta into VMEM scratch, multiplies by W on the MXU, and DMAs each
+    *real* slot's mixed row back to its owner row of ``full`` (which is
+    aliased to the output, so untouched rows never move). When d is not a
+    tile multiple the last tile re-covers the tail at an unaligned
+    offset — the recomputed columns are bit-identical, so the overlap is
+    harmless and ``full``/theta need no d padding (and therefore no
+    padding copy) at ANY d.
+
+Slot contract (owned by :mod:`repro.federated.participation`): pad slots
+carry an out-of-range sentinel index (>= m) and ``mask[i] == 0``; every
+row DMA is predicated on both, so pad slots never write. Only W, theta
+and the slot arrays are zero-padded (c rows — O(c·d), the traffic the
+kernel already pays).
+
+Dispatch lives in :mod:`repro.kernels.ops`: auto-selected when the slab
+kernel's VMEM bound fails (``masked_mix_scatter.slab_fits``), forcible
+via ``REPRO_KERNEL_IMPL=pallas_hbm`` / ``interpret_hbm``. The NumPy/jnp
+oracles are :func:`repro.kernels.ref.masked_mix_scatter` and
+:func:`repro.kernels.ref.cohort_gather`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.masked_mix_scatter import _round_up, _VMEM_BUDGET_FLOATS
+
+
+# The HBM-resident kernel only stages (c_pad, block) tiles of theta and
+# the mixed result in VMEM (never an m-row slab), so the default tile is
+# wider than the slab kernel's.
+DEFAULT_BLOCK_D = 8192
+
+
+def _pick_block_d(block_d: int, d: int, c_pad: int) -> int:
+    """Largest 128-multiple tile whose two (c_pad, block) scratch slabs
+    plus the (c_pad, c_pad) mix matrix fit the VMEM budget; a d smaller
+    than one tile runs as a single exact tile (no padding, any d)."""
+    cap = max((_VMEM_BUDGET_FLOATS - c_pad * c_pad) // (2 * c_pad), 128)
+    block = max(min(block_d, cap) // 128 * 128, 128)
+    return d if d <= block else block
+
+
+def _check(cond: bool, msg: str):
+    # ValueError (not assert): shape contracts must survive python -O
+    if not cond:
+        raise ValueError(msg)
+
+
+def _gather_kernel(idx_ref, full_ref, out_ref, row_sems, *, c, m):
+    def row_copy(i):
+        r = jnp.minimum(idx_ref[i], m - 1)
+        return pltpu.make_async_copy(
+            full_ref.at[pl.ds(r, 1), :],
+            out_ref.at[pl.ds(i, 1), :],
+            row_sems.at[i],
+        )
+
+    def start(i, carry):
+        row_copy(i).start()
+        return carry
+
+    def wait(i, carry):
+        row_copy(i).wait()
+        return carry
+
+    jax.lax.fori_loop(0, c, start, 0)
+    jax.lax.fori_loop(0, c, wait, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cohort_gather_pallas(full, idx, *, interpret: bool = False):
+    """Gather cohort rows ``full[min(idx, m-1)]`` with per-row DMA.
+
+    Args:
+      full: (m, d) stacked client state; stays in ANY/HBM.
+      idx: (c,) int32 cohort indices; pad sentinels (>= m) read the
+        clamped row m-1 (identical to ``ref.cohort_gather``).
+    Returns:
+      (c, d) cohort-stacked rows, in ``full.dtype``.
+    """
+    _check(full.ndim == 2, f"full must be (m, d), got {full.shape}")
+    _check(idx.ndim == 1, f"idx must be (c,), got {idx.shape}")
+    m, d = full.shape
+    c = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[pltpu.SemaphoreType.DMA((c,))],
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, c=c, m=m),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((c, d), full.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), full)
+
+
+def _mix_scatter_kernel(idx_ref, mask_ref, w_ref, theta_ref, full_ref,
+                        out_ref, theta_t, mixed_t, tile_sem, row_sems, *,
+                        c_pad, m, d, block):
+    j = pl.program_id(0)
+    # the last tile re-covers the tail at an unaligned offset; the
+    # overlap columns recompute identical values, so double-writing them
+    # is harmless and d needs no padding
+    off = jnp.minimum(j * block, d - block)
+    tile = pltpu.make_async_copy(
+        theta_ref.at[:, pl.ds(off, block)], theta_t, tile_sem)
+    tile.start()
+    tile.wait()
+    mixed_t[...] = jnp.dot(
+        w_ref[...].astype(jnp.float32), theta_t[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(mixed_t.dtype)
+
+    def row_copy(i):
+        r = idx_ref[i]
+        return pltpu.make_async_copy(
+            mixed_t.at[pl.ds(i, 1), :],
+            out_ref.at[pl.ds(r, 1), pl.ds(off, block)],
+            row_sems.at[i],
+        )
+
+    def start(i, carry):
+        @pl.when((mask_ref[i] != 0) & (idx_ref[i] < m))
+        def _go():
+            row_copy(i).start()
+
+        return carry
+
+    def wait(i, carry):
+        @pl.when((mask_ref[i] != 0) & (idx_ref[i] < m))
+        def _go():
+            row_copy(i).wait()
+
+        return carry
+
+    jax.lax.fori_loop(0, c_pad, start, 0)
+    jax.lax.fori_loop(0, c_pad, wait, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"),
+                   donate_argnums=(4,))
+def masked_gather_mix_scatter_pallas(w, theta, idx, mask, full, *,
+                                     block_d: int = DEFAULT_BLOCK_D,
+                                     interpret: bool = False):
+    """HBM-resident ``ref.masked_mix_scatter``: DMA only the cohort rows.
+
+    Args:
+      w: (c, c) f32 mixing matrix (pad columns zero; pad rows arbitrary).
+      theta: (c, d) cohort-stacked flat updates.
+      idx: (c,) int32 target rows in ``full``; pad slots hold >= m.
+      mask: (c,) bool/int, nonzero on real slots.
+      full: (m, d) stacked client state, donated and aliased into the
+        output; it stays in ANY/HBM — untouched rows are never read or
+        written, so traffic is O(c·d) at any m.
+    Returns:
+      (m, d) updated state, in ``full.dtype``.
+    """
+    c = w.shape[0]
+    _check(w.ndim == 2 and w.shape == (c, c),
+           f"w must be square (c, c), got {w.shape}")
+    _check(full.ndim == 2, f"full must be (m, d), got {full.shape}")
+    m, d = full.shape
+    _check(theta.shape == (c, d),
+           f"theta must be {(c, d)} to match w {w.shape} and full "
+           f"{full.shape}, got {theta.shape}")
+    _check(idx.shape == (c,) and mask.shape == (c,),
+           f"idx/mask must be ({c},), got {idx.shape}/{mask.shape}")
+    c_pad = _round_up(c, 8)
+    block = _pick_block_d(min(block_d, _round_up(d, 128)), d, c_pad)
+    # only the c-row operands are padded (O(c·d)); ``full`` never is
+    w_p = jnp.zeros((c_pad, c_pad), w.dtype).at[:c, :c].set(w)
+    theta_p = jnp.zeros((c_pad, d), theta.dtype).at[:c, :].set(theta)
+    idx_p = jnp.full((c_pad,), m, jnp.int32).at[:c].set(idx.astype(jnp.int32))
+    mask_p = jnp.zeros((c_pad,), jnp.int32).at[:c].set(mask.astype(jnp.int32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(-(-d // block),),
+        in_specs=[
+            pl.BlockSpec((c_pad, c_pad), lambda j, *_: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((c_pad, block), theta.dtype),
+            pltpu.VMEM((c_pad, block), full.dtype),
+            pltpu.SemaphoreType.DMA(()),
+            pltpu.SemaphoreType.DMA((c_pad,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_mix_scatter_kernel, c_pad=c_pad, m=m, d=d,
+                          block=block),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, d), full.dtype),
+        input_output_aliases={4: 0},  # full -> out, in-place row DMA
+        interpret=interpret,
+    )(idx_p, mask_p, w_p, theta_p, full)

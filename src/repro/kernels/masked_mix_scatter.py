@@ -16,15 +16,27 @@ output slab. ``full`` is aliased to the output (``input_output_aliases``)
 so — together with ``donate_argnums`` at the jit level — the (m, d)
 stacked state is updated without allocating a second copy.
 
-Traffic honesty: this slab formulation still *streams* the full state
-through VMEM (copy-through of untouched rows), so HBM traffic is
-~(2·m + c)·d floats per call; the fusion saves the extra mix-output
-allocation, the per-leaf launch overhead, and the separate XLA scatter
-pass — not the state read. ``block_d`` is clamped so the two (m_pad,
-BLOCK_D) slabs plus the theta tile fit the ~16 MB VMEM budget, which
-bounds single-call m to a few thousand rows; the planned follow-up for
-the million-client path keeps ``full`` HBM-resident and DMAs only the
-cohort rows (see ROADMAP).
+Traffic honesty — the two regimes:
+
+  * **VMEM slab (this kernel).** The slab formulation *streams* the full
+    state through VMEM (copy-through of untouched rows), so HBM traffic
+    is ~(2·m + c)·d floats per call; the fusion saves the extra
+    mix-output allocation, the per-leaf launch overhead, and the
+    separate XLA scatter pass — not the state read. ``block_d`` is
+    clamped so the two (m_pad, BLOCK_D) slabs plus the theta tile fit
+    the ~16 MB VMEM budget (:data:`_VMEM_BUDGET_FLOATS`), which bounds
+    single-call m: once ``2·m_pad + 2·c_pad`` rows can't sustain even a
+    128-wide block (m_pad ≈ 12k rows), the slab is infeasible.
+  * **HBM-resident** (:mod:`repro.kernels.masked_gather_mix_scatter`).
+    ``full`` stays in ``pltpu.ANY``/HBM and per-slot async DMA moves
+    only the c cohort rows — traffic O(c·d) at any m, no m-dependent
+    VMEM bound, and no d padding at all (the tail tile re-covers the
+    last columns at an unaligned offset).
+
+:func:`slab_fits` is the boundary between the regimes;
+:func:`repro.kernels.ops.masked_mix_scatter` auto-dispatches on it
+(``impl`` suffix ``_slab`` / ``_hbm`` forces either side, also via the
+``REPRO_KERNEL_IMPL`` env var).
 
 Alignment: tile shapes need d divisible by the block (multiple of 128)
 and m_pad divisible by 8. When d is 128-aligned a divisor block is
@@ -68,6 +80,32 @@ def _pick_block_d(block_d: int, d: int, m_pad: int, c_pad: int) -> int:
     return block_d
 
 
+def slab_fits(m: int, c: int) -> bool:
+    """True when the VMEM-slab formulation is feasible for (m, c): the two
+    (m_pad, block) state slabs plus the (c_pad, block) theta/mix tiles
+    must sustain at least a 128-wide block inside the VMEM budget. Past
+    this bound (m_pad ≈ 12k rows) :mod:`repro.kernels.ops` auto-selects
+    the HBM-resident kernel."""
+    m_pad = _round_up(int(m), 8)
+    c_pad = _round_up(int(c), 8)
+    return _VMEM_BUDGET_FLOATS // (2 * m_pad + 2 * c_pad) >= 128
+
+
+def padding_copy_needed(m: int, c: int, d: int,
+                        block_d: int = DEFAULT_BLOCK_D) -> bool:
+    """True when :func:`masked_mix_scatter_pallas` must zero-pad ``full``
+    into an aligned (m_pad, d_pad) buffer — a full O(m·d) copy that
+    forfeits the aliased zero-copy path. False exactly when m is a
+    multiple of 8 and d is a multiple of 128 (the alignment
+    :func:`repro.kernels.ops.aligned_dim` provides at state creation)."""
+    c_pad = _round_up(int(c), 8)
+    m_pad = _round_up(int(m), 8)
+    block = _pick_block_d(min(int(block_d), _round_up(int(d), 128)), int(d),
+                          m_pad, c_pad)
+    d_pad = _round_up(int(d), block)
+    return (m_pad, d_pad) != (int(m), int(d))
+
+
 def _kernel(idx_ref, mask_ref, w_ref, theta_ref, full_ref, out_ref, *, c, m):
     # Copy-through of the untouched rows (a no-op self-copy when the
     # output buffer aliases ``full``), then overwrite the cohort rows.
@@ -107,8 +145,19 @@ def masked_mix_scatter_pallas(w, theta, idx, mask, full, *,
       (m, d) updated state, in ``full.dtype``.
     """
     c = w.shape[0]
+    # ValueError (not assert): shape contracts must survive python -O
+    if w.ndim != 2 or w.shape != (c, c):
+        raise ValueError(f"w must be square (c, c), got {w.shape}")
+    if full.ndim != 2:
+        raise ValueError(f"full must be (m, d), got {full.shape}")
     m, d = full.shape
-    assert theta.shape == (c, d), (w.shape, theta.shape, full.shape)
+    if theta.shape != (c, d):
+        raise ValueError(
+            f"theta must be {(c, d)} to match w {w.shape} and full "
+            f"{full.shape}, got {theta.shape}")
+    if idx.shape != (c,) or mask.shape != (c,):
+        raise ValueError(
+            f"idx/mask must be ({c},), got {idx.shape}/{mask.shape}")
     c_pad = _round_up(c, 8)
     m_pad = _round_up(m, 8)
     block_d = _pick_block_d(min(block_d, _round_up(d, 128)), d, m_pad, c_pad)

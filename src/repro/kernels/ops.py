@@ -7,6 +7,14 @@ Every op picks an implementation:
   * ``impl=None`` (auto)   — the ``REPRO_KERNEL_IMPL`` env var when set
     (CI uses it to force interpret mode on CPU), else pallas on TPU and
     ref elsewhere.
+
+The cohort gather/scatter ops additionally pick a *variant*: the VMEM
+slab kernel or the HBM-resident DMA kernel
+(:mod:`repro.kernels.masked_gather_mix_scatter`). Auto picks the slab
+while it fits the VMEM budget (``masked_mix_scatter.slab_fits``) and
+falls over to HBM-resident past it; the suffixes ``_slab`` / ``_hbm``
+(e.g. ``impl="interpret_hbm"`` or ``REPRO_KERNEL_IMPL=pallas_hbm``)
+force either side.
 """
 from __future__ import annotations
 
@@ -16,10 +24,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.masked_mix_scatter import masked_mix_scatter_pallas
+from repro.kernels.masked_mix_scatter import (
+    masked_mix_scatter_pallas, slab_fits,
+)
+from repro.kernels.masked_gather_mix_scatter import (
+    cohort_gather_pallas, masked_gather_mix_scatter_pallas,
+)
 from repro.kernels.mix_aggregate import mix_aggregate_pallas
 from repro.kernels.pairwise_delta import gram_pallas
 from repro.kernels.kmeans_assign import kmeans_assign_pallas
+
+
+ALIGN = 128  # TPU lane width: the last-dim tile every kernel wants
+
+
+def aligned_dim(d: int) -> int:
+    """Round a flat feature dim up to the 128 lane multiple.
+
+    Flat stacked state created at this width (the async upload buffer,
+    toy flat models) always takes the aliased zero-copy kernel path —
+    ``masked_mix_scatter_pallas`` never has to zero-pad the state into
+    an aligned buffer (see ``masked_mix_scatter.padding_copy_needed``).
+    """
+    return -(-int(d) // ALIGN) * ALIGN
 
 
 def _auto_impl(impl):
@@ -31,9 +58,18 @@ def _auto_impl(impl):
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
+def _split_variant(impl):
+    """Split ``impl`` into (base, variant): ``"interpret_hbm"`` ->
+    ``("interpret", "hbm")``; no suffix -> variant None (auto)."""
+    for suffix in ("_hbm", "_slab"):
+        if impl.endswith(suffix):
+            return impl[: -len(suffix)], suffix[1:]
+    return impl, None
+
+
 def mix_aggregate(w, theta, *, impl=None, block_d=None):
     """out[i] = sum_j w[i,j] theta[j];  w (k, m), theta (m, d) -> (k, d)."""
-    impl = _auto_impl(impl)
+    impl, _ = _split_variant(_auto_impl(impl))
     if impl == "ref":
         return ref.mix_aggregate(w, theta)
     kwargs = {} if block_d is None else {"block_d": block_d}
@@ -47,18 +83,42 @@ def masked_mix_scatter(w, theta, idx, mask, full, *, impl=None, block_d=None):
     w (c, c); theta (c, d); idx/mask (c,); full (m, d) -> (m, d). The
     pallas path donates/aliases ``full`` so the stacked state is updated
     in place — callers must not reuse the input buffer afterwards.
+
+    Variant selection (``_slab``/``_hbm`` impl suffix, else auto): the
+    VMEM-slab kernel while ``slab_fits(m, c)``, the HBM-resident DMA
+    kernel past that bound — O(c·d) traffic at any m.
     """
     impl = _auto_impl(impl)
     if impl == "ref":
         return ref.masked_mix_scatter(w, theta, idx, mask, full)
+    impl, variant = _split_variant(impl)
+    if variant is None:
+        variant = "slab" if slab_fits(full.shape[0], w.shape[0]) else "hbm"
     kwargs = {} if block_d is None else {"block_d": block_d}
-    return masked_mix_scatter_pallas(w, theta, idx, mask, full,
-                                     interpret=(impl == "interpret"), **kwargs)
+    kernel = (masked_gather_mix_scatter_pallas if variant == "hbm"
+              else masked_mix_scatter_pallas)
+    return kernel(w, theta, idx, mask, full,
+                  interpret=(impl == "interpret"), **kwargs)
+
+
+def cohort_gather(full, idx, *, impl=None):
+    """Round-start cohort gather: ``out[i] = full[min(idx[i], m-1)]``.
+
+    The pallas path is the HBM-resident per-row DMA kernel
+    (:func:`repro.kernels.masked_gather_mix_scatter.cohort_gather_pallas`)
+    — ``full`` never leaves HBM, traffic O(c·d). ref is ``jnp.take`` on
+    the clamped indices (bit-identical semantics).
+    """
+    impl = _auto_impl(impl)
+    impl, _ = _split_variant(impl)
+    if impl == "ref":
+        return ref.cohort_gather(full, idx)
+    return cohort_gather_pallas(full, idx, interpret=(impl == "interpret"))
 
 
 def pairwise_delta(g, *, impl=None, block_d=None):
     """Pairwise squared distances between rows of g (m, d) -> (m, m)."""
-    impl = _auto_impl(impl)
+    impl, _ = _split_variant(_auto_impl(impl))
     if impl == "ref":
         return ref.pairwise_delta(g)
     kwargs = {} if block_d is None else {"block_d": block_d}
@@ -69,7 +129,7 @@ def pairwise_delta(g, *, impl=None, block_d=None):
 
 def kmeans_assign(points, centroids, *, impl=None):
     """Nearest-centroid assignment -> (labels (m,), sqdist (m,))."""
-    impl = _auto_impl(impl)
+    impl, _ = _split_variant(_auto_impl(impl))
     if impl == "ref":
         return ref.kmeans_assign(points, centroids)
     return kmeans_assign_pallas(points, centroids, interpret=(impl == "interpret"))
@@ -83,7 +143,7 @@ def flash_attention(q, k, v, *, impl=None, **kw):
     """
     from repro.kernels import flash_attention as fa
 
-    impl = _auto_impl(impl)
+    impl, _ = _split_variant(_auto_impl(impl))
     if impl == "ref":
         import jax.numpy as _jnp
 

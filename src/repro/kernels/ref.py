@@ -22,6 +22,23 @@ def mix_aggregate(w, theta):
     return out.astype(theta.dtype)
 
 
+def cohort_gather(full, idx):
+    """Gather cohort rows (oracle for the HBM-resident DMA gather).
+
+    ``out[i] = full[min(idx[i], m - 1)]`` — pad slots (sentinel index
+    >= m) read the clamped last row, exactly the ``safe_gather_index``
+    convention of the masked engine.
+
+    Args:
+      full: (m, d) stacked client state.
+      idx: (c,) int cohort indices (sentinel m on pad slots).
+    Returns:
+      (c, d) cohort-stacked rows, in ``full.dtype``.
+    """
+    safe = jnp.minimum(idx, full.shape[0] - 1)
+    return jnp.take(full, safe, axis=0)
+
+
 def masked_mix_scatter(w, theta, idx, mask, full):
     """Fused masked cohort mix + scatter (oracle for the Pallas kernel).
 

@@ -121,10 +121,23 @@ def test_deposit_dedupe_replaces_latest():
     assert int(buf["count"]) == 3
     idx = np.asarray(buf["idx"]).tolist()
     assert idx[:3] == [1, 4, 5]  # slots: 1, 4 (replaced in place), 5
-    np.testing.assert_allclose(np.asarray(buf["upd"])[1], 7.0)
+    np.testing.assert_allclose(np.asarray(buf["upd"])[1, :3], 7.0)
+    # the aligned-width tail past dim stays zero
+    assert not np.asarray(buf["upd"])[:, 3:].any()
     # indices stay unique among valid slots
     valid = np.asarray(async_buffer.valid_mask(buf, m))
     assert len(set(np.asarray(buf["idx"])[valid])) == int(valid.sum())
+
+
+def test_buffer_rows_at_aligned_width():
+    """init_buffer allocates upd at the 128-aligned width so a flat-state
+    flush always takes the slab kernel's aliased zero-copy path; deposit
+    zero-pads rows into it (tail zeroes checked in the dedupe test)."""
+    from repro.kernels import ops
+    cfg = async_buffer.AsyncConfig(flush_k=3)
+    buf = async_buffer.init_buffer(cfg, 6, slots=4, dim=300)
+    assert buf["upd"].shape == (cfg.capacity(4), ops.aligned_dim(300))
+    assert ops.aligned_dim(300) == 384
 
 
 def test_staleness_weights_and_reset():

@@ -99,6 +99,185 @@ def test_masked_mix_scatter_equals_mix_then_scatter():
     np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
 
 
+# ------------------------------------------- HBM-resident cohort variant
+#
+# CI's multi-device job re-runs this file under 8 forced host devices, so
+# the interpret-mode kernels are exercised at both 1 and 8 devices.
+
+SHAPES_HBM = [(8, 3, 128), (16, 6, 300), (9, 4, 513), (32, 5, 2048),
+              (8, 8, 777), (4, 6, 128)]  # (4, 6, ·): c > m
+
+
+@pytest.mark.parametrize("m,c,d", SHAPES_HBM)
+@pytest.mark.parametrize("pads", [0, 2])
+def test_hbm_mix_scatter_matches_slab_and_oracle(m, c, d, pads):
+    if c - pads > m:
+        pytest.skip("more real slots than clients")
+    rng = np.random.default_rng(m * 1000 + c * 10 + pads)
+    w, theta, idx, mask, full, real = _scatter_case(m, c, d, pads, rng)
+    want = ref.masked_mix_scatter(w, theta, idx, mask, full)
+    slab = ops.masked_mix_scatter(w, theta, idx, mask, jnp.array(full),
+                                  impl="interpret_slab")
+    got = ops.masked_mix_scatter(w, theta, idx, mask, jnp.array(full),
+                                 impl="interpret_hbm")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(slab),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("variant", ["interpret_slab", "interpret_hbm"])
+def test_mix_scatter_all_pad_cohort_is_identity(variant):
+    """A sentinel-only cohort (every slot padded) must not move a byte."""
+    m, c, d = 10, 4, 257
+    rng = np.random.default_rng(7)
+    w, theta, idx, mask, full, _ = _scatter_case(m, c, d, c, rng)
+    assert not np.asarray(mask).any()
+    out = ops.masked_mix_scatter(w, theta, idx, mask, jnp.array(full),
+                                 impl=variant)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(full))
+
+
+def test_hbm_mix_scatter_untouched_rows_identical():
+    """The HBM kernel never DMAs a non-cohort row — bit-identical."""
+    rng = np.random.default_rng(1)
+    m, c, d = 16, 5, 300
+    w, theta, idx, mask, full, real = _scatter_case(m, c, d, 1, rng)
+    before = np.asarray(full).copy()
+    out = np.asarray(ops.masked_mix_scatter(w, theta, idx, mask,
+                                            jnp.array(full),
+                                            impl="interpret_hbm"))
+    absent = np.setdiff1d(np.arange(m), real)
+    np.testing.assert_array_equal(out[absent], before[absent])
+    assert np.abs(out[real] - before[real]).max() > 0
+
+
+@pytest.mark.parametrize("m,c,d", [(8, 3, 128), (9, 4, 513), (4, 6, 300)])
+def test_cohort_gather_matches_take(m, c, d):
+    """The per-row DMA gather is bit-identical to clamped jnp.take,
+    including pad sentinels (>= m) and duplicate indices."""
+    rng = np.random.default_rng(m + c)
+    full = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    idx = jnp.asarray(
+        np.concatenate([rng.integers(0, m, size=c - 2), [0, m]]), jnp.int32)
+    got = ops.cohort_gather(full, idx, impl="interpret")
+    want = ref.cohort_gather(full, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(want),
+        np.asarray(jnp.take(full, jnp.minimum(idx, m - 1), axis=0)))
+
+
+def test_kernel_shape_contracts_raise():
+    """Both scatter kernels reject malformed shapes with ValueError (not
+    assert — the contract must survive python -O)."""
+    from repro.kernels.masked_gather_mix_scatter import (
+        cohort_gather_pallas, masked_gather_mix_scatter_pallas)
+    from repro.kernels.masked_mix_scatter import masked_mix_scatter_pallas
+
+    w = jnp.zeros((3, 3))
+    theta = jnp.zeros((3, 16))
+    full = jnp.zeros((8, 16))
+    idx = jnp.zeros((3,), jnp.int32)
+    mask = jnp.ones((3,), bool)
+    for kernel in (masked_mix_scatter_pallas,
+                   masked_gather_mix_scatter_pallas):
+        with pytest.raises(ValueError):
+            kernel(jnp.zeros((3, 2)), theta, idx, mask, jnp.array(full),
+                   interpret=True)
+        with pytest.raises(ValueError):
+            kernel(w, jnp.zeros((3, 8)), idx, mask, jnp.array(full),
+                   interpret=True)
+        with pytest.raises(ValueError):
+            kernel(w, theta, jnp.zeros((4,), jnp.int32), mask,
+                   jnp.array(full), interpret=True)
+        with pytest.raises(ValueError):
+            kernel(w, theta, idx, mask, jnp.zeros((8, 16, 1)),
+                   interpret=True)
+    with pytest.raises(ValueError):
+        cohort_gather_pallas(jnp.zeros((8,)), idx, interpret=True)
+    with pytest.raises(ValueError):
+        cohort_gather_pallas(full, jnp.zeros((3, 1), jnp.int32),
+                             interpret=True)
+
+
+def test_aligned_dim_and_zero_copy_bound():
+    """aligned_dim rounds to the 128 lane multiple, and state created at
+    that width (8-multiple rows) takes the slab kernel's aliased
+    zero-copy path — no O(m·d) padding copy."""
+    from repro.kernels.masked_mix_scatter import padding_copy_needed
+
+    assert ops.aligned_dim(1) == 128
+    assert ops.aligned_dim(128) == 128
+    assert ops.aligned_dim(129) == 256
+    assert padding_copy_needed(8, 3, 300)  # unaligned d forces the copy
+    assert not padding_copy_needed(8, 3, ops.aligned_dim(300))
+
+
+def test_lenet_label_shift_buffer_takes_zero_copy_path():
+    """Regression for the aligned-width satellite: the LeNet/label-shift
+    bench config's flat upload width, created at ``ops.aligned_dim``
+    (as ``async_buffer.init_buffer`` now does), never needs the O(m·d)
+    zero-pad copy — the aliased kernel path always applies."""
+    from repro.kernels.masked_mix_scatter import padding_copy_needed
+    from repro.models import lenet
+
+    params0 = lenet.init(jax.random.PRNGKey(0), input_hw=(16, 16),
+                         channels=1, num_classes=8)
+    d = sum(x.size for x in jax.tree.leaves(params0))
+    assert padding_copy_needed(8, 4, d)  # the raw LeNet dim is unaligned
+    assert not padding_copy_needed(8, 4, ops.aligned_dim(d))
+
+
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 24),
+       c=st.integers(1, 8), d=st.integers(1, 300), pads=st.integers(0, 8),
+       hbm=st.booleans())
+def test_mix_scatter_noncohort_rows_property(seed, m, c, d, pads, hbm):
+    """Both kernel variants leave non-cohort rows bit-identical and match
+    the oracle on cohort rows — any shape, any pad count (including the
+    all-pad cohort), c > m allowed."""
+    pads = min(pads, c)
+    if c - pads > m:
+        pads = c - m
+    rng = np.random.default_rng(seed)
+    w, theta, idx, mask, full, real = _scatter_case(m, c, d, pads, rng)
+    impl = "interpret_hbm" if hbm else "interpret_slab"
+    out = np.asarray(ops.masked_mix_scatter(w, theta, idx, mask,
+                                            jnp.array(full), impl=impl))
+    absent = np.setdiff1d(np.arange(m), real)
+    np.testing.assert_array_equal(out[absent], np.asarray(full)[absent])
+    want = np.asarray(ref.masked_mix_scatter(w, theta, idx, mask, full))
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 12),
+       c=st.integers(1, 6), d=st.integers(2, 100), pads=st.integers(0, 6))
+def test_mix_scatter_flat_property(seed, m, c, d, pads):
+    """aggregation.mix_scatter_flat leaves non-cohort rows bit-identical
+    through the ravel/unravel layer, and an aligned-width flat_c (tail
+    columns past the state dim, even garbage) changes nothing."""
+    from repro.core import aggregation
+
+    pads = min(pads, c)
+    if c - pads > m:
+        pads = c - m
+    rng = np.random.default_rng(seed)
+    w, theta, idx, mask, full, real = _scatter_case(m, c, d, pads, rng)
+    tree = {"a": full[:, : d // 2], "b": full[:, d // 2:]}
+    out = aggregation.mix_scatter_flat(tree, theta, w, idx, mask,
+                                       impl="ref")
+    wide = jnp.concatenate(
+        [theta, jnp.full((c, ops.aligned_dim(d) - d), 99.0)], axis=1)
+    out_wide = aggregation.mix_scatter_flat(tree, wide, w, idx, mask,
+                                            impl="ref")
+    absent = np.setdiff1d(np.arange(m), real)
+    for k in tree:
+        a, b = np.asarray(out[k]), np.asarray(out_wide[k])
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a[absent],
+                                      np.asarray(tree[k])[absent])
+
+
 @pytest.mark.parametrize("m,d", [(2, 64), (8, 500), (16, 4096), (9, 129)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_pairwise_delta_matches_oracle(m, d, dtype):

@@ -1,0 +1,204 @@
+"""Row-sharded server state (``FedConfig.shard_state``) tests.
+
+Covers the HBM/row-sharding PR guarantees:
+  (a) equivalence — with ``shard_state=True`` every strategy's masked
+      round matches the replicated round within f32 round-off: the state
+      lives row-sharded over the ``clients`` mesh (device k owns rows
+      [k·m/s, (k+1)·m/s)), the cohort gather is a per-shard take + psum
+      (exact — one owner per row) and the mix/scatter runs per shard on
+      localized indices with the same sentinel-drop contract.
+  (b) async — the sharded pending buffer (each device owns B/shards
+      slots, deposits scatter into the owner shard, a flush all-gathers
+      the (B, d) updates as the ONLY model-sized collective) reproduces
+      the replicated async trajectory.
+  (c) one compiled round — shard_state keeps the single-compilation
+      guarantee under the availability sampler, barrier and async.
+  (d) dispatch — shard_state without a mesh, the dense ``cohort=None``
+      path, and ``ucfl_parallel`` all raise with actionable messages.
+
+The file is device-count agnostic: under 1 device the sharding is the
+degenerate identity, CI's multi-device job re-runs it under 8 forced
+host devices where m=8 puts exactly one client row per device.
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import FedConfig, ucfl
+from repro.core.strategy import REGISTRY
+from repro.data import synthetic
+from repro.federated import async_buffer, mesh as mesh_lib, simulation
+from repro.federated.participation import ParticipationConfig
+from repro.models import lenet
+
+STRATEGIES = ["cfl", "ditto", "fedavg", "fedfomo", "fedprox", "local",
+              "oracle", "pfedme", "scaffold", "ucfl"]
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    key = jax.random.PRNGKey(17)
+    dkey, mkey = jax.random.split(key)
+    data = synthetic.concept_shift(dkey, m=8, n=120, n_test=30,
+                                   num_classes=6, groups=2, hw=(16, 16),
+                                   channels=1, noise=1.0)
+    params0 = lenet.init(mkey, input_hw=(16, 16), channels=1, num_classes=6)
+    return data, params0
+
+
+def _make(name, *, shard=False, acfg=None, **cfg_kw):
+    data, params0 = _setup()
+    cfg = FedConfig(batch_size=40, async_buffer=acfg,
+                    mesh="auto" if shard else None, shard_state=shard,
+                    **cfg_kw)
+    kw = {"var_batch_size": 40} if name == "ucfl" else {}
+    return REGISTRY[name](lenet.apply, params0, cfg, **kw)
+
+
+def _leaves(strat, state):
+    return [np.asarray(x) for x in jax.tree.leaves(strat.eval_params(state))]
+
+
+# ---------------------------------------------------------- (a) equivalence
+
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_shard_state_matches_replicated(name):
+    data, _ = _setup()
+    cohort = np.asarray([1, 4, 6], np.int32)
+    a = _make(name)
+    b = _make(name, shard=True)
+    ra, _ = a.round(a.init(jax.random.PRNGKey(3), data), data,
+                    jax.random.PRNGKey(5), cohort)
+    rb, _ = b.round(b.init(jax.random.PRNGKey(3), data), data,
+                    jax.random.PRNGKey(5), cohort)
+    for x, y in zip(_leaves(a, ra), _leaves(b, rb)):
+        np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-6)
+
+
+def test_shard_state_rows_actually_sharded():
+    """The committed params really live row-sharded: each device's
+    addressable shard holds m/shards rows (no silent replication)."""
+    data, _ = _setup()
+    strat = _make("fedavg", shard=True)
+    state = strat.init(jax.random.PRNGKey(3), data)
+    state, _ = strat.round(state, data, jax.random.PRNGKey(5),
+                           np.asarray([1, 4, 6], np.int32))
+    mesh = mesh_lib.resolve("auto")
+    shards = mesh_lib.num_shards(mesh)
+    m = data.num_clients
+    for leaf in jax.tree.leaves(state["params"]):
+        rows = {s.data.shape[0] for s in leaf.addressable_shards}
+        assert rows == {m // shards}
+
+
+def test_shard_state_absent_clients_bit_identical():
+    """Non-cohort rows never cross a device boundary — they stay
+    bit-identical across a sharded round."""
+    data, _ = _setup()
+    strat = _make("local", shard=True)  # scatter-only: cohort rows move
+    state = strat.init(jax.random.PRNGKey(3), data)
+    before = _leaves(strat, state)
+    cohort = np.asarray([1, 4, 6], np.int32)
+    absent = np.asarray([0, 2, 3, 5, 7])
+    s1, _ = strat.round(state, data, jax.random.PRNGKey(5), cohort)
+    for a, b in zip(before, _leaves(strat, s1)):
+        np.testing.assert_array_equal(a[absent], b[absent])
+        assert np.abs(a[cohort] - b[cohort]).max() > 0
+
+
+def test_shard_state_composes_with_w_refresh():
+    from repro.core.similarity import RefreshConfig
+    data, _ = _setup()
+    cohort = np.asarray([1, 4, 6], np.int32)
+    a = _make("ucfl", w_refresh=RefreshConfig())
+    b = _make("ucfl", shard=True, w_refresh=RefreshConfig())
+    sa = a.init(jax.random.PRNGKey(3), data)
+    sb = b.init(jax.random.PRNGKey(3), data)
+    for r in range(2):
+        sa, _ = a.round(sa, data, jax.random.PRNGKey(5 + r), cohort)
+        sb, _ = b.round(sb, data, jax.random.PRNGKey(5 + r), cohort)
+    for x, y in zip(_leaves(a, sa), _leaves(b, sb)):
+        np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------------------- (b) async
+
+@pytest.mark.parametrize("name", ["ucfl", "fedavg"])
+def test_shard_state_async_trajectory_matches_replicated(name):
+    data, _ = _setup()
+    acfg = async_buffer.AsyncConfig(flush_k=2)
+    a = _make(name, acfg=acfg)
+    b = _make(name, shard=True, acfg=acfg)
+    sa = a.init(jax.random.PRNGKey(3), data)
+    sb = b.init(jax.random.PRNGKey(3), data)
+    cohorts = [np.asarray([1, 4, 6], np.int32), np.asarray([2], np.int32),
+               np.asarray([0, 5], np.int32)]
+    for r, co in enumerate(cohorts):
+        sa, ma = a.round(sa, data, jax.random.PRNGKey(5 + r), co)
+        sb, mb = b.round(sb, data, jax.random.PRNGKey(5 + r), co)
+        assert int(ma["flushed"]) == int(mb["flushed"])
+        assert int(ma["applied"]) == int(mb["applied"])
+    for x, y in zip(_leaves(a, sa), _leaves(b, sb)):
+        np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-6)
+
+
+def test_shard_state_buffer_padded_to_shard_multiple():
+    """The pending buffer's slot count is padded so every device owns
+    B/shards slots, and the upd rows sit at the 128-aligned width."""
+    from repro.kernels import ops
+    data, _ = _setup()
+    strat = _make("ucfl", shard=True,
+                  acfg=async_buffer.AsyncConfig(flush_k=3))
+    state = strat.init(jax.random.PRNGKey(3), data)
+    state, _ = strat.round(state, data, jax.random.PRNGKey(5),
+                           np.asarray([1, 4], np.int32))
+    upd = state["abuf"]["upd"]
+    shards = mesh_lib.num_shards(mesh_lib.resolve("auto"))
+    assert upd.shape[0] % shards == 0
+    assert upd.shape[1] == ops.aligned_dim(upd.shape[1])
+    rows = {s.data.shape[0] for s in upd.addressable_shards}
+    assert rows == {upd.shape[0] // shards}
+
+
+# --------------------------------------------------- (c) one compiled round
+
+@pytest.mark.parametrize("acfg", [None, async_buffer.AsyncConfig(flush_k=3)])
+def test_shard_state_availability_one_compile(acfg):
+    data, _ = _setup()
+    m = data.num_clients
+    trace = np.zeros((m, 4), bool)
+    trace[:4, 0] = True
+    trace[:1, 1] = True
+    trace[:, 2] = True
+    part = ParticipationConfig(cohort_size=4, sampler="availability",
+                               availability=trace)
+    strat = _make("ucfl", shard=True, acfg=acfg, lr=0.1, momentum=0.9,
+                  epochs=1)
+    simulation.run(strat, lenet.apply, data, jax.random.PRNGKey(1),
+                   rounds=8, eval_every=8, participation=part)
+    assert strat.round.masked_jit._cache_size() == 1
+
+
+# ------------------------------------------------------------- (d) dispatch
+
+def test_shard_state_requires_mesh():
+    _, params0 = _setup()
+    with pytest.raises(ValueError, match="requires a mesh"):
+        ucfl.make_ucfl(lenet.apply, params0, FedConfig(shard_state=True))
+
+
+def test_shard_state_dense_path_raises():
+    data, _ = _setup()
+    strat = _make("fedavg", shard=True)
+    state = strat.init(jax.random.PRNGKey(3), data)
+    with pytest.raises(ValueError, match="cohort rounds"):
+        strat.round(state, data, jax.random.PRNGKey(5), None)
+
+
+def test_ucfl_parallel_rejects_shard_state():
+    _, params0 = _setup()
+    with pytest.raises(NotImplementedError):
+        ucfl.make_ucfl_parallel(lenet.apply, params0,
+                                FedConfig(mesh="auto", shard_state=True))
