@@ -23,6 +23,14 @@ Turns the ROADMAP's engine targets into enforced checks:
     masked mix-scatter path. (The §V-D wall-clock WIN of async is priced
     by the comm model in ``participation_sweep.py`` — this gate only
     bounds its host-compute overhead.)
+  * faults overhead — the ``faults`` regime (fault injection + finite
+    guard + trimmed-mean robust rule, ``FedConfig.faults`` /
+    ``FedConfig.robust``) must stay within ``--max-faults-ratio``
+    (default 1.2) of the plain cohort round. The whole
+    inject→guard→robust upload stage is traced into the same jitted
+    fixed-shape round; a ratio above the gate means the stage introduced
+    a recompile, a host sync, or an O(c²·d)-heavy rule on the default
+    path.
   * m-scaling — a fixed-cohort round must cost O(c·d), not O(m·d). The
     ``m_scaling_ratio`` (round time at m=512 over m=8, same cohort size)
     must stay within ``--max-mscale-ratio`` (default 1.3); above it some
@@ -73,6 +81,8 @@ def main(argv=None) -> int:
                     help="gate on refresh_over_cohort_ratio")
     ap.add_argument("--max-async-ratio", type=float, default=1.2,
                     help="gate on async_over_cohort_ratio")
+    ap.add_argument("--max-faults-ratio", type=float, default=1.2,
+                    help="gate on faults_over_cohort_ratio")
     ap.add_argument("--max-mscale-ratio", type=float, default=1.3,
                     help="gate on m_scaling_ratio (fixed-cohort round "
                          "time at m=512 over m=8)")
@@ -95,6 +105,12 @@ def main(argv=None) -> int:
                     "deposit + cond-flush on top of the barrier mix — "
                     "check for a recompile, a host sync, or a flush "
                     "path that stopped reusing the fused mix-scatter")
+        ok &= _gate(payload, "faults_over_cohort_ratio", "cohort",
+                    "faults", args.max_faults_ratio,
+                    "the fault-injection + robust-aggregation upload "
+                    "stage is no longer a cheap in-round slab transform "
+                    "— check for a recompile, a host sync, or a robust "
+                    "rule that left the fused masked mix-scatter path")
         ok &= _gate(payload, "m_scaling_ratio", "m8", "m512",
                     args.max_mscale_ratio,
                     "a fixed-cohort round's time grew with the client "

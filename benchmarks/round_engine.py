@@ -17,6 +17,15 @@ Measures the per-round wall time of the jitted round in three regimes:
                          compiled shape, donated buffers), so it must
                          also sit within ~1.2x of the plain cohort round
                          — the second ratio the CI gate enforces.
+  * ``faults``         — the fixed-size cohort regime with fault
+                         injection AND a robust rule on
+                         (``FedConfig.faults`` 25% sign-flip attackers +
+                         10% upload drops, ``FedConfig.robust``
+                         trimmed-mean). Injection, finite guard and the
+                         trimmed-mean stage all run inside the same
+                         jitted round (one compiled shape), so this too
+                         must sit within ~1.2x of the plain cohort round
+                         — the fourth CI ratio gate.
   * ``async``          — the fixed-size cohort regime with the
                          buffered-async server on
                          (``FedConfig.async_buffer``, flush_k = half the
@@ -56,10 +65,12 @@ import jax
 import numpy as np
 
 from benchmarks import common
+from repro.core.aggregation import RobustConfig
 from repro.core.similarity import RefreshConfig
 from repro.federated import participation as part
 from repro.federated import simulation
 from repro.federated.async_buffer import AsyncConfig
+from repro.federated.faults import FaultConfig
 from repro.models import lenet
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
@@ -220,6 +231,15 @@ def run(scale) -> list[str]:
                         async_buffer=AsyncConfig(
                             flush_k=max(1, cohort // 2))),
                     cohort_cfg))
+    entries.append(("faults",
+                    common.make_strategy(
+                        "ucfl", params0, s, chunk_size=chunk,
+                        faults=FaultConfig(byzantine_frac=0.25,
+                                           attack="sign_flip",
+                                           drop_rate=0.1),
+                        robust=RobustConfig(rule="trimmed_mean",
+                                            trim_k=1)),
+                    cohort_cfg))
 
     # sharded cohort regimes (only with a multi-device host platform,
     # e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8)
@@ -241,7 +261,7 @@ def run(scale) -> list[str]:
     total_s = time.time() - t0
 
     results, sharded = {}, {}
-    for name in list(regimes) + ["refresh", "async"]:
+    for name in list(regimes) + ["refresh", "async", "faults"]:
         results[name] = {"round_us": times[name], "rounds": rounds}
         rows.append(common.csv_row(
             f"round_engine/ucfl_{name}", times[name],
@@ -273,6 +293,8 @@ def run(scale) -> list[str]:
         max(results["cohort"]["round_us"], 1e-9)
     async_ratio = results["async"]["round_us"] / \
         max(results["cohort"]["round_us"], 1e-9)
+    faults_ratio = results["faults"]["round_us"] / \
+        max(results["cohort"]["round_us"], 1e-9)
     payload = {
         "config": {"m": s.m, "cohort_size": cohort, "rounds": rounds,
                    "model": "lenet", "scenario": "label_shift",
@@ -288,12 +310,14 @@ def run(scale) -> list[str]:
         "availability_over_cohort_ratio": ratio,
         "refresh_over_cohort_ratio": refresh_ratio,
         "async_over_cohort_ratio": async_ratio,
+        "faults_over_cohort_ratio": faults_ratio,
         "m_scaling_ratio": m_ratio,
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
     for label, r, tgt in (("availability_over_cohort", ratio, 1.2),
                           ("refresh_over_cohort", refresh_ratio, 1.2),
                           ("async_over_cohort", async_ratio, 1.2),
+                          ("faults_over_cohort", faults_ratio, 1.2),
                           ("m_scaling_m512_over_m8", m_ratio, 1.3)):
         rows.append(common.csv_row(
             f"round_engine/{label}", r,

@@ -1,7 +1,17 @@
-"""Msgpack checkpointing for pytrees of jax/numpy arrays."""
+"""Msgpack checkpointing for pytrees of jax/numpy arrays.
+
+Crash safety: :func:`save` is atomic — the payload is written to a
+uniquely-named temp file in the target directory, flushed AND fsynced to
+disk, then ``os.replace``d over the destination (POSIX rename atomicity),
+and finally the directory entry itself is fsynced. A run killed at ANY
+point therefore leaves either the previous complete checkpoint or the
+new complete checkpoint, never a truncated hybrid; at worst an orphaned
+``.tmp.*`` file remains, which :func:`restore` never looks at.
+"""
 from __future__ import annotations
 
 import os
+import uuid
 
 import jax
 import msgpack
@@ -33,11 +43,28 @@ def save(path: str, tree) -> None:
         "treedef": str(treedef),
         "leaves": [np.asarray(l) for l in leaves],
     }
-    tmp = path + ".tmp"
+    # unique temp name: two concurrent savers (or a crashed one's
+    # leftover) can never clobber each other's half-written payload
+    tmp = f"{path}.tmp.{os.getpid()}.{uuid.uuid4().hex[:8]}"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(tmp, "wb") as f:
-        f.write(msgpack.packb(payload, default=_encode))
-    os.replace(tmp, path)
+    try:
+        with open(tmp, "wb") as f:
+            f.write(msgpack.packb(payload, default=_encode))
+            f.flush()
+            os.fsync(f.fileno())  # data durable BEFORE the rename
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    # fsync the directory so the rename itself survives a power cut
+    dirfd = os.open(os.path.dirname(os.path.abspath(path)), os.O_RDONLY)
+    try:
+        os.fsync(dirfd)
+    finally:
+        os.close(dirfd)
 
 
 def restore(path: str, like):

@@ -35,6 +35,9 @@ kernel pass over the ravel-once (c, d) update matrix.
 """
 from __future__ import annotations
 
+import dataclasses
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -423,3 +426,249 @@ def centroid_rules(w, labels, num_clusters):
     onehot = jax.nn.one_hot(labels, num_clusters, dtype=jnp.float32)
     counts = jnp.maximum(onehot.sum(axis=0), 1.0)
     return (onehot.T @ w) / counts[:, None]
+
+
+# --------------------------------------------------------------------------
+# Byzantine-robust masked rules.
+#
+# Each rule is a fixed-shape rewrite of the masked upload stage
+# ``(flat_c, idx, mask) -> (flat_c', idx', mask')`` applied BEFORE the
+# (c, c)-row mix: value rules (trimmed mean / median / norm clip)
+# sanitize the (c, d) upload slab in place, selection rules (Krum /
+# multi-Krum) demote deselected slots to masked pad slots (mask False,
+# sentinel index — the exact contract the finite guard and the
+# sentinel-drop scatter already obey); trimmed mean does both — it
+# winsorizes surviving values AND demotes rows that are coordinate
+# outliers in a supermajority of coordinates (a clamped attacker row
+# would otherwise keep its full mixing mass). Because the rewrite
+# happens on
+# the replicated cohort slab and the downstream rules are the existing
+# masked (c, c) rows, the whole PS step keeps its single fused
+# ``masked_mix_scatter`` launch, composes with staleness weights /
+# ``w_refresh`` unchanged, and works under ``shard_state`` at O(c·d)
+# server cost. A rule at its neutral parameter (``trim_k=0``,
+# ``clip=inf``, ``multi_krum`` selecting every real slot) is a bit-exact
+# pass-through. All rules assume a FINITE slab — run
+# :func:`repro.federated.faults.finite_guard` first.
+# --------------------------------------------------------------------------
+
+_BIG = 1e30  # finite stand-in for +inf (inf * 0 = NaN would poison sorts)
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustConfig:
+    """Byzantine-robust aggregation policy (``FedConfig.robust``).
+
+    Attributes:
+      rule: ``trimmed_mean`` | ``median`` | ``norm_clip`` | ``krum`` |
+        ``multi_krum``.
+      trim_k: coordinates trimmed (winsorized) from EACH tail
+        (trimmed_mean); rows outside the inlier range in ≥ 75% of
+        coordinates are demoted to masked pad slots. 0 is a bit-exact
+        no-op.
+      clip: deviation-norm ceiling (norm_clip); rows are shrunk toward
+        the masked cohort mean. ``inf`` is a bit-exact no-op.
+      f: assumed Byzantine count entering the Krum score (sum over the
+        ``c_real − f − 2`` nearest neighbors).
+      q: slots multi_krum keeps (``krum`` forces 1; ``None`` under
+        multi_krum keeps ``c_real − f``). ``q >= c_real`` keeps every
+        real slot — a bit-exact no-op.
+    """
+
+    rule: str = "trimmed_mean"
+    trim_k: int = 1
+    clip: float = math.inf
+    f: int = 1
+    q: int | None = None
+
+    _RULES = ("trimmed_mean", "median", "norm_clip", "krum", "multi_krum")
+
+    def __post_init__(self):
+        if self.rule not in self._RULES:
+            raise ValueError(f"unknown robust rule {self.rule!r} "
+                             f"(expected one of {self._RULES})")
+        if self.trim_k < 0:
+            raise ValueError(f"trim_k must be >= 0, got {self.trim_k}")
+        if self.clip <= 0:
+            raise ValueError(f"clip must be > 0, got {self.clip}")
+
+
+def masked_trimmed_mean(flat_c, mask, trim_k: int):
+    """Coordinate-wise winsorized trimmed mean over the real cohort rows.
+
+    For every coordinate, the ``trim_eff = min(trim_k, (c_real−1)//2)``
+    smallest and largest real values are treated as outliers and CLAMPED
+    to the surviving inlier range ``[lo, hi]`` (winsorization) instead
+    of being replaced by a cross-client mean: a clamped attacker value
+    cannot leave the honest coordinate range, while an honest extreme
+    keeps (a clipped version of) its own signal rather than being
+    averaged away — which matters under user-centric W mixing, where
+    every trimmed honest value would otherwise dilute that client's
+    personalization. In-range values pass through untouched (``clip`` is
+    the identity for them), so ``trim_k=0`` is bit-exact. Masked rows
+    are left as-is (their mix weight is already zero).
+    Permutation-equivariant over rows by construction (order statistics).
+    """
+    if trim_k == 0:
+        return flat_c
+    lo, hi, fmask = _winsor_bounds(flat_c, mask, trim_k)
+    return jnp.where(fmask, jnp.clip(flat_c, lo, hi), flat_c)
+
+
+def _winsor_bounds(flat_c, mask, trim_k: int):
+    """Per-coordinate inlier range after trimming ``trim_eff`` per tail.
+
+    Returns ``(lo, hi, fmask)`` with lo/hi of shape (1, d) — the
+    ``trim_eff``-th and ``(n_real−1−trim_eff)``-th order statistics of
+    the real rows — and the (c, 1) bool row mask.
+    """
+    c = flat_c.shape[0]
+    fmask = mask[:, None]
+    n_real = jnp.sum(mask.astype(jnp.int32))
+    trim_eff = jnp.minimum(trim_k, jnp.maximum(n_real - 1, 0) // 2)
+    # ascending sort with masked rows pushed past every real value
+    vals = jnp.where(fmask, flat_c, _BIG)
+    svals = jnp.sort(vals, axis=0)
+    lo_i = jnp.clip(trim_eff, 0, c - 1)
+    hi_i = jnp.clip(n_real - 1 - trim_eff, 0, c - 1)
+    take = lambda i: jnp.take_along_axis(  # noqa: E731 — tiny local helper
+        svals, jnp.full((1, flat_c.shape[1]), i, jnp.int32), axis=0)
+    return take(lo_i), take(hi_i), fmask
+
+
+def trimmed_outlier_rows(flat_c, mask, trim_k: int, frac: float = 0.75):
+    """Real rows that sit OUTSIDE the winsorization inlier range in at
+    least ``frac`` of coordinates — i.e. rows that are coordinate-wise
+    outliers almost everywhere, which no honest update is (honest rows
+    land in the trimmed tails of scattered coordinates, a Byzantine
+    sign-flip/scaled-noise row lands there in essentially all of them).
+
+    Winsorization alone cannot defend a W-weighted mix: the clamped
+    attacker row still carries its full mixing mass, now pointed at the
+    boundary of the honest range — a systematic per-coordinate bias.
+    Demoting supermajority-outlier rows (the caller flips them to masked
+    pad slots, the same sentinel contract as drops/finite-guard) removes
+    that mass entirely; the W renormalization over survivors does the
+    rest. Returns a (c,) bool demote mask (False for masked rows).
+    """
+    lo, hi, fmask = _winsor_bounds(flat_c, mask, trim_k)
+    out = fmask & ((flat_c < lo) | (flat_c > hi))
+    d = max(flat_c.shape[1], 1)
+    out_frac = jnp.sum(out.astype(jnp.float32), axis=1) / d
+    return mask & (out_frac >= frac)
+
+
+def masked_median_rows(flat_c, mask):
+    """Replace every real row with the coordinate-wise masked median.
+
+    The median of ``c_real`` values averages the two central order
+    statistics for even counts. Any convex (c, c)-row mix of identical
+    rows returns the median itself, so the downstream rule — FedAvg
+    weights, user-centric W, clustered centroids — degenerates to the
+    coordinate-median aggregate, which ≤ ⌊(c_real−1)/2⌋ arbitrary rows
+    cannot move outside the honest rows' coordinate ranges (the
+    breakdown property the tests pin).
+    """
+    c = flat_c.shape[0]
+    n_real = jnp.sum(mask.astype(jnp.int32))
+    svals = jnp.sort(jnp.where(mask[:, None], flat_c, _BIG), axis=0)
+    k_lo = jnp.clip((n_real - 1) // 2, 0, c - 1)
+    k_hi = jnp.clip(n_real // 2, 0, c - 1)
+    take = lambda i: jnp.take_along_axis(  # noqa: E731
+        svals, jnp.full((1, flat_c.shape[1]), i, jnp.int32), axis=0)
+    med = 0.5 * (take(k_lo) + take(k_hi))
+    return jnp.where(mask[:, None], med, flat_c)
+
+
+def masked_norm_clip(flat_c, mask, clip: float):
+    """Clip each real row's deviation from the masked cohort mean.
+
+    Rows whose deviation norm already fits under ``clip`` pass through
+    via ``jnp.where`` (bit-exact — the clip idempotence/no-op property),
+    outliers are shrunk radially onto the ``clip`` sphere around the
+    mean. ``clip=inf`` never fires (`norm <= inf` is always true).
+    """
+    fmask = mask[:, None].astype(flat_c.dtype)
+    cnt = jnp.maximum(jnp.sum(fmask), 1.0)
+    mu = jnp.sum(flat_c * fmask, axis=0, keepdims=True) / cnt
+    dev = flat_c - mu
+    norm = jnp.sqrt(jnp.sum(dev * dev, axis=1, keepdims=True))
+    scaled = mu + dev * (clip / jnp.maximum(norm, 1e-12))
+    keep = (norm <= clip) | ~mask[:, None]
+    return jnp.where(keep, flat_c, scaled)
+
+
+def krum_scores(flat_c, mask, f: int):
+    """Krum scores over the masked cohort (lower = more central).
+
+    score_i = sum of slot i's ``max(c_real − f − 2, 1)`` smallest
+    squared distances to the OTHER real slots; masked slots (and pairs
+    touching them) score ``_BIG`` so they never outrank a real slot.
+    """
+    c = flat_c.shape[0]
+    x = jnp.where(mask[:, None], flat_c, 0.0).astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=1)
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0)
+    pair_ok = mask[:, None] & mask[None, :] & ~jnp.eye(c, dtype=bool)
+    d2 = jnp.where(pair_ok, d2, _BIG)
+    sd = jnp.sort(d2, axis=1)  # ascending; invalid pairs at the top
+    n_real = jnp.sum(mask.astype(jnp.int32))
+    k = jnp.clip(n_real - f - 2, 1, c - 1)
+    csum = jnp.cumsum(sd, axis=1)
+    score = jnp.take_along_axis(
+        csum, jnp.full((c, 1), 0, jnp.int32) + (k - 1), axis=1)[:, 0]
+    return jnp.where(mask, score, _BIG)
+
+
+def masked_krum_select(flat_c, idx, mask, m: int, f: int,
+                       q: int | None = None):
+    """(multi-)Krum selection as a cohort-slot rewrite.
+
+    Keeps the ``q`` lowest-scoring real slots (``q=None`` keeps
+    ``c_real − f``; ``q=1`` is classic Krum) and demotes the rest to
+    masked pad slots — mask False, sentinel index ``m`` — exactly like
+    the finite guard, so deselected clients keep their previous model
+    and every downstream rule/scatter composes unchanged. When the keep
+    count covers every real slot the rewrite is bit-exact (``mask`` and
+    ``idx`` come back unchanged). Returns ``(idx', mask')``.
+    """
+    score = krum_scores(flat_c, mask, f)
+    n_real = jnp.sum(mask.astype(jnp.int32))
+    keep_n = (jnp.maximum(n_real - f, 1) if q is None
+              else jnp.clip(q, 1, flat_c.shape[0]))
+    # rank via double argsort: deterministic under ties
+    rank = jnp.argsort(jnp.argsort(score))
+    selected = mask & (rank < keep_n)
+    return jnp.where(selected, idx, m), selected
+
+
+def robust_stage(cfg: RobustConfig | None):
+    """Build the robust upload rewrite, or ``None`` when the knob is off.
+
+    Returns a traceable ``stage(flat_c, idx, mask, m) ->
+    (flat_c', idx', mask')`` over the replicated (c, d) upload slab.
+    """
+    if cfg is None:
+        return None
+
+    if cfg.rule == "trimmed_mean":
+        def stage(flat_c, idx, mask, m):
+            out = masked_trimmed_mean(flat_c, mask, cfg.trim_k)
+            if cfg.trim_k == 0:  # neutral knob: bit-exact pass-through
+                return out, idx, mask
+            keep = mask & ~trimmed_outlier_rows(flat_c, mask, cfg.trim_k)
+            return out, jnp.where(keep, idx, m), keep
+    elif cfg.rule == "median":
+        def stage(flat_c, idx, mask, m):
+            return masked_median_rows(flat_c, mask), idx, mask
+    elif cfg.rule == "norm_clip":
+        def stage(flat_c, idx, mask, m):
+            return masked_norm_clip(flat_c, mask, cfg.clip), idx, mask
+    else:  # krum / multi_krum
+        q = 1 if cfg.rule == "krum" else cfg.q
+
+        def stage(flat_c, idx, mask, m):
+            idx, mask = masked_krum_select(flat_c, idx, mask, m, cfg.f, q)
+            return flat_c, idx, mask
+
+    return stage

@@ -28,6 +28,7 @@ from repro.core.baselines.common import broadcast_params, group_average
 from repro.core.pytree import stacked_ravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
+from repro.federated import faults as faults_lib
 
 
 def _spectral_bipartition(sim: np.ndarray) -> np.ndarray:
@@ -71,6 +72,7 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return new_params, stacked_ravel(delta)
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def _masked(params, idx, mask, assignment_c, n, x, y, key):
@@ -80,6 +82,20 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         pc = sops.gather(params, safe)
         keys = common.cohort_keys(key, x.shape[0], safe)
         updated, _ = local(pc, x[safe], y[safe], None, keys=keys)
+        if ustage is not None:
+            # sanitize the upload BEFORE the split statistics: the
+            # returned deltas (and the split bookkeeping fed from them)
+            # see only surviving rows, and the FINAL mask travels back
+            # to the host so demoted slots leave the member pool too
+            flat, idx, mask = ustage(stacked_ravel(pc),
+                                     stacked_ravel(updated), idx, mask,
+                                     key, x.shape[0])
+            delta = flat - stacked_ravel(pc)
+            rows = aggregation.masked_group_rows(assignment_c,
+                                                 jnp.take(n, safe), mask)
+            new_params = sops.mix_scatter_flat(params, flat, rows, idx,
+                                               mask, impl=kernel_impl)
+            return new_params, delta, mask
         delta = jax.tree.map(lambda a, b: a - b, updated, pc)
         rows = aggregation.masked_group_rows(assignment_c,
                                              jnp.take(n, safe), mask)
@@ -133,22 +149,34 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
     def masked(state, data, key, idx, mask):
         assignment = state["assignment"]
-        members = np.asarray(idx)[np.asarray(mask)]  # sorted real prefix
         safe = np.minimum(np.asarray(idx), data.num_clients - 1)
-        new_params, dmat = _masked(
+        out = _masked(
             state["params"], idx, mask, jnp.asarray(assignment[safe]),
             data.n, data.x, data.y, key,
         )
+        if ustage is None:
+            new_params, dmat = out
+            members = np.asarray(idx)[np.asarray(mask)]  # sorted real prefix
+            slots = np.arange(len(members))
+        else:
+            # the stage may demote slots mid-cohort, so the survivors are
+            # no longer a slot prefix — index dmat by surviving slot
+            new_params, dmat, fmask = out
+            slots = np.nonzero(np.asarray(fmask))[0]
+            members = np.asarray(idx)[slots]
         dmat = np.asarray(dmat)
         assignment, rnd = _bookkeep(
-            state, members, {int(g): dmat[j] for j, g in enumerate(members)})
+            state, members,
+            {int(g): dmat[j] for j, g in zip(slots, members)})
         return ({"params": new_params, "assignment": assignment,
                  "round": rnd},
-                {"streams": len(np.unique(assignment[members]))})
+                {"streams": len(np.unique(assignment[members]))
+                 if len(members) else 0})
 
     return Strategy("cfl", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
-                                        sops=sops),
-                    lambda s: s["params"], comm_scheme="groupcast")
+                                        sops=sops, upload_stage=ustage),
+                    lambda s: s["params"], comm_scheme="groupcast",
+                    injects_faults=cfg.faults is not None)

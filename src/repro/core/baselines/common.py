@@ -288,7 +288,7 @@ class StateOps:
 
 def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None,
                  async_fn=None, async_cfg=None, sops=None,
-                 shard_keys=("params",)):
+                 shard_keys=("params",), upload_stage=None):
     """Build ``round(state, data, key, cohort=None)`` from the two paths.
 
     Args:
@@ -324,6 +324,12 @@ def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None,
         names of the (m, ·) stacked entries) and ``cohort=None`` raises
         — the dense path trains every client and broadcasts the whole
         state, which is exactly the O(m·d) traffic shard_state removes.
+      upload_stage: the strategy's fault/robust upload rewrite
+        (:func:`repro.federated.faults.upload_stage`), passed here ONLY
+        so the dispatcher can reject ``cohort=None``: faults and robust
+        rules are masked-slot transforms with no dense counterpart, so
+        the dense path raises at call time (the masked bodies already
+        closed over the stage themselves).
 
     The returned ``round`` accepts ``cohort=None`` (dense), a
     :class:`~repro.federated.participation.Cohort`, or a plain index
@@ -363,6 +369,12 @@ def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None,
                     "the buffered-async engine processes arrival cohorts; "
                     "cohort=None is the bulk-synchronous dense path — pass "
                     "a participation config (or drop FedConfig.async_buffer)")
+            if upload_stage is not None:
+                raise ValueError(
+                    "FedConfig.faults/robust require cohort rounds: the "
+                    "injection and robust rewrites are fixed-shape masked "
+                    "slot transforms with no dense counterpart — pass a "
+                    "participation config (or drop faults/robust)")
             state, metrics = dense_fn(state, data, key)
             size = data.num_clients
         else:
@@ -392,7 +404,8 @@ def cohort_keys(key, m, safe_idx):
     return jnp.take(jax.random.split(key, m), safe_idx, axis=0)
 
 
-def make_masked_round(train, mix, *, donate=True, sops=None):
+def make_masked_round(train, mix, *, donate=True, sops=None,
+                      upload_stage=None):
     """Jit the standard masked round body with a donated params buffer.
 
     train(pc, xc, yc, keys, *args) -> cohort-stacked updated tree
@@ -402,6 +415,14 @@ def make_masked_round(train, mix, *, donate=True, sops=None):
     ``*args`` is an arbitrary tuple of device arrays (W, labels, n, ...)
     threaded to both closures. ``donate=True`` passes
     ``donate_argnums=(0,)`` so the stacked state is consumed in place.
+
+    ``upload_stage`` (:func:`repro.federated.faults.upload_stage`) is the
+    fault-injection / finite-guard / robust rewrite applied between
+    local SGD and ``mix``: it sees the (c, d) pre/post upload slab plus
+    the slot arrays and hands ``mix`` the rewritten updated tree and
+    ``idx``/``mask`` (demoted slots carry the sentinel, so the fused
+    scatter drops them). ``None`` (the default) keeps the exact
+    pre-existing trace — bit-exact with the stage-free engine.
 
     Sharding: when the strategy's ``local`` was built with a mesh
     (``FedConfig.mesh``), ``train`` runs under shard_map with the cohort
@@ -421,8 +442,13 @@ def make_masked_round(train, mix, *, donate=True, sops=None):
     def body(params, idx, mask, x, y, key, *args):
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         keys = cohort_keys(key, x.shape[0], safe)
-        updated = train(gather(params, safe), x[safe], y[safe], keys,
-                        *args)
+        pc = gather(params, safe)
+        updated = train(pc, x[safe], y[safe], keys, *args)
+        if upload_stage is not None:
+            flat, idx, mask = upload_stage(
+                stacked_ravel(pc), stacked_ravel(updated), idx, mask,
+                key, x.shape[0])
+            updated = stacked_unravel(updated, flat)
         return mix(params, updated, idx, mask, *args)
 
     return jax.jit(body, donate_argnums=(0,) if donate else ())
@@ -451,7 +477,8 @@ def fedavg_masked_mix(params, updated, idx, mask, n, *, impl=None):
         mixed, params)
 
 
-def make_fedavg_masked_round(local, *, impl=None, donate=True, sops=None):
+def make_fedavg_masked_round(local, *, impl=None, donate=True, sops=None,
+                             upload_stage=None):
     """The FedAvg-family masked round (FedAvg/FedProx reuse it)."""
 
     def train(pc, xc, yc, keys, n):
@@ -465,7 +492,8 @@ def make_fedavg_masked_round(local, *, impl=None, donate=True, sops=None):
             return sops.fedavg_mix(params, updated, idx, mask, n,
                                    impl=impl)
 
-    return make_masked_round(train, mix, donate=donate, sops=sops)
+    return make_masked_round(train, mix, donate=donate, sops=sops,
+                             upload_stage=upload_stage)
 
 
 # ------------------------------------------------------- buffered-async path
@@ -496,7 +524,8 @@ def state_async_buffer(state, acfg, m, slots, dim, sops=None):
     return buf
 
 
-def make_fedavg_async_round(train, acfg, *, impl=None, sops=None):
+def make_fedavg_async_round(train, acfg, *, impl=None, sops=None,
+                            upload_stage=None):
     """The FedAvg-family buffered-async round (FedAvg/FedProx reuse it).
 
     FedBuff's server rule in delta form: the buffer holds the cohort's
@@ -537,7 +566,15 @@ def make_fedavg_async_round(train, acfg, *, impl=None, sops=None):
         keys = cohort_keys(key, m, safe)
         pc = gather(params, safe)
         updated = train(pc, x[safe], y[safe], keys, n)
-        delta = stacked_ravel(updated) - stacked_ravel(pc)
+        pre_flat = stacked_ravel(pc)
+        post_flat = stacked_ravel(updated)
+        if upload_stage is not None:
+            # faults/guard/robust rewrite the upload BEFORE it is
+            # deposited: demoted slots carry the sentinel, so their junk
+            # delta rows never enter the pending buffer
+            post_flat, idx, mask = upload_stage(pre_flat, post_flat, idx,
+                                                mask, key, m)
+        delta = post_flat - pre_flat
         # FedAvg clients download the CURRENT global when sampled, so the
         # upload's base version is the version at deposit time
         base_ver = jnp.broadcast_to(abuf["version"], idx.shape)
@@ -577,7 +614,8 @@ def make_fedavg_async_round(train, acfg, *, impl=None, sops=None):
     return jax.jit(body, donate_argnums=(0, 1))
 
 
-def fedavg_async_wrapper(train, params0, acfg, *, impl=None, sops=None):
+def fedavg_async_wrapper(train, params0, acfg, *, impl=None, sops=None,
+                         upload_stage=None):
     """Build the FedAvg-family buffered-async cohort body + jit handle.
 
     Returns ``(amasked, jitted_body)`` for ``cohort_round(async_fn=...,
@@ -588,7 +626,8 @@ def fedavg_async_wrapper(train, params0, acfg, *, impl=None, sops=None):
     """
     if acfg is None:
         return None, None
-    body = make_fedavg_async_round(train, acfg, impl=impl, sops=sops)
+    body = make_fedavg_async_round(train, acfg, impl=impl, sops=sops,
+                                   upload_stage=upload_stage)
     dim = tree_count_params(params0)
 
     def amasked(state, data, key, idx, mask):

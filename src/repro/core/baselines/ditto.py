@@ -11,8 +11,10 @@ import jax
 from repro.core import aggregation
 from repro.core.baselines import common
 from repro.core.baselines.common import broadcast_params
+from repro.core.pytree import stacked_ravel, stacked_unravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
+from repro.federated import faults as faults_lib
 
 
 @register("ditto")
@@ -52,6 +54,7 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return new_global, new_personal
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
 
     @functools.partial(jax.jit, donate_argnums=(0, 1))
     def _masked(params, personal, idx, mask, n, x, y, key):
@@ -62,7 +65,16 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         xc, yc = x[safe], y[safe]
         updated, _ = local_global(pc, xc, yc, None,
                                   keys=common.cohort_keys(k1, m, safe))
-        new_global = sops.fedavg_mix(params, updated, idx, mask, n,
+        # the fault/robust stage rewrites the UPLINK (the global-model
+        # upload) only: personal models are client-side state that never
+        # leaves the device, so their scatter keeps the ORIGINAL slots
+        gidx, gmask = idx, mask
+        if ustage is not None:
+            flat, gidx, gmask = ustage(stacked_ravel(pc),
+                                       stacked_ravel(updated), idx, mask,
+                                       key, m)
+            updated = stacked_unravel(updated, flat)
+        new_global = sops.fedavg_mix(params, updated, gidx, gmask, n,
                                      impl=kernel_impl)
         # only participants advance their personal solver
         new_pc, _ = local_personal(sops.gather(personal, safe), xc, yc, None,
@@ -84,6 +96,8 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
                                         sops=sops,
-                                        shard_keys=("params", "personal")),
+                                        shard_keys=("params", "personal"),
+                                        upload_stage=ustage),
                     lambda s: s["personal"], comm_scheme="broadcast",
-                    num_streams=1)
+                    num_streams=1,
+                    injects_faults=cfg.faults is not None)

@@ -14,6 +14,7 @@ from repro.core.baselines import common
 from repro.core.baselines.common import broadcast_params
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
+from repro.federated import faults as faults_lib
 
 
 @register("fedavg")
@@ -24,6 +25,7 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
 
     def init(key, data):
         return {"params": broadcast_params(params0, data.num_clients)}
@@ -34,7 +36,8 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return aggregation.fedavg(updated, n, impl=kernel_impl)
 
     _masked = common.make_fedavg_masked_round(local, impl=kernel_impl,
-                                              sops=sops)
+                                              sops=sops,
+                                              upload_stage=ustage)
 
     def dense(state, data, key):
         new = _round(state["params"], data.n, data.x, data.y, key)
@@ -47,13 +50,15 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
     amasked, masked_jit = common.fedavg_async_wrapper(
         lambda pc, xc, yc, keys, n: local(pc, xc, yc, None, keys=keys)[0],
-        params0, cfg.async_buffer, impl=kernel_impl, sops=sops)
+        params0, cfg.async_buffer, impl=kernel_impl, sops=sops,
+        upload_stage=ustage)
 
     return Strategy("fedavg", init,
                     common.cohort_round(dense, masked,
                                         masked_jit=masked_jit or _masked,
                                         mesh=cfg.mesh, async_fn=amasked,
                                         async_cfg=cfg.async_buffer,
-                                        sops=sops),
+                                        sops=sops, upload_stage=ustage),
                     lambda s: s["params"], comm_scheme="broadcast",
-                    num_streams=1)
+                    num_streams=1,
+                    injects_faults=cfg.faults is not None)

@@ -24,6 +24,7 @@ from repro.core.baselines.common import broadcast_params
 from repro.core.pytree import stacked_ravel, stacked_unravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
+from repro.federated import faults as faults_lib
 from repro.federated.client import make_loss
 from repro.kernels import ops
 
@@ -40,19 +41,24 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     def init(key, data):
         return {"params": broadcast_params(params0, data.num_clients)}
 
-    def _mixed_flat(params_c, x, y, key, col_mask=None, keys=None):
-        """Train on the train split and first-order mix over the slots.
+    def _train_val(params_c, x, y, key, keys=None):
+        """Local SGD on the train split; returns the updated models plus
+        the held-out validation split the mixing weights are scored on."""
+        n = x.shape[1]
+        n_val = max(int(n * val_frac), 1)
+        x_val, y_val = x[:, :n_val], y[:, :n_val]
+        x_tr, y_tr = x[:, n_val:], y[:, n_val:]
+        updated, _ = local(params_c, x_tr, y_tr, key, keys=keys)
+        return updated, x_val, y_val
+
+    def _fomo_mix(updated, x_val, y_val, col_mask=None):
+        """First-order mix over the slots.
 
         col_mask: optional (c,) 0/1 weights zeroing the pad columns so a
         real participant never mixes in a pad slot's duplicate model.
         Returns the mixed cohort-stacked tree.
         """
-        c, n = x.shape[0], x.shape[1]
-        n_val = max(int(n * val_frac), 1)
-        x_val, y_val = x[:, :n_val], y[:, :n_val]
-        x_tr, y_tr = x[:, n_val:], y[:, n_val:]
-
-        updated, _ = local(params_c, x_tr, y_tr, key, keys=keys)
+        c = jax.tree.leaves(updated)[0].shape[0]
 
         # L[i, j]: client i's val loss under client j's updated model.
         def losses_for_client(xv, yv):
@@ -74,22 +80,38 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         new_flat = flat + mixed_delta - self_w * flat
         return stacked_unravel(updated, new_flat)
 
+    def _mixed_flat(params_c, x, y, key, col_mask=None, keys=None):
+        updated, x_val, y_val = _train_val(params_c, x, y, key, keys=keys)
+        return _fomo_mix(updated, x_val, y_val, col_mask)
+
     @jax.jit
     def _round(params, x, y, key):
         return _mixed_flat(params, x, y, key)
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def _masked(params, idx, mask, x, y, key):
         # client-side mixing restricted to the masked cohort: each
         # participant downloads only the real cohort models (len(cohort),
         # not m, DL streams per client); absent clients keep their last
-        # model and pad slots are dropped by the scatter.
+        # model and pad slots are dropped by the scatter. The fault
+        # stage rewrites the shared models BEFORE the loss matrix is
+        # scored, and the FINAL mask zeroes demoted columns — a
+        # guarded/trimmed model is never downloaded by peers.
         safe = aggregation.safe_gather_index(idx, x.shape[0])
-        mixed = _mixed_flat(sops.gather(params, safe), x[safe], y[safe],
-                            None, col_mask=mask.astype(jnp.float32),
-                            keys=common.cohort_keys(key, x.shape[0], safe))
+        pc = sops.gather(params, safe)
+        updated, x_val, y_val = _train_val(
+            pc, x[safe], y[safe], None,
+            keys=common.cohort_keys(key, x.shape[0], safe))
+        if ustage is not None:
+            flat, idx, mask = ustage(stacked_ravel(pc),
+                                     stacked_ravel(updated), idx, mask,
+                                     key, x.shape[0])
+            updated = stacked_unravel(updated, flat)
+        mixed = _fomo_mix(updated, x_val, y_val,
+                          mask.astype(jnp.float32))
         return sops.scatter(params, idx, mixed)
 
     def dense(state, data, key):
@@ -104,5 +126,6 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
-                                        sops=sops),
-                    lambda s: s["params"], comm_scheme="client_mixing")
+                                        sops=sops, upload_stage=ustage),
+                    lambda s: s["params"], comm_scheme="client_mixing",
+                    injects_faults=cfg.faults is not None)

@@ -8,6 +8,7 @@ from repro.core.baselines import common
 from repro.core.baselines.common import broadcast_params
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
+from repro.federated import faults as faults_lib
 
 
 @register("fedprox")
@@ -37,10 +38,11 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return updated
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
     _masked = common.make_masked_round(
         _train, lambda params, updated, idx, mask, n:
         sops.fedavg_mix(params, updated, idx, mask, n,
-                        impl=kernel_impl), sops=sops)
+                        impl=kernel_impl), sops=sops, upload_stage=ustage)
 
     def dense(state, data, key):
         new = _round(state["params"], data.n, data.x, data.y, key)
@@ -52,13 +54,15 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return {"params": new}, {"streams": 1}
 
     amasked, masked_jit = common.fedavg_async_wrapper(
-        _train, params0, cfg.async_buffer, impl=kernel_impl, sops=sops)
+        _train, params0, cfg.async_buffer, impl=kernel_impl, sops=sops,
+        upload_stage=ustage)
 
     return Strategy(f"fedprox_mu{mu}", init,
                     common.cohort_round(dense, masked,
                                         masked_jit=masked_jit or _masked,
                                         mesh=cfg.mesh, async_fn=amasked,
                                         async_cfg=cfg.async_buffer,
-                                        sops=sops),
+                                        sops=sops, upload_stage=ustage),
                     lambda s: s["params"], comm_scheme="broadcast",
-                    num_streams=1)
+                    num_streams=1,
+                    injects_faults=cfg.faults is not None)

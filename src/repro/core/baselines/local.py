@@ -7,6 +7,7 @@ from repro.core.baselines import common
 from repro.core.baselines.common import broadcast_params
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
+from repro.federated import faults as faults_lib
 
 
 @register("local")
@@ -29,11 +30,12 @@ def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
         return updated
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
     # no mixing: each participant keeps its own update (pad slots are
     # dropped by the sentinel-index scatter)
     _masked = common.make_masked_round(
         _train, lambda params, updated, idx, mask: sops.scatter(
-            params, idx, updated), sops=sops)
+            params, idx, updated), sops=sops, upload_stage=ustage)
 
     def dense(state, data, key):
         return {"params": _round(state["params"], data.x, data.y, key)}, \
@@ -47,6 +49,7 @@ def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
-                                        sops=sops),
+                                        sops=sops, upload_stage=ustage),
                     lambda s: s["params"], comm_scheme="broadcast",
-                    num_streams=0)
+                    num_streams=0,
+                    injects_faults=cfg.faults is not None)

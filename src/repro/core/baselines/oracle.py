@@ -9,6 +9,7 @@ from repro.core.baselines import common
 from repro.core.baselines.common import broadcast_params, group_average
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
+from repro.federated import faults as faults_lib
 
 
 @register("oracle")
@@ -38,6 +39,7 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return updated
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
 
     def _mix(params, updated, idx, mask, group, n, onehot):
         # per-group FedAvg over the cohort members of each ground-truth
@@ -50,7 +52,8 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         oc = jnp.take(onehot, safe, axis=0) * mask[:, None]
         return new, jnp.sum(jnp.max(oc, axis=0) > 0)
 
-    _masked = common.make_masked_round(_train, _mix, sops=sops)
+    _masked = common.make_masked_round(_train, _mix, sops=sops,
+                                       upload_stage=ustage)
 
     def dense(state, data, key):
         new = _round(state["params"], data.group, data.n, data.x, data.y,
@@ -67,5 +70,6 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
-                                        sops=sops),
-                    lambda s: s["params"], comm_scheme="groupcast")
+                                        sops=sops, upload_stage=ustage),
+                    lambda s: s["params"], comm_scheme="groupcast",
+                    injects_faults=cfg.faults is not None)

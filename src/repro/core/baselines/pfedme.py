@@ -15,8 +15,10 @@ import jax
 from repro.core import aggregation
 from repro.core.baselines import common
 from repro.core.baselines.common import broadcast_params
+from repro.core.pytree import stacked_ravel, stacked_unravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.data.loader import epoch_batches
+from repro.federated import faults as faults_lib
 from repro.federated.client import client_vmap, make_loss
 
 
@@ -77,6 +79,7 @@ def make_pfedme(apply_fn, params0,
         return mixed, phi
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
 
     @functools.partial(jax.jit, donate_argnums=(0, 1))
     def _masked(w, personal, idx, mask, n, x, y, key):
@@ -89,11 +92,20 @@ def make_pfedme(apply_fn, params0,
         keys = common.cohort_keys(key, x.shape[0], safe)
         wc = sops.gather(w, safe)
         new_wc, phic = run_clients(wc, x[safe], y[safe], keys)
-        avg = common.fedavg_masked_mix(wc, new_wc, idx, mask, n,
+        # the fault/robust stage rewrites the w_i UPLOAD; φ_i is
+        # client-side and keeps the original slots (like Ditto's
+        # personal models). Demoted w slots drop out of the scatter.
+        widx, wmask = idx, mask
+        if ustage is not None:
+            flat, widx, wmask = ustage(stacked_ravel(wc),
+                                       stacked_ravel(new_wc), idx, mask,
+                                       key, x.shape[0])
+            new_wc = stacked_unravel(new_wc, flat)
+        avg = common.fedavg_masked_mix(wc, new_wc, widx, wmask, n,
                                        impl=kernel_impl)
         mixed = jax.tree.map(lambda a, b: (1 - beta) * a + beta * b, new_wc,
                              avg)
-        return (sops.scatter(w, idx, mixed),
+        return (sops.scatter(w, widx, mixed),
                 sops.scatter(personal, idx, phic))
 
     def dense(state, data, key):
@@ -110,6 +122,8 @@ def make_pfedme(apply_fn, params0,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
                                         sops=sops,
-                                        shard_keys=("params", "personal")),
+                                        shard_keys=("params", "personal"),
+                                        upload_stage=ustage),
                     lambda s: s["personal"], comm_scheme="broadcast",
-                    num_streams=1)
+                    num_streams=1,
+                    injects_faults=cfg.faults is not None)

@@ -15,9 +15,10 @@ import jax.numpy as jnp
 from repro.core import aggregation
 from repro.core.baselines import common
 from repro.core.baselines.common import broadcast_params
-from repro.core.pytree import tree_zeros_like
+from repro.core.pytree import stacked_ravel, stacked_unravel, tree_zeros_like
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
+from repro.federated import faults as faults_lib
 
 
 @register("scaffold")
@@ -62,6 +63,7 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
         return new_params, new_c_i, new_c
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
 
     @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
     def _masked(params, c_i, c, idx, mask, n, x, y, key):
@@ -75,6 +77,15 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
         cic, cc = sops.gather(c_i, safe), sops.gather(c, safe)
         keys = common.cohort_keys(key, x.shape[0], safe)
         updated, _ = local(pc, x[safe], y[safe], None, (cic, cc), keys=keys)
+        if ustage is not None:
+            # the fault/robust stage rewrites the MODEL upload; the
+            # control update below then derives from the sanitized
+            # upload, and demoted slots (sentinel idx) drop out of BOTH
+            # scatters — a faulty client's stale c_i survives untouched
+            flat, idx, mask = ustage(stacked_ravel(pc),
+                                     stacked_ravel(updated), idx, mask,
+                                     key, x.shape[0])
+            updated = stacked_unravel(updated, flat)
         inv = 1.0 / (steps * cfg.lr)
         new_cic = jax.tree.map(
             lambda ci, cg, start, end: ci - cg + inv * (start - end),
@@ -107,6 +118,8 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
                                         sops=sops,
-                                        shard_keys=("params", "c_i", "c")),
+                                        shard_keys=("params", "c_i", "c"),
+                                        upload_stage=ustage),
                     lambda s: s["params"], comm_scheme="broadcast",
-                    num_streams=1)
+                    num_streams=1,
+                    injects_faults=cfg.faults is not None)

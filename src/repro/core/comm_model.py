@@ -112,6 +112,64 @@ def round_time(p: SystemParams, scheme: str, num_streams: int | None = None,
     return dl + t_comp + t_ul
 
 
+def deadline_round_time(p: SystemParams, scheme: str,
+                        num_streams: int | None = None,
+                        cohort_size: int | None = None, *,
+                        deadline: float = math.inf, compute=None):
+    """:func:`round_time` with a straggler deadline; returns the price
+    AND who got cut.
+
+    The fault model's timeout (``FaultConfig.deadline``) is a PRICING
+    fault: a client whose compute time exceeds ``deadline`` is dropped
+    from the round (its upload never lands — the device round sees it as
+    a mid-round drop), and the server stops waiting at the deadline
+    instead of the straggler max.
+
+    Args:
+      p / scheme / num_streams / cohort_size: as :func:`round_time`.
+      deadline: compute-time ceiling, in the same units as ``t_min``
+        (``inf`` = no timeouts — bit-identical to :func:`round_time`).
+      compute: optional (c,) realized per-client compute times (e.g.
+        from :func:`sample_arrival_times`'s compute term). ``None`` uses
+        the deterministic expected order-statistic profile — client k's
+        time is the expected k-th smallest of c shifted exponentials
+        (``expected_kth_compute_time``), whose max (k = c) is EXACTLY
+        the ``H_c`` straggler mean :func:`round_time` charges, giving
+        the deadline=inf bit-identity the regression test pins.
+
+    Returns:
+      ``(time, dropped)`` — the §V-D round price and the (c,) bool mask
+      of clients cut by the deadline (ordered by the order-statistic
+      profile when ``compute`` is None). With every client cut, no
+      upload lands and no downlink is served (the round degrades to
+      skip-round semantics: deadline wait + nothing).
+    """
+    c = _active(p.m, cohort_size)
+    if compute is None:
+        compute = np.array([expected_kth_compute_time(p, k, cohort_size)
+                            for k in range(1, c + 1)])
+    else:
+        compute = np.asarray(compute, float)
+        c = compute.shape[0]
+    dropped = compute > deadline
+    survivors = int((~dropped).sum())
+    t_ul = p.rho * p.t_dl
+    if survivors == 0:
+        # everyone timed out: the server waits out the deadline (or the
+        # fastest client under an infinite one) and serves nobody
+        return float(min(deadline, compute.min())), dropped
+    t_comp = float(deadline) if dropped.any() else float(compute.max())
+    if scheme == "broadcast":
+        dl = p.t_dl
+    elif scheme == "groupcast":
+        dl = min(_require_streams(num_streams, scheme), survivors) * p.t_dl
+    elif scheme in ("unicast", "client_mixing"):
+        dl = survivors * p.t_dl
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return dl + t_comp + t_ul, dropped
+
+
 def sample_arrival_times(p: SystemParams, rng, cohort_size: int | None = None):
     """Draw per-client upload completion times for one round.
 

@@ -248,6 +248,30 @@ def streaming_refresh(refresh, obs, idx, mask, n, *, cfg: RefreshConfig,
     return new, mixing_weights(delta, sig, n, eps=eps)
 
 
+def attacker_mixing_mass(w, attacker):
+    """W-quarantine metric: honest→attacker mixing mass.
+
+    The Byzantine replay's question is whether the user-centric W
+    isolates poisoners ON ITS OWN — if it does, honest rows place
+    (near-)zero weight on attacker columns. Returns the mean, over
+    honest rows, of the total W mass on attacker columns: 0 = perfect
+    quarantine, ~k/m = the attacker share under uniform mixing.
+
+    Args:
+      w: (m, m) row-stochastic mixing matrix.
+      attacker: (m,) bool attacker set
+        (:func:`repro.federated.faults.attacker_mask`).
+    Returns:
+      scalar in [0, 1].
+    """
+    w = jnp.asarray(w, jnp.float32)
+    atk = jnp.asarray(attacker)
+    honest = (~atk).astype(jnp.float32)
+    mass_per_row = jnp.sum(w * atk.astype(jnp.float32)[None, :], axis=1)
+    return (jnp.sum(mass_per_row * honest)
+            / jnp.maximum(jnp.sum(honest), 1.0))
+
+
 def collaboration_round(per_client_minibatch_grads, n, *, impl=None):
     """Run the full special round on stacked arrays.
 

@@ -57,6 +57,11 @@ class Strategy:
     # streaming W refresh's staleness counters advance — even though no
     # training/aggregation runs. None = skipped rounds don't touch state.
     skip_round: Callable[[Any], Any] | None = None
+    # True when the strategy was built with ``FedConfig.faults`` — the
+    # simulation loop's fail-fast non-finite guard stands down (injected
+    # NaN/Inf uploads are expected and absorbed by the finite guard;
+    # raising on them would defeat the graceful-degradation test).
+    injects_faults: bool = False
 
 
 def register(name):
@@ -116,6 +121,22 @@ class FedConfig:
     rule) keeps every existing trajectory bit-identical; the dense
     ``cohort=None`` path never refreshes either way. Strategies without
     a W ignore the knob.
+
+    ``faults`` (a :class:`repro.federated.faults.FaultConfig`, or
+    ``None`` = off) opts cohort rounds into deterministic fault
+    injection — Byzantine uploads from a static seed-drawn attacker
+    set, NaN/Inf corruption, mid-round upload drops — applied as
+    fixed-shape masked transforms inside the jitted round (see
+    :mod:`repro.federated.faults`). ``robust`` (a
+    :class:`repro.core.aggregation.RobustConfig`, or ``None`` = off)
+    turns on the Byzantine-robust upload rewrite — coordinate
+    trimmed-mean/median, norm clipping, (multi-)Krum selection — ahead
+    of the strategy's masked mix. Either knob also arms the finite
+    guard that demotes non-finite upload rows to masked pad slots, so a
+    poisoned round degrades gracefully instead of NaN-ing the state.
+    Both require cohort rounds (the dense ``cohort=None`` path raises);
+    ``None``/``None`` (the defaults) keep every existing trajectory
+    bit-identical.
     """
     lr: float = 0.1
     momentum: float = 0.9
@@ -126,3 +147,5 @@ class FedConfig:
     shard_state: bool = False
     w_refresh: Any = None
     async_buffer: Any = None
+    faults: Any = None
+    robust: Any = None

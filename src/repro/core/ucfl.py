@@ -61,6 +61,7 @@ from repro.core.strategy import FedConfig, Strategy, register
 from repro.data.loader import fixed_partition
 from repro.federated import async_buffer
 from repro.federated import client as fedclient
+from repro.federated import faults as faults_lib
 
 
 def compute_collaboration(apply_fn, params0, data, *, var_batch_size=100,
@@ -127,6 +128,9 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     refresh_hook = common.w_refresh_hook(cfg.w_refresh)
     acfg = cfg.async_buffer
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
+    # fault injection / finite guard / robust rewrite of the upload slab
+    # (None when both knobs are off — the bodies keep their exact trace)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
 
     def init(key, data):
         m = data.num_clients
@@ -186,34 +190,57 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     @functools.partial(jax.jit, static_argnames=("streams",),
                        donate_argnums=(0,))
     def _masked(params, w, labels, onehot, idx, mask, x, y, key, streams):
-        # masked gather -> cohort local SGD -> fused masked mix + scatter
+        # masked gather -> cohort local SGD -> (fault/robust upload
+        # rewrite) -> fused masked mix + scatter
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         keys = common.cohort_keys(key, x.shape[0], safe)
-        updated, _ = local(sops.gather(params, safe), x[safe], y[safe],
-                           None, keys=keys)
+        pc = sops.gather(params, safe)
+        updated, _ = local(pc, x[safe], y[safe], None, keys=keys)
+        if ustage is None:
+            rows, n_streams = _mix_rows(w, labels, onehot, idx, mask,
+                                        safe, streams)
+            new = sops.mix_scatter(params, updated, rows, idx, mask,
+                                   impl=kernel_impl)
+            return new, n_streams
+        flat, idx, mask = ustage(stacked_ravel(pc), stacked_ravel(updated),
+                                 idx, mask, key, x.shape[0])
+        safe = aggregation.safe_gather_index(idx, x.shape[0])
         rows, n_streams = _mix_rows(w, labels, onehot, idx, mask, safe,
                                     streams)
-        new = sops.mix_scatter(params, updated, rows, idx, mask,
-                               impl=kernel_impl)
+        new = sops.mix_scatter_flat(params, flat, rows, idx, mask,
+                                    impl=kernel_impl)
         return new, n_streams
 
     @functools.partial(jax.jit, static_argnames=("streams",),
                        donate_argnums=(0, 1))
     def _masked_refresh(params, refresh, w, labels, onehot, idx, mask, n,
                         x, y, key, streams):
-        # masked gather -> cohort local SGD -> streaming W refresh from
-        # the uploads -> fused masked mix + scatter with the FRESH rows
+        # masked gather -> cohort local SGD -> (fault/robust upload
+        # rewrite) -> streaming W refresh from the uploads -> fused
+        # masked mix + scatter with the FRESH rows. The stage runs FIRST
+        # so the refresh only ever folds sanitized uploads with the
+        # FINAL slot arrays — demoted/Byzantine-trimmed rows never enter
+        # the Δ/σ² statistics (W quarantines what the guard caught).
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         keys = common.cohort_keys(key, x.shape[0], safe)
         pc = sops.gather(params, safe)
         updated, _ = local(pc, x[safe], y[safe], None, keys=keys)
-        refresh, w = refresh_hook(stacked_ravel(pc),
-                                  stacked_ravel(updated), refresh, idx,
+        pre_flat = stacked_ravel(pc)
+        post_flat = stacked_ravel(updated)
+        if ustage is not None:
+            post_flat, idx, mask = ustage(pre_flat, post_flat, idx, mask,
+                                          key, x.shape[0])
+            safe = aggregation.safe_gather_index(idx, x.shape[0])
+        refresh, w = refresh_hook(pre_flat, post_flat, refresh, idx,
                                   mask, n)
         rows, n_streams = _mix_rows(w, labels, onehot, idx, mask, safe,
                                     streams)
-        new = sops.mix_scatter(params, updated, rows, idx, mask,
-                               impl=kernel_impl)
+        if ustage is None:
+            new = sops.mix_scatter(params, updated, rows, idx, mask,
+                                   impl=kernel_impl)
+        else:
+            new = sops.mix_scatter_flat(params, post_flat, rows, idx,
+                                        mask, impl=kernel_impl)
         return new, refresh, w, n_streams
 
     amasked = _amasked_jit = None
@@ -234,12 +261,21 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             m = x.shape[0]
             safe = aggregation.safe_gather_index(idx, m)
             keys = common.cohort_keys(key, m, safe)
-            updated, _ = local(sops.gather(params, safe), x[safe], y[safe],
-                               None, keys=keys)
+            pc = sops.gather(params, safe)
+            updated, _ = local(pc, x[safe], y[safe], None, keys=keys)
+            post_flat = stacked_ravel(updated)
+            if ustage is not None:
+                # rewrite the upload BEFORE it is deposited: demoted
+                # slots carry the sentinel/False mask, so their junk
+                # rows never enter the pending buffer
+                post_flat, idx, mask = ustage(stacked_ravel(pc),
+                                              post_flat, idx, mask, key,
+                                              m)
+                safe = aggregation.safe_gather_index(idx, m)
             # a client trains from its OWN row, untouched since the flush
             # that last wrote it — that version is the upload's base
             base_ver = jnp.take(abuf["last_sync"], safe)
-            abuf = async_buffer.deposit(abuf, stacked_ravel(updated), idx,
+            abuf = async_buffer.deposit(abuf, post_flat, idx,
                                         mask, base_ver, m,
                                         scatter=ascatter)
             flush = abuf["count"] >= flush_k
@@ -314,11 +350,13 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         name="ucfl" if num_streams is None else f"ucfl_k{num_streams}",
         init=init, round=common.cohort_round(
             dense, masked, masked_jit=masked_jit, mesh=cfg.mesh,
-            async_fn=amasked, async_cfg=acfg, sops=sops),
+            async_fn=amasked, async_cfg=acfg, sops=sops,
+            upload_stage=ustage),
         eval_params=lambda s: s["params"], comm_scheme=scheme,
         num_streams=None if num_streams in (None, "auto") else num_streams,
         skip_round=common.refresh_skip_round if refresh_hook is not None
         else None,
+        injects_faults=cfg.faults is not None,
     )
 
 
@@ -337,6 +375,12 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             "(m, c) column mix reads every stream's row each round, so "
             "there is no O(c·d) row-routing to exploit (the m× cost is "
             "the point of this upper bound)")
+    if cfg.faults is not None or cfg.robust is not None:
+        raise NotImplementedError(
+            "FedConfig.faults/robust are not supported by ucfl_parallel: "
+            "the m× per-stream update stack has no single (c, d) upload "
+            "slab for the fault/robust stage to rewrite — this idealized "
+            "§V-E upper bound assumes honest clients by construction")
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,

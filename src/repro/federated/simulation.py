@@ -46,6 +46,7 @@ import time
 from typing import Any, Dict, List
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.federated import participation as part
@@ -112,14 +113,45 @@ def donation_safe_copy(state):
 _donation_safe_copy = donation_safe_copy  # backward-compatible alias
 
 
+@jax.jit
+def _client_rows_finite(stacked):
+    """(m,) bool: every leaf of client i's eval params is finite."""
+    def leaf_finite(x):
+        return jnp.all(jnp.isfinite(x.astype(jnp.float32)),
+                       axis=tuple(range(1, x.ndim)))
+    leaves = [leaf_finite(x) for x in jax.tree.leaves(stacked)]
+    return jnp.all(jnp.stack(leaves, axis=0), axis=0)
+
+
+def _check_finite_state(strategy, state, rnd):
+    """Fail fast on non-finite models instead of silently training on
+    NaNs for the rest of the run. Raises with the round index and the
+    offending client rows; runs only at eval rounds (one host sync) and
+    stands down when the strategy itself injects faults
+    (``Strategy.injects_faults`` — the finite guard absorbs those)."""
+    finite = np.asarray(_client_rows_finite(strategy.eval_params(state)))
+    if not finite.all():
+        bad = np.nonzero(~finite)[0].tolist()
+        raise RuntimeError(
+            f"non-finite model state after round {rnd} "
+            f"(strategy {strategy.name!r}, client rows {bad}): a NaN/Inf "
+            "upload leaked into aggregation. Enable FedConfig.faults / "
+            "FedConfig.robust for guarded degradation, or pass "
+            "check_finite=False to simulation.run to opt out")
+
+
 def run(strategy, apply_fn, data, key, *, rounds: int, eval_every: int = 1,
         verbose: bool = False, participation: part.ParticipationConfig | None
         = None, warmup: bool = True, eval_chunk: int | None = None,
-        eval_mesh=None) -> History:
+        eval_mesh=None, check_finite: bool | None = None) -> History:
     m = data.num_clients
     key, ikey = jax.random.split(key)
     state = strategy.init(ikey, data)
     hist = History(strategy.name, [], [], [], [])
+    # None = on unless the strategy deliberately injects faults (its
+    # finite guard owns degradation there; raising would defeat it)
+    if check_finite is None:
+        check_finite = not strategy.injects_faults
 
     if warmup:  # compile strategy.round outside the timed region
         wcohort = part.sample_cohort(participation, 1, m, data.n)
@@ -142,6 +174,8 @@ def run(strategy, apply_fn, data, key, *, rounds: int, eval_every: int = 1,
     t0 = time.time()
 
     def do_eval(rnd, metrics):
+        if check_finite:
+            _check_finite_state(strategy, state, rnd)
         te = time.time()
         accs = np.asarray(
             evaluate(apply_fn, strategy.eval_params(state), data.x_test,

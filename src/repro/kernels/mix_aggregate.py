@@ -46,6 +46,10 @@ def mix_aggregate_pallas(w, theta, *, block_d: int = DEFAULT_BLOCK_D,
     k, m = w.shape
     m2, d = theta.shape
     assert m == m2, (w.shape, theta.shape)
+    if d == 0:
+        # Zero-width leaves (e.g. a flatten layer with no features at small
+        # input sizes) would build an empty grid the interpreter can't slice.
+        return jnp.zeros((k, 0), theta.dtype)
     k_pad = _round_up(k, 8)
     m_pad = _round_up(m, 8)
     block_d = max(_round_up(min(block_d, _round_up(d, 128)), 128), 128)

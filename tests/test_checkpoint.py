@@ -43,3 +43,61 @@ def test_atomic_overwrite(tmp_path):
     checkpoint.save(path, {"w": 2 * jnp.ones((2,))})
     out = checkpoint.restore(path, {"w": jnp.zeros((2,))})
     np.testing.assert_array_equal(np.asarray(out["w"]), [2.0, 2.0])
+
+
+# ------------------------------------------------------- crash safety
+
+def test_crash_mid_write_keeps_previous_checkpoint(tmp_path, monkeypatch):
+    """A save that dies before the atomic rename must leave the previous
+    checkpoint readable and untouched, and clean up its temp file."""
+    from repro.checkpoint import io as ckpt_io
+
+    path = os.path.join(tmp_path, "c.msgpack")
+    checkpoint.save(path, {"w": jnp.ones((2,))})
+
+    def boom(src, dst):
+        raise OSError("simulated crash before rename")
+
+    monkeypatch.setattr(ckpt_io.os, "replace", boom)
+    with pytest.raises(OSError, match="simulated crash"):
+        checkpoint.save(path, {"w": 9 * jnp.ones((2,))})
+    monkeypatch.undo()
+
+    out = checkpoint.restore(path, {"w": jnp.zeros((2,))})
+    np.testing.assert_array_equal(np.asarray(out["w"]), [1.0, 1.0])
+    leftovers = [f for f in os.listdir(tmp_path) if ".tmp." in f]
+    assert leftovers == []  # failed save unlinked its temp file
+
+
+def test_restore_ignores_orphaned_tmp_files(tmp_path):
+    """A crash AFTER fsync but BEFORE unlink leaves an orphaned temp file
+    next to the checkpoint; resume must read the real file only."""
+    path = os.path.join(tmp_path, "c.msgpack")
+    checkpoint.save(path, {"w": 3 * jnp.ones((2,))})
+    with open(path + ".tmp.99999.deadbeef", "wb") as f:
+        f.write(b"half-written garbage from a crashed saver")
+    out = checkpoint.restore(path, {"w": jnp.zeros((2,))})
+    np.testing.assert_array_equal(np.asarray(out["w"]), [3.0, 3.0])
+
+
+def test_concurrent_savers_never_clobber(tmp_path):
+    """Unique temp names: two interleaved savers each complete their own
+    atomic rename; the destination is always one COMPLETE payload."""
+    from repro.checkpoint import io as ckpt_io
+
+    path = os.path.join(tmp_path, "c.msgpack")
+    real_replace = os.replace
+    pending = []
+
+    def defer(src, dst):  # hold the first saver's rename until the second's
+        pending.append((src, dst))
+        if len(pending) == 2:
+            for s, d in reversed(pending):
+                real_replace(s, d)
+
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(ckpt_io.os, "replace", defer)
+        checkpoint.save(path, {"w": 1 * jnp.ones((2,))})
+        checkpoint.save(path, {"w": 2 * jnp.ones((2,))})
+    out = checkpoint.restore(path, {"w": jnp.zeros((2,))})
+    np.testing.assert_array_equal(np.asarray(out["w"]), [1.0, 1.0])

@@ -139,3 +139,45 @@ def test_sample_arrival_times_model():
     want = p.t_dl + p.rho * p.t_dl + cm.expected_kth_compute_time(
         p, k, cohort_size=200)
     assert ks[k - 1] == pytest.approx(want, rel=0.2)
+
+
+def test_deadline_inf_bit_identical_to_round_time():
+    """deadline=inf must reproduce round_time EXACTLY (same float ops):
+    the expected order-statistic profile's max is the H_c straggler
+    mean round_time charges."""
+    p = cm.SystemParams(m=20, rho=4.0, inv_mu=1.0)
+    for scheme, k in (("broadcast", None), ("groupcast", 3),
+                      ("unicast", None), ("client_mixing", None)):
+        base = cm.round_time(p, scheme, k, cohort_size=8)
+        t, dropped = cm.deadline_round_time(p, scheme, k, cohort_size=8)
+        assert t == base, (scheme, t, base)
+        assert dropped.shape == (8,) and not dropped.any()
+
+
+def test_deadline_censors_and_prices_stragglers():
+    p = cm.SystemParams(m=20, rho=4.0, inv_mu=1.0)
+    c = 8
+    dl = cm.expected_kth_compute_time(p, c - 2, c)
+    t, dropped = cm.deadline_round_time(p, "unicast", cohort_size=c,
+                                        deadline=dl)
+    assert dropped.sum() == 2  # the two slowest expected arrivals cut
+    # survivors' unicast downlink + deadline wait + uplink
+    assert t == pytest.approx((c - 2) * p.t_dl + dl + p.rho * p.t_dl)
+    assert t < cm.round_time(p, "unicast", cohort_size=c)
+
+
+def test_deadline_all_dropped_degrades_to_skip_round():
+    p = cm.SystemParams(m=20, rho=4.0, inv_mu=1.0)
+    t, dropped = cm.deadline_round_time(p, "unicast", cohort_size=4,
+                                        deadline=0.5 * p.t_min)
+    assert dropped.all()
+    assert t == pytest.approx(0.5 * p.t_min)  # wait out the deadline
+
+
+def test_deadline_realized_compute_vector():
+    p = cm.SystemParams(m=20, rho=4.0, inv_mu=1.0)
+    compute = [1.0, 5.0, 2.0, 7.0]
+    t, dropped = cm.deadline_round_time(p, "broadcast", cohort_size=4,
+                                        deadline=4.0, compute=compute)
+    assert list(dropped) == [False, True, False, True]
+    assert t == pytest.approx(p.t_dl + 4.0 + p.rho * p.t_dl)

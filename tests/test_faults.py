@@ -1,0 +1,369 @@
+"""Fault-injection harness + Byzantine-robust masked aggregation tests.
+
+Pins the robustness PR's contracts:
+
+  (a) OFF means OFF — ``FedConfig.faults=None, robust=None`` is the
+      default and every strategy body keeps its pre-existing trace, so a
+      zero-fault active stage (``byzantine_frac=0, drop_rate=0``) and
+      each robust rule at its neutral parameter (``trim_k=0``,
+      ``clip=inf``, ``multi_krum`` with ``q >= c``) must reproduce the
+      plain engine BIT-FOR-BIT.
+  (b) one compiled round shape holds with faults + robust rules on —
+      across an availability trace (and under ``mesh=8`` when the host
+      exposes 8 devices) the masked round compiles exactly once.
+  (c) graceful degradation — an all-NaN upload round (or an all-dropped
+      round) demotes every slot to a masked pad slot and leaves the
+      params bit-identical (skip-round semantics), instead of poisoning
+      the stacked state.
+  (d) fail-fast — ``simulation.run`` raises a diagnostic RuntimeError
+      (round, strategy, offending client rows) when a NaN leaks into
+      state WITHOUT faults enabled, and stands down when the strategy
+      injects faults itself.
+  (e) robust-rule properties (hypothesis when available): trimmed-mean
+      permutation invariance, coordinate-median breakdown under
+      ≤ ⌊(c_real−1)/2⌋ arbitrary rows, norm-clip idempotence on in-norm
+      rows.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, load_ci_profile, st
+from repro.core import FedConfig, REGISTRY, aggregation
+from repro.core.aggregation import RobustConfig
+from repro.data import synthetic
+from repro.federated import faults as fl
+from repro.federated import simulation
+from repro.federated.async_buffer import AsyncConfig
+from repro.federated.participation import ParticipationConfig
+from repro.models import lenet
+
+load_ci_profile(max_examples=25)
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    key = jax.random.PRNGKey(29)
+    dkey, mkey = jax.random.split(key)
+    data = synthetic.label_shift(dkey, m=8, n=96, n_test=24,
+                                 num_classes=6, hw=(12, 12))
+    params0 = lenet.init(mkey, input_hw=(12, 12), channels=1, num_classes=6)
+    return data, params0
+
+
+def _make(name, params0, *, faults=None, robust=None, **kw):
+    cfg = FedConfig(lr=0.1, momentum=0.9, epochs=1, batch_size=32,
+                    faults=faults, robust=robust, **kw)
+    if name in ("ucfl", "ucfl_parallel"):
+        return REGISTRY[name](lenet.apply, params0, cfg, var_batch_size=32)
+    if name in ("scaffold", "pfedme"):
+        return REGISTRY[name](lenet.apply, params0, cfg=cfg)
+    return REGISTRY[name](lenet.apply, params0, cfg)
+
+
+def _leaves(strat, state):
+    return [np.asarray(x) for x in jax.tree.leaves(strat.eval_params(state))]
+
+
+def _one_round(strat, data, members=(0, 2, 3, 5, 6)):
+    state = strat.init(jax.random.PRNGKey(3), data)
+    cohort = np.asarray(members, np.int32)
+    new, _ = strat.round(state, data, jax.random.PRNGKey(101), cohort)
+    return new
+
+
+# ----------------------------------------------------- (a) off means off
+
+@pytest.mark.parametrize("name", ["ucfl", "fedavg", "ditto", "cfl"])
+def test_zero_fault_stage_bit_exact(name):
+    """An ACTIVE stage with nothing to inject (0 attackers, 0 drops) must
+    leave the round bit-identical to the plain engine — the finite guard
+    on finite uploads is a where-keep."""
+    data, params0 = _setup()
+    plain = _one_round(_make(name, params0), data)
+    nofault = fl.FaultConfig(seed=0, byzantine_frac=0.0, drop_rate=0.0)
+    staged = _one_round(_make(name, params0, faults=nofault), data)
+    s = _make(name, params0)
+    for a, b in zip(_leaves(s, plain), _leaves(s, staged)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("robust", [
+    RobustConfig(rule="trimmed_mean", trim_k=0),
+    RobustConfig(rule="norm_clip", clip=float("inf")),
+    RobustConfig(rule="multi_krum", f=1, q=64),
+])
+def test_neutral_robust_rule_bit_exact(robust):
+    data, params0 = _setup()
+    plain = _one_round(_make("ucfl", params0), data)
+    staged = _one_round(_make("ucfl", params0, robust=robust), data)
+    s = _make("ucfl", params0)
+    for a, b in zip(_leaves(s, plain), _leaves(s, staged)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_attacker_mask_deterministic():
+    cfg = fl.FaultConfig(seed=5, byzantine_frac=0.25)
+    a = np.asarray(fl.attacker_mask(cfg, 16))
+    b = np.asarray(fl.attacker_mask(cfg, 16))
+    np.testing.assert_array_equal(a, b)
+    assert a.sum() == fl.num_attackers(cfg, 16) == 4
+    c = np.asarray(fl.attacker_mask(
+        fl.FaultConfig(seed=6, byzantine_frac=0.25), 16))
+    assert c.sum() == 4  # same count, (very likely) different set
+
+
+def test_dense_path_raises():
+    data, params0 = _setup()
+    strat = _make("fedavg", params0,
+                  faults=fl.FaultConfig(byzantine_frac=0.25))
+    state = strat.init(jax.random.PRNGKey(3), data)
+    with pytest.raises(ValueError, match="cohort rounds"):
+        strat.round(state, data, jax.random.PRNGKey(101))
+
+
+def test_ucfl_parallel_rejects_faults():
+    data, params0 = _setup()
+    with pytest.raises(NotImplementedError):
+        _make("ucfl_parallel", params0,
+              faults=fl.FaultConfig(byzantine_frac=0.25))
+
+
+# ------------------------------------------------- (b) recompile guards
+
+def test_faults_robust_availability_compiles_once():
+    data, params0 = _setup()
+    m = data.num_clients
+    trace = np.zeros((m, 3), bool)
+    trace[:4, 0] = True
+    trace[:2, 1] = True
+    trace[:, 2] = True
+    part = ParticipationConfig(cohort_size=4, sampler="availability",
+                               availability=trace)
+    strat = _make("ucfl", params0,
+                  faults=fl.FaultConfig(byzantine_frac=0.25, drop_rate=0.1),
+                  robust=RobustConfig(rule="trimmed_mean", trim_k=1))
+    assert strat.round.masked_jit is not None
+    assert strat.injects_faults
+    h = simulation.run(strat, lenet.apply, data, jax.random.PRNGKey(1),
+                       rounds=6, eval_every=6, participation=part)
+    sizes = [mt["cohort_size"] for mt in h.metrics]
+    assert strat.round.masked_jit._cache_size() == 1, sizes
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices "
+                           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_faults_robust_sharded_compiles_once():
+    data, params0 = _setup()
+    part = ParticipationConfig(cohort_size=4)
+    strat = _make("ucfl", params0, mesh=8,
+                  faults=fl.FaultConfig(byzantine_frac=0.25, drop_rate=0.1),
+                  robust=RobustConfig(rule="trimmed_mean", trim_k=1))
+    h = simulation.run(strat, lenet.apply, data, jax.random.PRNGKey(1),
+                       rounds=4, eval_every=4, participation=part)
+    assert np.isfinite(h.avg_acc[-1])
+    assert strat.round.masked_jit._cache_size() == 1
+
+
+# ------------------------------------------- (c) graceful degradation
+
+@pytest.mark.parametrize("faults", [
+    fl.FaultConfig(byzantine_frac=1.0, attack="nan"),
+    fl.FaultConfig(drop_rate=1.0),
+], ids=["all_nan", "all_dropped"])
+def test_total_loss_round_keeps_params(faults):
+    """Every slot demoted (NaN-guarded or dropped) == nobody uploaded:
+    the round must leave the stacked params bit-identical."""
+    data, params0 = _setup()
+    strat = _make("ucfl", params0, faults=faults)
+    state = strat.init(jax.random.PRNGKey(3), data)
+    before = _leaves(strat, simulation.donation_safe_copy(state))
+    new, _ = strat.round(state, data, jax.random.PRNGKey(101),
+                         np.asarray([0, 2, 5], np.int32))
+    for a, b in zip(before, _leaves(strat, new)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("attack", ["sign_flip", "scaled_noise", "nan",
+                                    "inf"])
+def test_attacks_stay_finite_under_trimmed_mean(attack):
+    data, params0 = _setup()
+    strat = _make("ucfl", params0,
+                  faults=fl.FaultConfig(byzantine_frac=0.25, attack=attack),
+                  robust=RobustConfig(rule="trimmed_mean", trim_k=2))
+    state = strat.init(jax.random.PRNGKey(3), data)
+    for rnd in range(3):
+        state, _ = strat.round(state, data, jax.random.PRNGKey(rnd),
+                               np.arange(data.num_clients, dtype=np.int32))
+    for leaf in _leaves(strat, state):
+        assert np.isfinite(leaf).all()
+
+
+def test_sign_flip_actually_perturbs():
+    """The attack must not be a silent no-op: with no defense the round
+    output differs from the clean round's."""
+    data, params0 = _setup()
+    clean = _one_round(_make("ucfl", params0), data)
+    hit = _one_round(
+        _make("ucfl", params0,
+              faults=fl.FaultConfig(byzantine_frac=0.5,
+                                    attack="sign_flip")), data)
+    s = _make("ucfl", params0)
+    assert any(not np.array_equal(a, b)
+               for a, b in zip(_leaves(s, clean), _leaves(s, hit)))
+
+
+def test_fedavg_async_with_faults_smoke():
+    data, params0 = _setup()
+    strat = _make("fedavg", params0,
+                  faults=fl.FaultConfig(byzantine_frac=0.25, attack="nan"),
+                  robust=RobustConfig(rule="median"),
+                  async_buffer=AsyncConfig(flush_k=2))
+    state = strat.init(jax.random.PRNGKey(3), data)
+    for rnd in range(3):
+        state, _ = strat.round(state, data, jax.random.PRNGKey(rnd),
+                               np.asarray([0, 1, 4, 6], np.int32))
+    for leaf in _leaves(strat, state):
+        assert np.isfinite(leaf).all()
+
+
+# ------------------------------------------------------- (d) fail-fast
+
+def test_check_finite_state_raises_with_diagnostics():
+    """The guard names the round, the strategy, and the offending client
+    rows — the triage a silent NaN run never gave."""
+    data, params0 = _setup()
+    strat = _make("ucfl", params0)
+    state = strat.init(jax.random.PRNGKey(3), data)
+    def poison(x):
+        a = np.array(x, np.float32)
+        a[3] = np.nan
+        return a
+
+    state["params"] = jax.tree.map(poison, state["params"])
+    with pytest.raises(RuntimeError, match=r"round 7.*client rows \[3\]"):
+        simulation._check_finite_state(strat, state, 7)
+
+
+def test_check_finite_state_passes_on_finite():
+    data, params0 = _setup()
+    strat = _make("ucfl", params0)
+    state = strat.init(jax.random.PRNGKey(3), data)
+    simulation._check_finite_state(strat, state, 1)  # must not raise
+
+
+def test_simulation_stands_down_when_strategy_injects():
+    """A faults-enabled strategy owns degradation: run() must not raise
+    even while attackers shoot NaNs (the finite guard absorbs them)."""
+    data, params0 = _setup()
+    strat = _make("ucfl", params0,
+                  faults=fl.FaultConfig(byzantine_frac=0.25, attack="nan"))
+    h = simulation.run(strat, lenet.apply, data, jax.random.PRNGKey(1),
+                       rounds=2, eval_every=2,
+                       participation=ParticipationConfig(cohort_size=4))
+    assert np.isfinite(h.avg_acc[-1])
+
+
+# -------------------------------------- (e) robust-rule property tests
+
+def _slab(seed, c=6, d=5, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(c, d)).astype(np.float32) * scale
+
+
+def test_finite_guard_zeroes_and_demotes():
+    flat = _slab(0)
+    flat[2, 1] = np.nan
+    flat[4, 3] = np.inf
+    idx = np.arange(6, dtype=np.int32)
+    mask = np.ones(6, bool)
+    out, idx2, mask2 = fl.finite_guard(jnp.asarray(flat), jnp.asarray(idx),
+                                       jnp.asarray(mask), 8)
+    out, idx2, mask2 = np.asarray(out), np.asarray(idx2), np.asarray(mask2)
+    assert np.isfinite(out).all()  # rows ZEROED, not just demoted: 0*NaN
+    np.testing.assert_array_equal(mask2, [1, 1, 0, 1, 0, 1])
+    np.testing.assert_array_equal(idx2, [0, 1, 8, 3, 8, 5])
+    np.testing.assert_array_equal(out[[0, 1, 3, 5]], flat[[0, 1, 3, 5]])
+
+
+def test_trimmed_stage_demotes_supermajority_outlier():
+    """A sign-flip-style row (outlier in every coordinate) is demoted to
+    a masked pad slot by the trimmed_mean stage — winsorizing its values
+    alone would leave its full (c, c) mix weight pointed at the inlier
+    boundary; honest rows (outliers only in scattered coordinates) keep
+    their slots."""
+    flat = _slab(3, c=6, d=64)
+    flat[1] = -50.0 * np.abs(flat[1]) - 50.0  # below every honest value
+    idx = np.arange(6, dtype=np.int32)
+    mask = np.ones(6, bool)
+    stage = aggregation.robust_stage(
+        RobustConfig(rule="trimmed_mean", trim_k=1))
+    out, idx2, mask2 = stage(jnp.asarray(flat), jnp.asarray(idx),
+                             jnp.asarray(mask), 8)
+    mask2, idx2 = np.asarray(mask2), np.asarray(idx2)
+    np.testing.assert_array_equal(mask2, [1, 0, 1, 1, 1, 1])
+    assert idx2[1] == 8 and (idx2[mask2] == idx[mask2]).all()
+    # surviving rows are winsorized into the inlier range, not re-meaned
+    out = np.asarray(out)
+    assert np.isfinite(out).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 2))
+def test_trimmed_mean_permutation_invariant(seed, trim_k):
+    flat = _slab(seed)
+    mask = np.asarray([1, 1, 1, 1, 0, 1], bool)
+    perm = np.random.default_rng(seed + 1).permutation(6)
+    a = np.asarray(aggregation.masked_trimmed_mean(
+        jnp.asarray(flat), jnp.asarray(mask), trim_k))
+    b = np.asarray(aggregation.masked_trimmed_mean(
+        jnp.asarray(flat[perm]), jnp.asarray(mask[perm]), trim_k))
+    np.testing.assert_allclose(a[perm], b, rtol=1e-6, atol=1e-6)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(1.0, 1e6))
+def test_median_breakdown_bounded_by_honest_range(seed, evil_scale):
+    """≤ ⌊(c_real−1)/2⌋ arbitrary rows cannot push the coordinate median
+    outside the honest rows' coordinate-wise range."""
+    rng = np.random.default_rng(seed)
+    c, d = 7, 4
+    flat = rng.normal(size=(c, d)).astype(np.float32)
+    n_evil = (c - 1) // 2
+    evil = rng.permutation(c)[:n_evil]
+    honest = np.setdiff1d(np.arange(c), evil)
+    flat[evil] = rng.normal(size=(n_evil, d)).astype(np.float32) * evil_scale
+    mask = np.ones(c, bool)
+    out = np.asarray(aggregation.masked_median_rows(
+        jnp.asarray(flat), jnp.asarray(mask)))
+    lo = flat[honest].min(axis=0)
+    hi = flat[honest].max(axis=0)
+    assert (out[honest[0]] >= lo - 1e-5).all()
+    assert (out[honest[0]] <= hi + 1e-5).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_norm_clip_noop_on_inlier_rows(seed):
+    """Rows already within the clip radius pass through BIT-exactly."""
+    flat = _slab(seed, scale=0.1)
+    mask = np.ones(6, bool)
+    out = np.asarray(aggregation.masked_norm_clip(
+        jnp.asarray(flat), jnp.asarray(mask), 1e6))
+    np.testing.assert_array_equal(out, flat)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_multi_krum_keeps_central_drops_outlier(seed):
+    flat = _slab(seed, scale=0.5)
+    flat[3] += 100.0  # gross outlier
+    idx = np.arange(6, dtype=np.int32)
+    mask = np.ones(6, bool)
+    _, idx2, mask2 = aggregation.robust_stage(
+        RobustConfig(rule="multi_krum", f=1))(jnp.asarray(flat),
+                                              jnp.asarray(idx),
+                                              jnp.asarray(mask), 8)
+    idx2, mask2 = np.asarray(idx2), np.asarray(mask2)
+    assert not mask2[3] and idx2[3] == 8  # outlier demoted to pad slot
+    assert mask2.sum() == 5  # keeps c_real − f
