@@ -31,6 +31,22 @@ Turns the ROADMAP's engine targets into enforced checks:
     fixed-shape round; a ratio above the gate means the stage introduced
     a recompile, a host sync, or an O(c²·d)-heavy rule on the default
     path.
+  * flat-tree overhead — the ``flat_tree`` regime (UCFL on a LeNet whose
+    every leaf is split in half: 2x the pytree leaves, identical FLOPs)
+    must stay within ``--max-flat-ratio`` (default 1.2) of the plain
+    cohort round. The flat-slab layout ravels any pytree into one
+    (m, d_aligned) matrix at construction, so leaf count must be
+    invisible to the mix/scatter; a ratio above the gate means some
+    round component regressed to per-leaf work.
+  * quant overhead — the ``quant`` regime (int8 quantized uplink
+    transport + error feedback, ``FedConfig.transport``) must stay
+    within ``--max-quant-ratio`` (default 1.3) of the plain cohort
+    round. Quantize→dequantize→EF is traced into the same jitted
+    fixed-shape round with a donated EF slab; a ratio above the gate
+    means a recompile, a host sync, or EF traffic that outgrew the
+    cheap elementwise stage it is specified to be. (The ~3.88x UL byte
+    win it buys is asserted by ``participation_sweep.py``'s
+    quantized-uplink replay, not here.)
   * m-scaling — a fixed-cohort round must cost O(c·d), not O(m·d). The
     ``m_scaling_ratio`` (round time at m=512 over m=8, same cohort size)
     must stay within ``--max-mscale-ratio`` (default 1.3); above it some
@@ -83,6 +99,10 @@ def main(argv=None) -> int:
                     help="gate on async_over_cohort_ratio")
     ap.add_argument("--max-faults-ratio", type=float, default=1.2,
                     help="gate on faults_over_cohort_ratio")
+    ap.add_argument("--max-flat-ratio", type=float, default=1.2,
+                    help="gate on flat_tree_over_cohort_ratio")
+    ap.add_argument("--max-quant-ratio", type=float, default=1.3,
+                    help="gate on quant_over_cohort_ratio")
     ap.add_argument("--max-mscale-ratio", type=float, default=1.3,
                     help="gate on m_scaling_ratio (fixed-cohort round "
                          "time at m=512 over m=8)")
@@ -111,6 +131,18 @@ def main(argv=None) -> int:
                     "stage is no longer a cheap in-round slab transform "
                     "— check for a recompile, a host sync, or a robust "
                     "rule that left the fused masked mix-scatter path")
+        ok &= _gate(payload, "flat_tree_over_cohort_ratio", "cohort",
+                    "flat_tree", args.max_flat_ratio,
+                    "a fragmented (2x-leaf) pytree slowed the round — "
+                    "the flat-slab layout is supposed to make leaf "
+                    "count invisible to the mix/scatter; check for "
+                    "per-leaf work that crept back into the round body")
+        ok &= _gate(payload, "quant_over_cohort_ratio", "cohort",
+                    "quant", args.max_quant_ratio,
+                    "the quantized-uplink transport stage is no longer "
+                    "a cheap in-round elementwise quantize→dequantize→"
+                    "EF fold — check for a recompile, a host sync, or "
+                    "an EF path that left the fused masked mix-scatter")
         ok &= _gate(payload, "m_scaling_ratio", "m8", "m512",
                     args.max_mscale_ratio,
                     "a fixed-cohort round's time grew with the client "

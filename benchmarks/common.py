@@ -61,10 +61,10 @@ def make_params0(key, s: BenchScale, num_classes=None):
 
 def make_strategy(name: str, params0, s: BenchScale, *, chunk_size=None,
                   mesh=None, w_refresh=None, async_buffer=None, faults=None,
-                  robust=None, **kw):
+                  robust=None, transport=None, **kw):
     cfg = FedConfig(batch_size=s.batch_size, chunk_size=chunk_size, mesh=mesh,
                     w_refresh=w_refresh, async_buffer=async_buffer,
-                    faults=faults, robust=robust)
+                    faults=faults, robust=robust, transport=transport)
     if name == "ucfl":
         return ucfl.make_ucfl(lenet.apply, params0, cfg,
                               var_batch_size=s.var_batch, **kw)

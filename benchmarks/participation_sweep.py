@@ -39,6 +39,15 @@ already sends, so the row also prints the §V-D per-round uplink bytes of
 both runs: they are identical by construction (the comm-model regression
 test pins this), making the refresh a pure accuracy win on the wireless
 budget.
+
+The ``participation/quant_uplink`` row replays label shift under ucfl
+with the quantized uplink transport off vs on (int8 per-chunk-scaled
+deltas + error feedback, ``FedConfig.transport``) — same data, seeds,
+and cohort sequence, matched rounds. It prices both wires with the
+dtype-aware comm model (``uplink_bytes_per_round(..., transport=...)``
+and the transport-scaled ``round_time`` Tdl frontier) and asserts the
+trade the transport exists to buy: ≥ 3.5x fewer uplink bytes per round
+at matched accuracy (average within ±1% absolute of the float32 run).
 """
 from __future__ import annotations
 
@@ -135,7 +144,75 @@ def run(scale) -> list[str]:
 
     rows.extend(async_replay_rows(scale, chunk))
     rows.extend(byzantine_replay_rows(scale, chunk))
+    rows.extend(quant_replay_rows(scale, chunk))
     return rows
+
+
+def quant_replay_rows(scale, chunk) -> list[str]:
+    """Quantized-uplink replay: float32 wire vs int8 transport.
+
+    Same data, seeds, and uniform cohort sequence — only
+    ``FedConfig.transport`` differs. The int8 run uploads 1 B/param +
+    one f32 scale per 128-param chunk with per-client error feedback;
+    the row prices both wires per round (dtype-aware
+    ``cm.uplink_bytes_per_round``) and on the §V-D Tdl axis
+    (transport-scaled ``cm.round_time``), and reports whether the
+    byte win arrived at matched accuracy:
+
+      * ``bytes_ratio`` — raw/int8 uplink bytes per round; must be
+        ≥ 3.5 (it is ~3.88 by construction: (1 + 4/128)/4 per param).
+      * ``acc_matched`` — |avg_int8 − avg_raw| ≤ 0.01 at each run's
+        argmax-average round (matched round budget).
+    """
+    import jax
+
+    from repro.core.pytree import tree_count_params
+    from repro.federated import simulation
+    from repro.federated.transport import TransportConfig
+    from repro.models import lenet
+
+    lscale = dataclasses.replace(scale, rounds=max(12, scale.rounds))
+    m = lscale.m
+    c = max(2, m // 2)
+    part = ParticipationConfig(cohort_size=c, seed=7)
+    p = cm.SystemParams(m=m, rho=4.0, inv_mu=1.0)
+
+    key = jax.random.PRNGKey(29)
+    dkey, mkey, skey = jax.random.split(key, 3)
+    data = common.scenario_data("label_shift", dkey, lscale)
+    params0 = common.make_params0(mkey, lscale)
+    model_bytes = 4 * tree_count_params(params0)
+
+    res = {}
+    for label, tr in (("raw", None), ("int8", TransportConfig("int8"))):
+        strat = common.make_strategy("ucfl", params0, lscale,
+                                     chunk_size=chunk, transport=tr)
+        h = simulation.run(strat, lenet.apply, data, skey,
+                           rounds=lscale.rounds, eval_every=2,
+                           participation=part)
+        avg, worst = h.paired_best
+        res[label] = {
+            "avg": avg, "worst": worst,
+            "ul": cm.uplink_bytes_per_round(model_bytes, "unicast", m,
+                                            cohort_size=c, transport=tr),
+            "t_round": cm.round_time(p, "unicast", cohort_size=c,
+                                     transport=tr),
+        }
+    ratio = res["raw"]["ul"] / max(res["int8"]["ul"], 1)
+    dacc = res["int8"]["avg"] - res["raw"]["avg"]
+    row = common.csv_row(
+        "participation/quant_uplink", 0.0,
+        f"cohort={c};rounds={lscale.rounds};"
+        f"avg_raw={res['raw']['avg']:.4f};avg_int8={res['int8']['avg']:.4f};"
+        f"worst_raw={res['raw']['worst']:.4f};"
+        f"worst_int8={res['int8']['worst']:.4f};"
+        f"ul_raw={res['raw']['ul']}B;ul_int8={res['int8']['ul']}B;"
+        f"bytes_ratio={ratio:.2f}x;"
+        f"t_round_raw={res['raw']['t_round']:.2f}Tdl;"
+        f"t_round_int8={res['int8']['t_round']:.2f}Tdl;"
+        f"acc_matched={abs(dacc) <= 0.01};bytes_ok={ratio >= 3.5}")
+    print(row, flush=True)
+    return [row]
 
 
 def byzantine_replay_rows(scale, chunk) -> list[str]:

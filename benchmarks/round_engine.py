@@ -26,6 +26,30 @@ Measures the per-round wall time of the jitted round in three regimes:
                          jitted round (one compiled shape), so this too
                          must sit within ~1.2x of the plain cohort round
                          — the fourth CI ratio gate.
+  * ``flat_tree``      — the fixed-size cohort regime on a FRAGMENTED
+                         LeNet: every parameter leaf is split in half
+                         along axis 0 (2x the leaves, identical FLOPs —
+                         the apply recombines with ``jnp.concatenate``).
+                         The flat-slab state layout ravels any pytree
+                         into ONE (m, d_aligned) matrix at strategy
+                         construction, so leaf count must not leak into
+                         the round: same fused masked mix-scatter, same
+                         compiled shape, within ~1.2x of the plain
+                         cohort round (the fifth CI ratio gate). Before
+                         the slab, each extra leaf added a gather +
+                         scatter pair per round.
+  * ``quant``          — the fixed-size cohort regime with quantized
+                         uplink transport on (``FedConfig.transport``,
+                         int8 per-chunk-scaled deltas + error
+                         feedback). Quantize→dequantize→EF runs inside
+                         the same jitted round (one compiled shape,
+                         donated params + EF slab), so host compute
+                         must stay within ~1.3x of the plain cohort
+                         round (the sixth CI ratio gate; the slightly
+                         looser gate covers the extra EF slab traffic).
+                         The WIRE win it buys (~3.88x fewer UL bytes)
+                         is priced by the comm model in
+                         ``participation_sweep.py``, not here.
   * ``async``          — the fixed-size cohort regime with the
                          buffered-async server on
                          (``FedConfig.async_buffer``, flush_k = half the
@@ -62,15 +86,18 @@ import sys
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.core import FedConfig, ucfl
 from repro.core.aggregation import RobustConfig
 from repro.core.similarity import RefreshConfig
 from repro.federated import participation as part
 from repro.federated import simulation
 from repro.federated.async_buffer import AsyncConfig
 from repro.federated.faults import FaultConfig
+from repro.federated.transport import TransportConfig
 from repro.models import lenet
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
@@ -134,6 +161,39 @@ def _interleaved_rounds_us(entries, data, rounds: int) -> dict:
             jax.block_until_ready(states[name])
             samples[name].append(time.time() - t0)
     return {name: float(np.min(ts)) * 1e6 for name, ts in samples.items()}
+
+
+def _fragmented_lenet(params0):
+    """LeNet with every leaf split in half along axis 0 — 2x the leaves.
+
+    Identical arithmetic (the apply recombines the halves with
+    ``jnp.concatenate`` before calling the real LeNet forward), but a
+    much more fragmented pytree. The ``flat_tree`` regime runs UCFL on
+    this model: the flat-slab layout must keep it on the one-matrix
+    fused mix path, so leaf count shows up only in the (cheap) per-leaf
+    unravel/ravel at the apply boundary, never in the mix/scatter.
+    """
+    leaves, treedef = jax.tree.flatten(params0)
+    frag = {}
+    for i, leaf in enumerate(leaves):
+        half = leaf.shape[0] // 2 if leaf.ndim else 0
+        if half:
+            frag[f"leaf{i:02d}"] = {"a": leaf[:half], "b": leaf[half:]}
+        else:
+            frag[f"leaf{i:02d}"] = {"a": leaf}
+
+    def _defrag(fp):
+        out = []
+        for i in range(len(leaves)):
+            piece = fp[f"leaf{i:02d}"]
+            out.append(jnp.concatenate([piece["a"], piece["b"]], axis=0)
+                       if "b" in piece else piece["a"])
+        return jax.tree.unflatten(treedef, out)
+
+    def apply(fp, x):
+        return lenet.apply(_defrag(fp), x)
+
+    return frag, apply
 
 
 def _git_commit() -> str | None:
@@ -240,6 +300,19 @@ def run(scale) -> list[str]:
                         robust=RobustConfig(rule="trimmed_mean",
                                             trim_k=1)),
                     cohort_cfg))
+    frag_params, frag_apply = _fragmented_lenet(params0)
+    entries.append(("flat_tree",
+                    ucfl.make_ucfl(
+                        frag_apply, frag_params,
+                        FedConfig(batch_size=s.batch_size,
+                                  chunk_size=chunk),
+                        var_batch_size=s.var_batch),
+                    cohort_cfg))
+    entries.append(("quant",
+                    common.make_strategy("ucfl", params0, s,
+                                         chunk_size=chunk,
+                                         transport=TransportConfig("int8")),
+                    cohort_cfg))
 
     # sharded cohort regimes (only with a multi-device host platform,
     # e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8)
@@ -261,7 +334,8 @@ def run(scale) -> list[str]:
     total_s = time.time() - t0
 
     results, sharded = {}, {}
-    for name in list(regimes) + ["refresh", "async", "faults"]:
+    for name in list(regimes) + ["refresh", "async", "faults",
+                                 "flat_tree", "quant"]:
         results[name] = {"round_us": times[name], "rounds": rounds}
         rows.append(common.csv_row(
             f"round_engine/ucfl_{name}", times[name],
@@ -295,6 +369,10 @@ def run(scale) -> list[str]:
         max(results["cohort"]["round_us"], 1e-9)
     faults_ratio = results["faults"]["round_us"] / \
         max(results["cohort"]["round_us"], 1e-9)
+    flat_ratio = results["flat_tree"]["round_us"] / \
+        max(results["cohort"]["round_us"], 1e-9)
+    quant_ratio = results["quant"]["round_us"] / \
+        max(results["cohort"]["round_us"], 1e-9)
     payload = {
         "config": {"m": s.m, "cohort_size": cohort, "rounds": rounds,
                    "model": "lenet", "scenario": "label_shift",
@@ -311,6 +389,8 @@ def run(scale) -> list[str]:
         "refresh_over_cohort_ratio": refresh_ratio,
         "async_over_cohort_ratio": async_ratio,
         "faults_over_cohort_ratio": faults_ratio,
+        "flat_tree_over_cohort_ratio": flat_ratio,
+        "quant_over_cohort_ratio": quant_ratio,
         "m_scaling_ratio": m_ratio,
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
@@ -318,6 +398,8 @@ def run(scale) -> list[str]:
                           ("refresh_over_cohort", refresh_ratio, 1.2),
                           ("async_over_cohort", async_ratio, 1.2),
                           ("faults_over_cohort", faults_ratio, 1.2),
+                          ("flat_tree_over_cohort", flat_ratio, 1.2),
+                          ("quant_over_cohort", quant_ratio, 1.3),
                           ("m_scaling_m512_over_m8", m_ratio, 1.3)):
         rows.append(common.csv_row(
             f"round_engine/{label}", r,

@@ -41,7 +41,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.pytree import scatter_rows, stacked_ravel, stacked_unravel
+from repro.core.pytree import stacked_ravel
 from repro.kernels import ops
 
 
@@ -367,58 +367,52 @@ def cohort_gather(full, safe, *, impl=None):
 def mix_scatter(full, cohort_updated, rows, idx, mask, *, impl=None):
     """Apply per-slot mixing rows and scatter into the full stacked state.
 
-    The cohort-stacked update tree is raveled ONCE to a (c, d) matrix so
-    the whole PS mix is a single kernel launch (instead of one
-    ``mix_aggregate`` per pytree leaf). A single-leaf (already-flat)
-    state then takes the fully fused ``masked_mix_scatter`` path — mix +
-    masked row scatter in one kernel pass over a zero-copy (m, d)
-    reshape view, with the pallas path aliasing the state buffer. For a
-    multi-leaf tree, raveling the *full* state would itself copy the
-    (m, d) bytes the fusion exists to save, so the mixed (c, d) rows are
-    instead split back per leaf (cheap: c ≪ m rows) and row-scattered in
-    place — under ``donate_argnums`` absent clients' rows never move.
+    The cohort-stacked update tree is raveled ONCE to a (c, d) matrix
+    and the whole PS mix runs as the fully fused ``masked_mix_scatter``
+    kernel pass — mix + masked row scatter over a zero-copy (m, d)
+    reshape view, with the pallas path aliasing the state buffer.
+
+    The stacked state must be a single leaf: the slab engine
+    (:class:`repro.core.flat.LayoutTable`) is the state contract, and
+    every strategy ravels multi-leaf models into one (m, d_aligned)
+    matrix at construction. The old per-leaf scatter fallback is gone —
+    a multi-leaf ``full`` here means a caller bypassed the layout table,
+    which is an error, not a slow path.
 
     Pad slots rely on the sentinel-index contract: the scatter drops
     out-of-range rows, so ``mask`` must be False exactly where ``idx``
     is the sentinel m (guaranteed by ``participation.as_cohort``).
     """
-    leaves, treedef = jax.tree.flatten(full)
-    flat_c = stacked_ravel(cohort_updated)
-    if len(leaves) == 1:
-        leaf = leaves[0]
-        flat = leaf.reshape(leaf.shape[0], -1)  # zero-copy view
-        out = ops.masked_mix_scatter(rows, flat_c, idx, mask, flat,
-                                     impl=impl)
-        return jax.tree.unflatten(treedef, [out.reshape(leaf.shape)])
-    mixed = ops.mix_aggregate(rows, flat_c, impl=impl)  # one launch
-    return scatter_rows(full, idx, stacked_unravel(cohort_updated, mixed))
+    return mix_scatter_flat(full, stacked_ravel(cohort_updated), rows,
+                            idx, mask, impl=impl)
 
 
 def mix_scatter_flat(full, flat_c, rows, idx, mask, *, impl=None):
     """:func:`mix_scatter` for an ALREADY-raveled (c, d) update matrix.
 
     The buffered-async flush stores pending uploads as raveled rows, so
-    there is no cohort-stacked tree to ravel: single-leaf states take the
-    same fused ``masked_mix_scatter`` kernel pass, multi-leaf trees mix
-    once on (c, d) and unravel/row-scatter per leaf against ``full``'s
-    trailing shapes. ``flat_c`` wider than the state's flat dim (the
-    async buffer allocates rows at the 128-aligned width,
-    ``ops.aligned_dim``) is sliced back — the tail columns are the
+    there is no cohort-stacked tree to ravel: the single-leaf state takes
+    the same fused ``masked_mix_scatter`` kernel pass. ``flat_c`` wider
+    than the state's flat dim (a true-dim cohort ravel against a
+    128-aligned slab never happens, but the async buffer may allocate
+    beyond ``aligned_dim``) is sliced back — the tail columns are the
     deposit-time zero padding. Sentinel/mask semantics are identical to
-    :func:`mix_scatter`.
+    :func:`mix_scatter`; multi-leaf stacked state raises (see there).
     """
     leaves, treedef = jax.tree.flatten(full)
-    d = sum(l.size // l.shape[0] for l in leaves)
+    if len(leaves) != 1:
+        raise ValueError(
+            "mix_scatter: multi-leaf stacked state is no longer supported "
+            "on the mix path — the slab engine (repro.core.flat."
+            "LayoutTable) is the state contract; ravel the state to one "
+            f"(m, dim_aligned) matrix (got {len(leaves)} leaves)")
+    leaf = leaves[0]
+    d = leaf.size // leaf.shape[0]
     if flat_c.shape[1] > d:
         flat_c = flat_c[:, :d]
-    if len(leaves) == 1:
-        leaf = leaves[0]
-        flat = leaf.reshape(leaf.shape[0], -1)  # zero-copy view
-        out = ops.masked_mix_scatter(rows, flat_c, idx, mask, flat,
-                                     impl=impl)
-        return jax.tree.unflatten(treedef, [out.reshape(leaf.shape)])
-    mixed = ops.mix_aggregate(rows, flat_c, impl=impl)  # one launch
-    return scatter_rows(full, idx, stacked_unravel(full, mixed))
+    flat = leaf.reshape(leaf.shape[0], -1)  # zero-copy view
+    out = ops.masked_mix_scatter(rows, flat_c, idx, mask, flat, impl=impl)
+    return jax.tree.unflatten(treedef, [out.reshape(leaf.shape)])
 
 
 def centroid_rules(w, labels, num_clusters):

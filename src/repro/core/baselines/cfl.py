@@ -22,10 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation
+from repro.core import aggregation, flat
 from repro.core.baselines import common
-from repro.core.baselines.common import broadcast_params, group_average
-from repro.core.pytree import stacked_ravel
+from repro.core.baselines.common import group_average
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
@@ -56,20 +55,28 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
+    common.reject_transport(
+        cfg.transport, "cfl",
+        "the spectral split statistics consume raw update-delta rows; "
+        "quantization noise in the pairwise cosine matrix would need "
+        "its own bias analysis before the split rule could trust it")
+    layout = flat.LayoutTable.build(params0)
+
     def init(key, data):
         m = data.num_clients
         return {
-            "params": broadcast_params(params0, m),
+            "params": layout.slab(params0, m),
             "assignment": np.zeros(m, dtype=np.int32),
             "round": 0,
         }
 
     @jax.jit
     def _train_agg(params, assignment, n, x, y, key):
-        updated, _ = local(params, x, y, key)
-        delta = jax.tree.map(lambda a, b: a - b, updated, params)
-        new_params = group_average(updated, assignment, n, impl=kernel_impl)
-        return new_params, stacked_ravel(delta)
+        updated, _ = local(layout.unravel(params), x, y, key)
+        post = layout.ravel(updated)
+        new_params = layout.ravel(
+            group_average(updated, assignment, n, impl=kernel_impl))
+        return new_params, post - params
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
     ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
@@ -81,27 +88,23 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         pc = sops.gather(params, safe)
         keys = common.cohort_keys(key, x.shape[0], safe)
-        updated, _ = local(pc, x[safe], y[safe], None, keys=keys)
+        updated, _ = local(layout.unravel(pc), x[safe], y[safe], None,
+                           keys=keys)
+        post = layout.ravel(updated)
         if ustage is not None:
             # sanitize the upload BEFORE the split statistics: the
             # returned deltas (and the split bookkeeping fed from them)
             # see only surviving rows, and the FINAL mask travels back
             # to the host so demoted slots leave the member pool too
-            flat, idx, mask = ustage(stacked_ravel(pc),
-                                     stacked_ravel(updated), idx, mask,
-                                     key, x.shape[0])
-            delta = flat - stacked_ravel(pc)
-            rows = aggregation.masked_group_rows(assignment_c,
-                                                 jnp.take(n, safe), mask)
-            new_params = sops.mix_scatter_flat(params, flat, rows, idx,
-                                               mask, impl=kernel_impl)
-            return new_params, delta, mask
-        delta = jax.tree.map(lambda a, b: a - b, updated, pc)
+            post, idx, mask = ustage(pc, post, idx, mask, key, x.shape[0])
+        delta = post - pc
         rows = aggregation.masked_group_rows(assignment_c,
                                              jnp.take(n, safe), mask)
-        new_params = sops.mix_scatter(params, updated, rows, idx, mask,
-                                      impl=kernel_impl)
-        return new_params, stacked_ravel(delta)
+        new_params = sops.mix_scatter_flat(params, post, rows, idx, mask,
+                                           impl=kernel_impl)
+        if ustage is not None:
+            return new_params, delta, mask
+        return new_params, delta
 
     def _maybe_split(assignment, members_pool, dmat_rows):
         """Recursive bipartition check over the clients in members_pool.
@@ -178,5 +181,6 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
                                         sops=sops, upload_stage=ustage),
-                    lambda s: s["params"], comm_scheme="groupcast",
+                    lambda s: layout.unravel(s["params"]),
+                    comm_scheme="groupcast",
                     injects_faults=cfg.faults is not None)

@@ -21,11 +21,33 @@ eligible-set size. The engine here replaces all of that:
     / pFedMe personal models) keep custom jitted bodies but reuse the
     same pieces.
 
-Donation caveat: jax actually honors ``donate_argnums`` on CPU and TPU —
-after a masked round the *input* state buffers are dead. The simulation
-loop always rebinds the state, and its warm-up call runs on a copy; any
-direct caller that wants to keep the pre-round state alive must copy it
-first (see tests/test_masked_cohort.py).
+Slab state layout
+-----------------
+Every strategy's stacked device state — ``params``, SCAFFOLD controls,
+Ditto/pFedMe personal models, transport error-feedback accumulators — is
+a single float32 ``(m, dim_aligned)`` *slab* per entry, laid out by a
+static :class:`repro.core.flat.LayoutTable` built once from ``params0``
+at strategy construction. Pytree structure reappears ONLY at ``apply_fn``
+boundaries: ``layout.unravel`` before local SGD / evaluation,
+``layout.ravel`` on the way back. Because a bare matrix is a single-leaf
+pytree, every tree-generic helper here (:class:`StateOps`, the mesh
+row-sharding, :func:`fedavg_masked_mix`, the sentinel scatters) operates
+on slabs unchanged — and always hits the fused single-leaf
+``masked_mix_scatter`` / HBM gather-mix-scatter kernel path, multi-leaf
+model or not. The ``dim_aligned - dim`` tail columns are zero by
+construction (``LayoutTable.ravel`` zero-fills them); all mixes are
+column-independent, so the tail never contaminates values, norms or the
+streaming Δ/σ² statistics.
+
+Donation rules: jax actually honors ``donate_argnums`` on CPU and TPU —
+after a masked round the *input* state buffers are dead. Donated per
+body: the ``params`` slab always; the ``ef`` transport accumulator,
+``refresh`` buffers and the async ``abuf`` whenever the owning knob is
+on (they are rewritten every cohort round). ``W`` and ``collab`` are
+never donated. The simulation loop always rebinds the state, and its
+warm-up call runs on a copy; any direct caller that wants to keep the
+pre-round state alive must copy it first (see
+tests/test_masked_cohort.py).
 """
 from __future__ import annotations
 
@@ -42,6 +64,7 @@ from repro.core.pytree import (  # noqa: F401  (re-export)
 from repro.federated import async_buffer
 from repro.federated import mesh as mesh_lib
 from repro.federated import participation
+from repro.federated import transport as transport_lib
 from repro.kernels import ops
 
 
@@ -49,6 +72,13 @@ def broadcast_params(params0, m):
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x, (m,) + x.shape) + 0.0, params0
     )
+
+
+def reject_transport(transport, name, why):
+    """Construction-time guard for strategies without a quantizable uplink."""
+    if transport is not None:
+        raise NotImplementedError(
+            f"FedConfig.transport is not supported by {name}: {why}")
 
 
 def group_mixing_matrix(assignment, n):
@@ -288,7 +318,8 @@ class StateOps:
 
 def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None,
                  async_fn=None, async_cfg=None, sops=None,
-                 shard_keys=("params",), upload_stage=None):
+                 shard_keys=("params",), upload_stage=None,
+                 transport=None):
     """Build ``round(state, data, key, cohort=None)`` from the two paths.
 
     Args:
@@ -330,6 +361,9 @@ def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None,
         rules are masked-slot transforms with no dense counterpart, so
         the dense path raises at call time (the masked bodies already
         closed over the stage themselves).
+      transport: the ``FedConfig.transport`` value, passed here ONLY so
+        the dispatcher can reject ``cohort=None`` — quantization rewrites
+        the masked upload stage, and the dense path has no upload.
 
     The returned ``round`` accepts ``cohort=None`` (dense), a
     :class:`~repro.federated.participation.Cohort`, or a plain index
@@ -375,6 +409,12 @@ def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None,
                     "injection and robust rewrites are fixed-shape masked "
                     "slot transforms with no dense counterpart — pass a "
                     "participation config (or drop faults/robust)")
+            if transport is not None:
+                raise ValueError(
+                    "FedConfig.transport requires cohort rounds: "
+                    "quantization compresses the masked upload stage, and "
+                    "the dense full-participation path has no upload — "
+                    "pass a participation config (or drop transport)")
             state, metrics = dense_fn(state, data, key)
             size = data.num_clients
         else:
@@ -405,21 +445,38 @@ def cohort_keys(key, m, safe_idx):
 
 
 def make_masked_round(train, mix, *, donate=True, sops=None,
-                      upload_stage=None):
+                      upload_stage=None, layout=None, transport=None):
     """Jit the standard masked round body with a donated params buffer.
 
-    train(pc, xc, yc, keys, *args) -> cohort-stacked updated tree
-      (``keys`` are the per-slot client-indexed keys)
-    mix(params, updated, idx, mask, *args) -> new full stacked tree
+    With ``layout`` (a :class:`repro.core.flat.LayoutTable` — the slab
+    engine, used by every strategy):
+
+    train(pc_tree, xc, yc, keys, *args) -> cohort-stacked updated tree
+      (the body unravels the gathered (c, d_al) slab rows for it and
+      ravels its result back — the ONLY tree boundary in the round)
+    mix(params_slab, post_flat, idx, mask, *args) -> new (m, d_al) slab
+
+    Without ``layout`` the legacy tree contract holds (``mix`` receives
+    the cohort-stacked updated TREE) — kept for direct callers/tests.
 
     ``*args`` is an arbitrary tuple of device arrays (W, labels, n, ...)
     threaded to both closures. ``donate=True`` passes
     ``donate_argnums=(0,)`` so the stacked state is consumed in place.
 
+    ``transport`` (``FedConfig.transport``; requires ``layout``) inserts
+    the quantize→dequantize delta stage with error feedback between
+    local SGD and the upload stage: the returned body then takes AND
+    returns the (m, d_al) ``ef`` accumulator slab as its second donated
+    argument — ``body(params, ef, idx, mask, x, y, key, *args) ->
+    (mix(...), ef')``. ``transport=None`` keeps the stage (and the extra
+    argument) out of the trace entirely — bit-exact with the
+    transport-free engine.
+
     ``upload_stage`` (:func:`repro.federated.faults.upload_stage`) is the
     fault-injection / finite-guard / robust rewrite applied between
-    local SGD and ``mix``: it sees the (c, d) pre/post upload slab plus
-    the slot arrays and hands ``mix`` the rewritten updated tree and
+    local SGD (and the transport stage — faults corrupt what the wire
+    carried) and ``mix``: it sees the (c, d) pre/post upload slab plus
+    the slot arrays and hands ``mix`` the rewritten upload and
     ``idx``/``mask`` (demoted slots carry the sentinel, so the fused
     scatter drops them). ``None`` (the default) keeps the exact
     pre-existing trace — bit-exact with the stage-free engine.
@@ -433,25 +490,55 @@ def make_masked_round(train, mix, *, donate=True, sops=None,
     state itself is replicated unless ``sops`` is row-sharded
     (``FedConfig.shard_state``), in which case the round-start gather
     routes through the owner shards (``mix`` closures must use the same
-    ``sops`` for their scatters). The dispatcher pads slot counts to a
-    shard multiple (:func:`cohort_round`'s ``mesh`` arg).
+    ``sops`` for their scatters; the ``ef`` slab rides the same layout).
+    The dispatcher pads slot counts to a shard multiple
+    (:func:`cohort_round`'s ``mesh`` arg).
     """
     gather = sops.gather if sops is not None else (
         lambda tree, safe: gather_rows(tree, safe))
+    scatter = sops.scatter if sops is not None else scatter_rows
+    tstage = transport_lib.make_stage(transport)
+    if tstage is not None and layout is None:
+        raise ValueError("transport requires the slab layout table")
 
-    def body(params, idx, mask, x, y, key, *args):
+    def core(params, ef, idx, mask, x, y, key, *args):
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         keys = cohort_keys(key, x.shape[0], safe)
         pc = gather(params, safe)
+        if layout is not None:
+            updated = train(layout.unravel(pc), x[safe], y[safe], keys,
+                            *args)
+            post = layout.ravel(updated)
+            if tstage is not None:
+                # the EF rows ride the cohort: gathered at the clamped
+                # indices, scattered back at the ORIGINAL slots (clients
+                # keep their residual even if a later stage demotes
+                # their upload — the loss happened on the wire)
+                post, efc = tstage(pc, post, gather(ef, safe))
+                ef = scatter(ef, idx, efc)
+            if upload_stage is not None:
+                post, idx, mask = upload_stage(pc, post, idx, mask, key,
+                                               x.shape[0])
+            return mix(params, post, idx, mask, *args), ef
         updated = train(pc, x[safe], y[safe], keys, *args)
         if upload_stage is not None:
             flat, idx, mask = upload_stage(
                 stacked_ravel(pc), stacked_ravel(updated), idx, mask,
                 key, x.shape[0])
             updated = stacked_unravel(updated, flat)
-        return mix(params, updated, idx, mask, *args)
+        return mix(params, updated, idx, mask, *args), ef
 
-    return jax.jit(body, donate_argnums=(0,) if donate else ())
+    if tstage is None:
+        def body(params, idx, mask, x, y, key, *args):
+            out, _ = core(params, None, idx, mask, x, y, key, *args)
+            return out
+
+        return jax.jit(body, donate_argnums=(0,) if donate else ())
+
+    def body_t(params, ef, idx, mask, x, y, key, *args):
+        return core(params, ef, idx, mask, x, y, key, *args)
+
+    return jax.jit(body_t, donate_argnums=(0, 1) if donate else ())
 
 
 def fedavg_masked_mix(params, updated, idx, mask, n, *, impl=None):
@@ -478,8 +565,14 @@ def fedavg_masked_mix(params, updated, idx, mask, n, *, impl=None):
 
 
 def make_fedavg_masked_round(local, *, impl=None, donate=True, sops=None,
-                             upload_stage=None):
-    """The FedAvg-family masked round (FedAvg/FedProx reuse it)."""
+                             upload_stage=None, layout=None,
+                             transport=None):
+    """The FedAvg-family masked round (FedAvg/FedProx reuse it).
+
+    ``fedavg_masked_mix`` is tree-generic, so the same mix serves the
+    legacy tree contract and the slab engine (where ``updated`` is the
+    (c, d_al) upload matrix) unchanged.
+    """
 
     def train(pc, xc, yc, keys, n):
         updated, _ = local(pc, xc, yc, None, keys=keys)
@@ -493,7 +586,8 @@ def make_fedavg_masked_round(local, *, impl=None, donate=True, sops=None,
                                    impl=impl)
 
     return make_masked_round(train, mix, donate=donate, sops=sops,
-                             upload_stage=upload_stage)
+                             upload_stage=upload_stage, layout=layout,
+                             transport=transport)
 
 
 # ------------------------------------------------------- buffered-async path
@@ -525,7 +619,8 @@ def state_async_buffer(state, acfg, m, slots, dim, sops=None):
 
 
 def make_fedavg_async_round(train, acfg, *, impl=None, sops=None,
-                            upload_stage=None):
+                            upload_stage=None, layout=None,
+                            transport=None):
     """The FedAvg-family buffered-async round (FedAvg/FedProx reuse it).
 
     FedBuff's server rule in delta form: the buffer holds the cohort's
@@ -548,26 +643,42 @@ def make_fedavg_async_round(train, acfg, *, impl=None, sops=None,
     ``tau_max``/``tau_mean`` report 0.
 
     ``train(pc, xc, yc, keys, n) -> updated`` as in
-    :func:`make_fedavg_masked_round`. Returns a jitted
+    :func:`make_fedavg_masked_round` (``layout`` unravels/ravels around
+    it on the slab engine). Returns a jitted
     ``body(params, abuf, idx, mask, x, y, key, n) ->
-    (params', abuf', metrics)`` with ``params`` AND the buffer donated.
-    ``sops`` picks the state/buffer layout (row-sharded deposits route
-    each upload to its owner shard; the flush all-gathers the (B, d)
-    rows — the engine's only model-sized collective).
+    (params', abuf', metrics)`` with ``params`` AND the buffer donated —
+    or, with ``transport`` on, ``body(params, ef, abuf, ...) ->
+    (params', ef', abuf', metrics)`` with all three donated: the delta
+    is quantized (error-feedback carried in ``ef``) BEFORE it is
+    deposited, so the pending buffer holds exactly what the wire
+    carried. ``sops`` picks the state/buffer layout (row-sharded
+    deposits route each upload to its owner shard; the flush all-gathers
+    the (B, d) rows — the engine's only model-sized collective).
     """
     flush_k = int(acfg.flush_k)
     gather = sops.gather if sops is not None else (
         lambda tree, safe: gather_rows(tree, safe))
     scatter = sops.buffer_scatter() if sops is not None else None
+    efscatter = sops.scatter if sops is not None else scatter_rows
+    tstage = transport_lib.make_stage(transport)
+    if tstage is not None and layout is None:
+        raise ValueError("transport requires the slab layout table")
 
-    def body(params, abuf, idx, mask, x, y, key, n):
+    def core(params, ef, abuf, idx, mask, x, y, key, n):
         m = x.shape[0]
         safe = aggregation.safe_gather_index(idx, m)
         keys = cohort_keys(key, m, safe)
         pc = gather(params, safe)
-        updated = train(pc, x[safe], y[safe], keys, n)
-        pre_flat = stacked_ravel(pc)
-        post_flat = stacked_ravel(updated)
+        if layout is not None:
+            updated = train(layout.unravel(pc), x[safe], y[safe], keys, n)
+            pre_flat, post_flat = pc, layout.ravel(updated)
+        else:
+            updated = train(pc, x[safe], y[safe], keys, n)
+            pre_flat = stacked_ravel(pc)
+            post_flat = stacked_ravel(updated)
+        if tstage is not None:
+            post_flat, efc = tstage(pre_flat, post_flat, gather(ef, safe))
+            ef = efscatter(ef, idx, efc)
         if upload_stage is not None:
             # faults/guard/robust rewrite the upload BEFORE it is
             # deposited: demoted slots carry the sentinel, so their junk
@@ -609,32 +720,50 @@ def make_fedavg_async_round(train, acfg, *, impl=None, sops=None,
         # one broadcast stream hits the downlink only when a flush ships
         # a new global
         metrics["streams"] = flush.astype(jnp.int32)
-        return params, abuf, metrics
+        return params, ef, abuf, metrics
 
-    return jax.jit(body, donate_argnums=(0, 1))
+    if tstage is None:
+        def body(params, abuf, idx, mask, x, y, key, n):
+            params, _, abuf, metrics = core(params, None, abuf, idx, mask,
+                                            x, y, key, n)
+            return params, abuf, metrics
+
+        return jax.jit(body, donate_argnums=(0, 1))
+
+    def body_t(params, ef, abuf, idx, mask, x, y, key, n):
+        return core(params, ef, abuf, idx, mask, x, y, key, n)
+
+    return jax.jit(body_t, donate_argnums=(0, 1, 2))
 
 
 def fedavg_async_wrapper(train, params0, acfg, *, impl=None, sops=None,
-                         upload_stage=None):
+                         upload_stage=None, layout=None, transport=None):
     """Build the FedAvg-family buffered-async cohort body + jit handle.
 
     Returns ``(amasked, jitted_body)`` for ``cohort_round(async_fn=...,
     masked_jit=...)``, or ``(None, None)`` when the knob is off.
     ``train`` as in :func:`make_fedavg_async_round`; the body manages the
-    lazily-created buffer in ``state["abuf"]``, committed to the layout
-    ``sops`` (the strategy's :class:`StateOps`) picks.
+    lazily-created buffer in ``state["abuf"]`` (and, with ``transport``
+    on, the error-feedback slab in ``state["ef"]``), committed to the
+    layout ``sops`` (the strategy's :class:`StateOps`) picks.
     """
     if acfg is None:
         return None, None
     body = make_fedavg_async_round(train, acfg, impl=impl, sops=sops,
-                                   upload_stage=upload_stage)
+                                   upload_stage=upload_stage,
+                                   layout=layout, transport=transport)
     dim = tree_count_params(params0)
 
     def amasked(state, data, key, idx, mask):
         abuf = state_async_buffer(state, acfg, data.num_clients,
                                   idx.shape[0], dim, sops)
-        new, abuf, metrics = body(state["params"], abuf, idx, mask,
-                                  data.x, data.y, key, data.n)
-        return dict(state, params=new, abuf=abuf), metrics
+        if transport is None:
+            new, abuf, metrics = body(state["params"], abuf, idx, mask,
+                                      data.x, data.y, key, data.n)
+            return dict(state, params=new, abuf=abuf), metrics
+        new, ef, abuf, metrics = body(state["params"], state["ef"], abuf,
+                                      idx, mask, data.x, data.y, key,
+                                      data.n)
+        return dict(state, params=new, ef=ef, abuf=abuf), metrics
 
     return amasked, body

@@ -8,10 +8,8 @@ import functools
 
 import jax
 
-from repro.core import aggregation
+from repro.core import aggregation, flat
 from repro.core.baselines import common
-from repro.core.baselines.common import broadcast_params
-from repro.core.pytree import stacked_ravel, stacked_unravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
@@ -37,21 +35,31 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
+    common.reject_transport(
+        cfg.transport, "ditto",
+        "the personal solver consumes the exact global the client "
+        "received; a quantized global upload would need a second EF "
+        "stream for the personal proximal center")
+    layout = flat.LayoutTable.build(params0)
+
     def init(key, data):
         m = data.num_clients
         return {
-            "params": broadcast_params(params0, m),  # global (stacked)
-            "personal": broadcast_params(params0, m),
+            "params": layout.slab(params0, m),  # global (stacked)
+            "personal": layout.slab(params0, m),
         }
 
     @jax.jit
     def _round(params, personal, n, x, y, key):
         k1, k2 = jax.random.split(key)
-        updated, _ = local_global(params, x, y, k1)
-        new_global = aggregation.fedavg(updated, n, impl=kernel_impl)
+        tree = layout.unravel(params)
+        updated, _ = local_global(tree, x, y, k1)
+        new_global = layout.ravel(
+            aggregation.fedavg(updated, n, impl=kernel_impl))
         # personal solver runs against the *received* global model
-        new_personal, _ = local_personal(personal, x, y, k2, params)
-        return new_global, new_personal
+        new_personal, _ = local_personal(layout.unravel(personal), x, y,
+                                         k2, tree)
+        return new_global, layout.ravel(new_personal)
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
     ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
@@ -62,24 +70,24 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         m = x.shape[0]
         safe = aggregation.safe_gather_index(idx, m)
         pc = sops.gather(params, safe)
+        pct = layout.unravel(pc)
         xc, yc = x[safe], y[safe]
-        updated, _ = local_global(pc, xc, yc, None,
+        updated, _ = local_global(pct, xc, yc, None,
                                   keys=common.cohort_keys(k1, m, safe))
+        post = layout.ravel(updated)
         # the fault/robust stage rewrites the UPLINK (the global-model
         # upload) only: personal models are client-side state that never
         # leaves the device, so their scatter keeps the ORIGINAL slots
         gidx, gmask = idx, mask
         if ustage is not None:
-            flat, gidx, gmask = ustage(stacked_ravel(pc),
-                                       stacked_ravel(updated), idx, mask,
-                                       key, m)
-            updated = stacked_unravel(updated, flat)
-        new_global = sops.fedavg_mix(params, updated, gidx, gmask, n,
+            post, gidx, gmask = ustage(pc, post, idx, mask, key, m)
+        new_global = sops.fedavg_mix(params, post, gidx, gmask, n,
                                      impl=kernel_impl)
         # only participants advance their personal solver
-        new_pc, _ = local_personal(sops.gather(personal, safe), xc, yc, None,
-                                   pc, keys=common.cohort_keys(k2, m, safe))
-        return new_global, sops.scatter(personal, idx, new_pc)
+        new_pc, _ = local_personal(
+            layout.unravel(sops.gather(personal, safe)), xc, yc, None,
+            pct, keys=common.cohort_keys(k2, m, safe))
+        return new_global, sops.scatter(personal, idx, layout.ravel(new_pc))
 
     def dense(state, data, key):
         g, p = _round(state["params"], state["personal"], data.n, data.x,
@@ -98,6 +106,7 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                         sops=sops,
                                         shard_keys=("params", "personal"),
                                         upload_stage=ustage),
-                    lambda s: s["personal"], comm_scheme="broadcast",
+                    lambda s: layout.unravel(s["personal"]),
+                    comm_scheme="broadcast",
                     num_streams=1,
                     injects_faults=cfg.faults is not None)

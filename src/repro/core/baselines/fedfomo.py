@@ -18,10 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation
+from repro.core import aggregation, flat
 from repro.core.baselines import common
-from repro.core.baselines.common import broadcast_params
-from repro.core.pytree import stacked_ravel, stacked_unravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
@@ -37,9 +35,14 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
     loss = make_loss(apply_fn)
+    common.reject_transport(
+        cfg.transport, "fedfomo",
+        "clients exchange models peer-to-peer (client_mixing) — there "
+        "is no single PS uplink delta to quantize")
+    layout = flat.LayoutTable.build(params0)
 
     def init(key, data):
-        return {"params": broadcast_params(params0, data.num_clients)}
+        return {"params": layout.slab(params0, data.num_clients)}
 
     def _train_val(params_c, x, y, key, keys=None):
         """Local SGD on the train split; returns the updated models plus
@@ -51,21 +54,22 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         updated, _ = local(params_c, x_tr, y_tr, key, keys=keys)
         return updated, x_val, y_val
 
-    def _fomo_mix(updated, x_val, y_val, col_mask=None):
+    def _fomo_mix(updated, flat, x_val, y_val, col_mask=None):
         """First-order mix over the slots.
 
+        ``updated`` is the cohort-stacked tree (scored by the loss
+        matrix), ``flat`` its (c, d_al) slab rows (mixed directly).
         col_mask: optional (c,) 0/1 weights zeroing the pad columns so a
         real participant never mixes in a pad slot's duplicate model.
-        Returns the mixed cohort-stacked tree.
+        Returns the mixed (c, d_al) slab.
         """
-        c = jax.tree.leaves(updated)[0].shape[0]
+        c = flat.shape[0]
 
         # L[i, j]: client i's val loss under client j's updated model.
         def losses_for_client(xv, yv):
             return jax.vmap(lambda p: loss(p, xv, yv))(updated)
 
         lmat = jax.vmap(losses_for_client)(x_val, y_val)  # (c, c)
-        flat = stacked_ravel(updated)  # (c, d)
         dist = jnp.sqrt(ops.pairwise_delta(flat, impl=kernel_impl) + 1e-12)
         base = jnp.diag(lmat)  # own updated model as baseline
         raw = jnp.maximum(base[:, None] - lmat, 0.0) / dist
@@ -77,16 +81,13 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         # θ_i ← θ_i + Σ_j ŵ_ij (θ_j − θ_i)
         mixed_delta = ops.mix_aggregate(w, flat, impl=kernel_impl)
         self_w = jnp.sum(w, axis=1, keepdims=True)
-        new_flat = flat + mixed_delta - self_w * flat
-        return stacked_unravel(updated, new_flat)
-
-    def _mixed_flat(params_c, x, y, key, col_mask=None, keys=None):
-        updated, x_val, y_val = _train_val(params_c, x, y, key, keys=keys)
-        return _fomo_mix(updated, x_val, y_val, col_mask)
+        return flat + mixed_delta - self_w * flat
 
     @jax.jit
     def _round(params, x, y, key):
-        return _mixed_flat(params, x, y, key)
+        updated, x_val, y_val = _train_val(layout.unravel(params), x, y,
+                                           key)
+        return _fomo_mix(updated, layout.ravel(updated), x_val, y_val)
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
     ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
@@ -103,14 +104,13 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         pc = sops.gather(params, safe)
         updated, x_val, y_val = _train_val(
-            pc, x[safe], y[safe], None,
+            layout.unravel(pc), x[safe], y[safe], None,
             keys=common.cohort_keys(key, x.shape[0], safe))
+        flat = layout.ravel(updated)
         if ustage is not None:
-            flat, idx, mask = ustage(stacked_ravel(pc),
-                                     stacked_ravel(updated), idx, mask,
-                                     key, x.shape[0])
-            updated = stacked_unravel(updated, flat)
-        mixed = _fomo_mix(updated, x_val, y_val,
+            flat, idx, mask = ustage(pc, flat, idx, mask, key, x.shape[0])
+            updated = layout.unravel(flat)  # the scored models = the wire
+        mixed = _fomo_mix(updated, flat, x_val, y_val,
                           mask.astype(jnp.float32))
         return sops.scatter(params, idx, mixed)
 
@@ -127,5 +127,6 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
                                         sops=sops, upload_stage=ustage),
-                    lambda s: s["params"], comm_scheme="client_mixing",
+                    lambda s: layout.unravel(s["params"]),
+                    comm_scheme="client_mixing",
                     injects_faults=cfg.faults is not None)

@@ -2,10 +2,10 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from repro.core import aggregation
+from repro.core import aggregation, flat
 from repro.core.baselines import common
-from repro.core.baselines.common import broadcast_params
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
@@ -25,13 +25,20 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
+    layout = flat.LayoutTable.build(params0)
+
     def init(key, data):
-        return {"params": broadcast_params(params0, data.num_clients)}
+        state = {"params": layout.slab(params0, data.num_clients)}
+        if cfg.transport is not None:
+            state["ef"] = jnp.zeros_like(state["params"])
+        return state
 
     @jax.jit
     def _round(params, n, x, y, key):
-        updated, _ = local(params, x, y, key, params)  # center = round start
-        return aggregation.fedavg(updated, n, impl=kernel_impl)
+        tree = layout.unravel(params)
+        updated, _ = local(tree, x, y, key, tree)  # center = round start
+        return layout.ravel(aggregation.fedavg(updated, n,
+                                               impl=kernel_impl))
 
     def _train(pc, xc, yc, keys, n):
         updated, _ = local(pc, xc, yc, None, pc, keys=keys)  # center = start
@@ -42,27 +49,36 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     _masked = common.make_masked_round(
         _train, lambda params, updated, idx, mask, n:
         sops.fedavg_mix(params, updated, idx, mask, n,
-                        impl=kernel_impl), sops=sops, upload_stage=ustage)
+                        impl=kernel_impl), sops=sops, upload_stage=ustage,
+        layout=layout, transport=cfg.transport)
 
     def dense(state, data, key):
         new = _round(state["params"], data.n, data.x, data.y, key)
         return {"params": new}, {"streams": 1}
 
     def masked(state, data, key, idx, mask):
-        new = _masked(state["params"], idx, mask, data.x, data.y, key,
-                      data.n)
-        return {"params": new}, {"streams": 1}
+        if cfg.transport is None:
+            new = _masked(state["params"], idx, mask, data.x, data.y, key,
+                          data.n)
+            return dict(state, params=new), {"streams": 1}
+        new, ef = _masked(state["params"], state["ef"], idx, mask, data.x,
+                          data.y, key, data.n)
+        return dict(state, params=new, ef=ef), {"streams": 1}
 
     amasked, masked_jit = common.fedavg_async_wrapper(
         _train, params0, cfg.async_buffer, impl=kernel_impl, sops=sops,
-        upload_stage=ustage)
+        upload_stage=ustage, layout=layout, transport=cfg.transport)
 
+    shard_keys = (("params", "ef") if cfg.transport is not None
+                  else ("params",))
     return Strategy(f"fedprox_mu{mu}", init,
                     common.cohort_round(dense, masked,
                                         masked_jit=masked_jit or _masked,
                                         mesh=cfg.mesh, async_fn=amasked,
                                         async_cfg=cfg.async_buffer,
-                                        sops=sops, upload_stage=ustage),
-                    lambda s: s["params"], comm_scheme="broadcast",
-                    num_streams=1,
+                                        sops=sops, shard_keys=shard_keys,
+                                        upload_stage=ustage,
+                                        transport=cfg.transport),
+                    lambda s: layout.unravel(s["params"]),
+                    comm_scheme="broadcast", num_streams=1,
                     injects_faults=cfg.faults is not None)

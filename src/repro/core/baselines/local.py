@@ -2,9 +2,10 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
+from repro.core import flat
 from repro.core.baselines import common
-from repro.core.baselines.common import broadcast_params
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
@@ -17,13 +18,18 @@ def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
+    layout = flat.LayoutTable.build(params0)
+
     def init(key, data):
-        return {"params": broadcast_params(params0, data.num_clients)}
+        state = {"params": layout.slab(params0, data.num_clients)}
+        if cfg.transport is not None:
+            state["ef"] = jnp.zeros_like(state["params"])
+        return state
 
     @jax.jit
     def _round(params, x, y, key):
-        updated, _ = local(params, x, y, key)
-        return updated
+        updated, _ = local(layout.unravel(params), x, y, key)
+        return layout.ravel(updated)
 
     def _train(pc, xc, yc, keys):
         updated, _ = local(pc, xc, yc, None, keys=keys)
@@ -35,21 +41,30 @@ def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
     # dropped by the sentinel-index scatter)
     _masked = common.make_masked_round(
         _train, lambda params, updated, idx, mask: sops.scatter(
-            params, idx, updated), sops=sops, upload_stage=ustage)
+            params, idx, updated), sops=sops, upload_stage=ustage,
+        layout=layout, transport=cfg.transport)
 
     def dense(state, data, key):
         return {"params": _round(state["params"], data.x, data.y, key)}, \
             {"streams": 0}
 
     def masked(state, data, key, idx, mask):
-        new = _masked(state["params"], idx, mask, data.x, data.y, key)
-        return {"params": new}, {"streams": 0}
+        if cfg.transport is None:
+            new = _masked(state["params"], idx, mask, data.x, data.y, key)
+            return dict(state, params=new), {"streams": 0}
+        new, ef = _masked(state["params"], state["ef"], idx, mask, data.x,
+                          data.y, key)
+        return dict(state, params=new, ef=ef), {"streams": 0}
 
+    shard_keys = (("params", "ef") if cfg.transport is not None
+                  else ("params",))
     return Strategy("local", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
-                                        sops=sops, upload_stage=ustage),
-                    lambda s: s["params"], comm_scheme="broadcast",
-                    num_streams=0,
+                                        sops=sops, shard_keys=shard_keys,
+                                        upload_stage=ustage,
+                                        transport=cfg.transport),
+                    lambda s: layout.unravel(s["params"]),
+                    comm_scheme="broadcast", num_streams=0,
                     injects_faults=cfg.faults is not None)

@@ -4,9 +4,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation
+from repro.core import aggregation, flat
 from repro.core.baselines import common
-from repro.core.baselines.common import broadcast_params, group_average
+from repro.core.baselines.common import group_average
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
@@ -20,19 +20,25 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
+    layout = flat.LayoutTable.build(params0)
+
     def init(key, data):
         num_groups = int(jnp.max(data.group)) + 1
         # group one-hots let the cohort round count the represented groups
         # (downlink streams) on device — no per-round np.unique host sync
-        return {"params": broadcast_params(params0, data.num_clients),
-                "group_onehot": jax.nn.one_hot(data.group, num_groups,
-                                               dtype=jnp.float32),
-                "num_groups": num_groups}
+        state = {"params": layout.slab(params0, data.num_clients),
+                 "group_onehot": jax.nn.one_hot(data.group, num_groups,
+                                                dtype=jnp.float32),
+                 "num_groups": num_groups}
+        if cfg.transport is not None:
+            state["ef"] = jnp.zeros_like(state["params"])
+        return state
 
     @jax.jit
     def _round(params, group, n, x, y, key):
-        updated, _ = local(params, x, y, key)
-        return group_average(updated, group, n, impl=kernel_impl)
+        updated, _ = local(layout.unravel(params), x, y, key)
+        return layout.ravel(group_average(updated, group, n,
+                                          impl=kernel_impl))
 
     def _train(pc, xc, yc, keys, group, n, onehot):
         updated, _ = local(pc, xc, yc, None, keys=keys)
@@ -43,17 +49,19 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
     def _mix(params, updated, idx, mask, group, n, onehot):
         # per-group FedAvg over the cohort members of each ground-truth
-        # group; absent clients keep their last model.
+        # group; absent clients keep their last model. ``updated`` is the
+        # (c, d_al) upload slab — straight into the fused flat mix.
         safe = aggregation.safe_gather_index(idx, onehot.shape[0])
         rows = aggregation.masked_group_rows(jnp.take(group, safe),
                                              jnp.take(n, safe), mask)
-        new = sops.mix_scatter(params, updated, rows, idx, mask,
-                               impl=kernel_impl)
+        new = sops.mix_scatter_flat(params, updated, rows, idx, mask,
+                                    impl=kernel_impl)
         oc = jnp.take(onehot, safe, axis=0) * mask[:, None]
         return new, jnp.sum(jnp.max(oc, axis=0) > 0)
 
     _masked = common.make_masked_round(_train, _mix, sops=sops,
-                                       upload_stage=ustage)
+                                       upload_stage=ustage, layout=layout,
+                                       transport=cfg.transport)
 
     def dense(state, data, key):
         new = _round(state["params"], data.group, data.n, data.x, data.y,
@@ -61,15 +69,26 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return dict(state, params=new), {"streams": state["num_groups"]}
 
     def masked(state, data, key, idx, mask):
-        new, streams = _masked(state["params"], idx, mask, data.x, data.y,
-                               key, data.group, data.n,
-                               state["group_onehot"])
-        return dict(state, params=new), {"streams": streams}
+        if cfg.transport is None:
+            new, streams = _masked(state["params"], idx, mask, data.x,
+                                   data.y, key, data.group, data.n,
+                                   state["group_onehot"])
+            return dict(state, params=new), {"streams": streams}
+        (new, streams), ef = _masked(state["params"], state["ef"], idx,
+                                     mask, data.x, data.y, key,
+                                     data.group, data.n,
+                                     state["group_onehot"])
+        return dict(state, params=new, ef=ef), {"streams": streams}
 
+    shard_keys = (("params", "ef") if cfg.transport is not None
+                  else ("params",))
     return Strategy("oracle", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
-                                        sops=sops, upload_stage=ustage),
-                    lambda s: s["params"], comm_scheme="groupcast",
+                                        sops=sops, shard_keys=shard_keys,
+                                        upload_stage=ustage,
+                                        transport=cfg.transport),
+                    lambda s: layout.unravel(s["params"]),
+                    comm_scheme="groupcast",
                     injects_faults=cfg.faults is not None)

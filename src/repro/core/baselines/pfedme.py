@@ -12,10 +12,8 @@ import functools
 
 import jax
 
-from repro.core import aggregation
+from repro.core import aggregation, flat
 from repro.core.baselines import common
-from repro.core.baselines.common import broadcast_params
-from repro.core.pytree import stacked_ravel, stacked_unravel
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.data.loader import epoch_batches
 from repro.federated import faults as faults_lib
@@ -62,21 +60,28 @@ def make_pfedme(apply_fn, params0,
     run_clients = client_vmap(client_update, chunk_size=cfg.chunk_size,
                               mesh=cfg.mesh)
 
+    common.reject_transport(
+        cfg.transport, "pfedme",
+        "the β-mix pulls each w_i toward the cohort average of the "
+        "EXACT uploads; quantizing w_i would need EF on both the server "
+        "mix and the client-side (1-β) retention term")
+    layout = flat.LayoutTable.build(params0)
+
     def init(key, data):
         m = data.num_clients
         return {
-            "params": broadcast_params(params0, m),  # local copies w_i
-            "personal": broadcast_params(params0, m),  # φ_i
+            "params": layout.slab(params0, m),  # local copies w_i
+            "personal": layout.slab(params0, m),  # φ_i
         }
 
     @jax.jit
     def _round(w, n, x, y, key):
         m = x.shape[0]
         keys = jax.random.split(key, m)
-        new_w, phi = run_clients(w, x, y, keys)
+        new_w, phi = run_clients(layout.unravel(w), x, y, keys)
         avg = aggregation.fedavg(new_w, n, impl=kernel_impl)
         mixed = jax.tree.map(lambda a, b: (1 - beta) * a + beta * b, new_w, avg)
-        return mixed, phi
+        return layout.ravel(mixed), layout.ravel(phi)
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
     ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
@@ -91,20 +96,20 @@ def make_pfedme(apply_fn, params0,
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         keys = common.cohort_keys(key, x.shape[0], safe)
         wc = sops.gather(w, safe)
-        new_wc, phic = run_clients(wc, x[safe], y[safe], keys)
+        new_wc_t, phic_t = run_clients(layout.unravel(wc), x[safe],
+                                       y[safe], keys)
+        new_wc = layout.ravel(new_wc_t)
+        phic = layout.ravel(phic_t)
         # the fault/robust stage rewrites the w_i UPLOAD; φ_i is
         # client-side and keeps the original slots (like Ditto's
         # personal models). Demoted w slots drop out of the scatter.
         widx, wmask = idx, mask
         if ustage is not None:
-            flat, widx, wmask = ustage(stacked_ravel(wc),
-                                       stacked_ravel(new_wc), idx, mask,
-                                       key, x.shape[0])
-            new_wc = stacked_unravel(new_wc, flat)
+            new_wc, widx, wmask = ustage(wc, new_wc, idx, mask, key,
+                                         x.shape[0])
         avg = common.fedavg_masked_mix(wc, new_wc, widx, wmask, n,
                                        impl=kernel_impl)
-        mixed = jax.tree.map(lambda a, b: (1 - beta) * a + beta * b, new_wc,
-                             avg)
+        mixed = (1 - beta) * new_wc + beta * avg
         return (sops.scatter(w, widx, mixed),
                 sops.scatter(personal, idx, phic))
 
@@ -124,6 +129,7 @@ def make_pfedme(apply_fn, params0,
                                         sops=sops,
                                         shard_keys=("params", "personal"),
                                         upload_stage=ustage),
-                    lambda s: s["personal"], comm_scheme="broadcast",
+                    lambda s: layout.unravel(s["personal"]),
+                    comm_scheme="broadcast",
                     num_streams=1,
                     injects_faults=cfg.faults is not None)

@@ -12,10 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation
+from repro.core import aggregation, flat
 from repro.core.baselines import common
-from repro.core.baselines.common import broadcast_params
-from repro.core.pytree import stacked_ravel, stacked_unravel, tree_zeros_like
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
@@ -36,30 +34,35 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
         chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
+    common.reject_transport(
+        cfg.transport, "scaffold",
+        "the uplink carries the control variate alongside the model "
+        "delta; quantizing only the model half would bias the c_i "
+        "update the server derives from it")
+    layout = flat.LayoutTable.build(params0)
+
     def init(key, data):
         m = data.num_clients
-        stacked = broadcast_params(params0, m)
+        stacked = layout.slab(params0, m)
         return {
             "params": stacked,
-            "c_i": tree_zeros_like(stacked),
-            "c": tree_zeros_like(stacked),  # stacked copy of the global c
+            "c_i": jnp.zeros_like(stacked),
+            "c": jnp.zeros_like(stacked),  # stacked copy of the global c
         }
 
     @jax.jit
     def _round(params, c_i, c, n, x, y, key):
         steps = (x.shape[1] // cfg.batch_size) * cfg.epochs
-        updated, _ = local(params, x, y, key, (c_i, c))
+        tree, cit, ct = (layout.unravel(params), layout.unravel(c_i),
+                         layout.unravel(c))
+        updated, _ = local(tree, x, y, key, (cit, ct))
+        post = layout.ravel(updated)
         inv = 1.0 / (steps * cfg.lr)
-        new_c_i = jax.tree.map(
-            lambda ci, cg, start, end: ci - cg + inv * (start - end),
-            c_i, c, params, updated,
-        )
-        new_params = aggregation.fedavg(updated, n, impl=kernel_impl)
-        new_c = jax.tree.map(
-            lambda ci: jnp.broadcast_to(jnp.mean(ci, axis=0),
-                                        ci.shape) + 0.0,
-            new_c_i,
-        )
+        new_c_i = c_i - c + inv * (params - post)
+        new_params = layout.ravel(
+            aggregation.fedavg(updated, n, impl=kernel_impl))
+        new_c = jnp.broadcast_to(jnp.mean(new_c_i, axis=0),
+                                 new_c_i.shape) + 0.0
         return new_params, new_c_i, new_c
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
@@ -76,31 +79,26 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
         pc = sops.gather(params, safe)
         cic, cc = sops.gather(c_i, safe), sops.gather(c, safe)
         keys = common.cohort_keys(key, x.shape[0], safe)
-        updated, _ = local(pc, x[safe], y[safe], None, (cic, cc), keys=keys)
+        updated, _ = local(layout.unravel(pc), x[safe], y[safe], None,
+                           (layout.unravel(cic), layout.unravel(cc)),
+                           keys=keys)
+        post = layout.ravel(updated)
         if ustage is not None:
             # the fault/robust stage rewrites the MODEL upload; the
             # control update below then derives from the sanitized
             # upload, and demoted slots (sentinel idx) drop out of BOTH
             # scatters — a faulty client's stale c_i survives untouched
-            flat, idx, mask = ustage(stacked_ravel(pc),
-                                     stacked_ravel(updated), idx, mask,
-                                     key, x.shape[0])
-            updated = stacked_unravel(updated, flat)
+            post, idx, mask = ustage(pc, post, idx, mask, key, x.shape[0])
         inv = 1.0 / (steps * cfg.lr)
-        new_cic = jax.tree.map(
-            lambda ci, cg, start, end: ci - cg + inv * (start - end),
-            cic, cc, pc, updated,
-        )
+        new_cic = cic - cc + inv * (pc - post)
         c_i_full = sops.scatter(c_i, idx, new_cic)
-        new_params = sops.fedavg_mix(params, updated, idx, mask, n,
+        new_params = sops.fedavg_mix(params, post, idx, mask, n,
                                      impl=kernel_impl)
         # cross-row mean all-reduces under a sharded layout; re-pin the
         # broadcast result to the committed row sharding
-        new_c = sops.constrain(jax.tree.map(
-            lambda ci: jnp.broadcast_to(jnp.mean(ci, axis=0),
-                                        ci.shape) + 0.0,
-            c_i_full,
-        ))
+        new_c = sops.constrain(
+            jnp.broadcast_to(jnp.mean(c_i_full, axis=0),
+                             c_i_full.shape) + 0.0)
         return new_params, c_i_full, new_c
 
     def dense(state, data, key):
@@ -120,6 +118,7 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
                                         sops=sops,
                                         shard_keys=("params", "c_i", "c"),
                                         upload_stage=ustage),
-                    lambda s: s["params"], comm_scheme="broadcast",
+                    lambda s: layout.unravel(s["params"]),
+                    comm_scheme="broadcast",
                     num_streams=1,
                     injects_faults=cfg.faults is not None)

@@ -36,6 +36,14 @@ batch. :func:`sample_arrival_times` draws per-client completion times
 from the same shifted-exponential compute + ρ-asymmetric link model for
 trace replays that want realized (not expected) arrivals.
 
+Quantized uplink transport (``FedConfig.transport``): the wire carries
+1 B/param plus one float32 scale per chunk instead of 4 B/param, so
+:func:`transport_payload_bytes` reprices the per-client upload and
+:func:`transport_ul_scale` shrinks the ``t_ul`` term of every round-time
+function (``(1 + 4/chunk)/4`` ≈ 0.258 at the default chunk of 128 — a
+~3.88× UL reduction). The downlink is untouched: the server broadcasts
+full-precision models either way.
+
 TPU-adaptation note (DESIGN.md §2): on a pod these DL streams become ICI
 collective volume; this module keeps the paper's analytic wireless model so
 the Fig. 5 benchmark can be reproduced, while the measured ICI counterpart
@@ -51,6 +59,46 @@ import numpy as np
 
 def harmonic(m: int) -> float:
     return sum(1.0 / i for i in range(1, m + 1))
+
+
+def transport_payload_bytes(model_bytes: int, transport=None) -> int:
+    """Uplink bytes ONE client ships for one model under ``transport``.
+
+    ``transport=None`` is the raw float32 wire: ``model_bytes`` as-is.
+    With a quantized transport (``FedConfig.transport``, duck-typed on
+    its ``chunk`` attribute so this module stays numpy-only) every
+    parameter travels as one byte (int8 and fp8 are both 1 B/param) plus
+    one float32 scale per ``chunk`` parameters:
+
+        d + 4 * ceil(d / chunk)   where d = model_bytes / 4.
+
+    The scale overhead is what keeps int8 at ~3.88x (not 4x) reduction
+    for the default chunk of 128 — the honest number the Fig. 5 byte
+    frontier and the quantized-uplink replay report.
+    """
+    if transport is None:
+        return int(model_bytes)
+    chunk = int(transport.chunk)
+    if chunk <= 0:
+        raise ValueError(f"transport.chunk must be positive, got {chunk}")
+    d = int(model_bytes) / 4.0  # float32 params on the dense wire
+    return int(math.ceil(d + 4.0 * math.ceil(d / chunk)))
+
+
+def transport_ul_scale(transport=None) -> float:
+    """Multiplier on UL transmission time/bytes under ``transport``.
+
+    ``(1 + 4/chunk) / 4`` — the asymptotic ratio of
+    :func:`transport_payload_bytes` to the raw float32 payload (exact
+    when ``chunk`` divides the parameter count, which the slab layout's
+    128-lane alignment guarantees for the default chunk). ``None`` = 1.
+    """
+    if transport is None:
+        return 1.0
+    chunk = int(transport.chunk)
+    if chunk <= 0:
+        raise ValueError(f"transport.chunk must be positive, got {chunk}")
+    return (1.0 + 4.0 / chunk) / 4.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,15 +137,18 @@ def expected_compute_time(p: SystemParams,
 
 
 def round_time(p: SystemParams, scheme: str, num_streams: int | None = None,
-               cohort_size: int | None = None) -> float:
+               cohort_size: int | None = None, *,
+               transport=None) -> float:
     """Wall-clock time of one communication round under §V-D.
 
     ``cohort_size`` prices a partial-participation round: only the cohort
     computes (straggler max over c), and only the cohort is served on the
-    downlink.
+    downlink. ``transport`` (a quantized-uplink config, None = raw f32)
+    shrinks the UL transmission term by :func:`transport_ul_scale` — the
+    downlink still ships full-precision models, as the server does.
     """
     c = _active(p.m, cohort_size)
-    t_ul = p.rho * p.t_dl
+    t_ul = p.rho * p.t_dl * transport_ul_scale(transport)
     t_comp = expected_compute_time(p, cohort_size)
     if scheme == "broadcast":
         dl = p.t_dl
@@ -115,7 +166,8 @@ def round_time(p: SystemParams, scheme: str, num_streams: int | None = None,
 def deadline_round_time(p: SystemParams, scheme: str,
                         num_streams: int | None = None,
                         cohort_size: int | None = None, *,
-                        deadline: float = math.inf, compute=None):
+                        deadline: float = math.inf, compute=None,
+                        transport=None):
     """:func:`round_time` with a straggler deadline; returns the price
     AND who got cut.
 
@@ -153,7 +205,7 @@ def deadline_round_time(p: SystemParams, scheme: str,
         c = compute.shape[0]
     dropped = compute > deadline
     survivors = int((~dropped).sum())
-    t_ul = p.rho * p.t_dl
+    t_ul = p.rho * p.t_dl * transport_ul_scale(transport)
     if survivors == 0:
         # everyone timed out: the server waits out the deadline (or the
         # fastest client under an infinite one) and serves nobody
@@ -211,7 +263,8 @@ def expected_kth_compute_time(p: SystemParams, k: int,
 def async_round_time(p: SystemParams, scheme: str,
                      num_streams: int | None = None,
                      cohort_size: int | None = None, *, flush_k: int,
-                     applied: int | None = None) -> float:
+                     applied: int | None = None,
+                     transport=None) -> float:
     """Wall-clock §V-D price of one buffered-async round.
 
     Same ``dl + compute + ul`` structure as :func:`round_time`, with two
@@ -235,7 +288,7 @@ def async_round_time(p: SystemParams, scheme: str,
     aggregation.
     """
     c = _active(p.m, cohort_size)
-    t_ul = p.rho * p.t_dl
+    t_ul = p.rho * p.t_dl * transport_ul_scale(transport)
     if applied is not None and applied <= 0:
         return expected_compute_time(p, cohort_size) + t_ul
     b = min(min(int(flush_k), c) if applied is None else int(applied), p.m)
@@ -253,9 +306,9 @@ def async_round_time(p: SystemParams, scheme: str,
 
 def rounds_to_time(p: SystemParams, scheme: str, num_rounds: int,
                    num_streams: int | None = None,
-                   cohort_size: int | None = None):
+                   cohort_size: int | None = None, *, transport=None):
     """Cumulative time axis (length num_rounds) for accuracy-vs-time plots."""
-    rt = round_time(p, scheme, num_streams, cohort_size)
+    rt = round_time(p, scheme, num_streams, cohort_size, transport=transport)
     return [rt * (t + 1) for t in range(num_rounds)]
 
 
@@ -274,8 +327,9 @@ def downlink_bytes_per_round(model_bytes: int, scheme: str, m: int,
 
 
 def uplink_bytes_per_round(model_bytes: int, scheme: str, m: int,
-                           cohort_size: int | None = None) -> int:
-    """Raw UL payload per round: every active client uploads ONE model.
+                           cohort_size: int | None = None, *,
+                           transport=None) -> int:
+    """UL payload per round: every active client uploads ONE model.
 
     This holds for every scheme — broadcast/groupcast/unicast servers and
     FedFomo-style client mixing all consume exactly one locally-updated
@@ -284,10 +338,15 @@ def uplink_bytes_per_round(model_bytes: int, scheme: str, m: int,
     The streaming W refresh (``FedConfig.w_refresh``) re-estimates Δ/σ²
     from these same c uploads, so refreshed and stale-W runs have
     IDENTICAL per-round uplink bytes — pinned by a regression test.
+
+    ``transport`` prices the quantized wire per client via
+    :func:`transport_payload_bytes` (dtype-aware: 1 B/param + one f32
+    scale per chunk); ``None`` is the raw float32 payload, unchanged.
     """
     if scheme not in ("broadcast", "groupcast", "unicast", "client_mixing"):
         raise ValueError(f"unknown scheme {scheme!r}")
-    return _active(m, cohort_size) * model_bytes
+    return _active(m, cohort_size) * transport_payload_bytes(model_bytes,
+                                                             transport)
 
 
 def ici_collective_bytes(model_bytes: int, scheme: str, m: int,

@@ -1,0 +1,104 @@
+"""Static layout table for the flat-slab client state.
+
+Every strategy stores its (m, ·) stacked state as ONE float32
+``(m, dim_aligned)`` matrix — the *slab* — instead of a stacked pytree.
+The :class:`LayoutTable` is built once at strategy construction from the
+``params0`` template and records, per leaf, the trailing shape, dtype,
+flat size and column offset into the slab; ``dim_aligned`` rounds the
+concatenated width up to the 128-lane multiple (:func:`ops.aligned_dim`)
+so the slab always takes the aliased zero-copy
+``masked_mix_scatter`` / HBM gather-mix-scatter kernel path and the
+row-sharded ``shard_state`` layout with no per-leaf scatter loop.
+
+Contract (the "layout-table contract" in ROADMAP.md):
+
+  * the table is static — offsets/shapes/dtypes are host Python computed
+    once; ``ravel``/``unravel`` trace to pure reshape/concat/slice ops
+    (exact for float32 leaves, no arithmetic), so slab round-trips are
+    bit-exact;
+  * ``ravel`` accepts ANY leading shape — ``()`` for a bare params tree,
+    ``(c,)`` cohort stacks, ``(m, c)`` per-stream stacks — and zero-fills
+    the ``dim_aligned - dim`` tail columns. All mixing rules are
+    column-independent linear ops, so the zero tail contributes nothing
+    to mixes, norms or pairwise distances;
+  * ``unravel`` ignores the tail columns and casts each leaf back to its
+    template dtype — it is the ONLY place tree structure reappears, at
+    ``apply_fn`` boundaries (local SGD, evaluation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutTable:
+    """Per-leaf slab layout of a params pytree (see module docstring)."""
+
+    treedef: Any
+    shapes: tuple  # trailing (per-client) shape of each leaf
+    dtypes: tuple
+    sizes: tuple  # flat column count of each leaf
+    offsets: tuple  # column offset of each leaf in the slab
+    dim: int  # true concatenated width
+    dim_aligned: int  # slab width: dim rounded up to the 128 multiple
+
+    @classmethod
+    def build(cls, template) -> "LayoutTable":
+        leaves, treedef = jax.tree.flatten(template)
+        if not leaves:
+            raise ValueError("LayoutTable.build: empty params tree")
+        shapes = tuple(tuple(leaf.shape) for leaf in leaves)
+        dtypes = tuple(jnp.asarray(leaf).dtype for leaf in leaves)
+        sizes = tuple(int(math.prod(s)) for s in shapes)
+        offsets, off = [], 0
+        for s in sizes:
+            offsets.append(off)
+            off += s
+        return cls(
+            treedef=treedef,
+            shapes=shapes,
+            dtypes=dtypes,
+            sizes=sizes,
+            offsets=tuple(offsets),
+            dim=off,
+            dim_aligned=ops.aligned_dim(off),
+        )
+
+    def ravel(self, tree):
+        """Tree with any leading shape -> ``(*lead, dim_aligned)`` f32
+        matrix, tail columns zero."""
+        leaves = self.treedef.flatten_up_to(tree)
+        lead = leaves[0].ndim - len(self.shapes[0])
+        head = tuple(leaves[0].shape[:lead])
+        parts = [
+            jnp.asarray(leaf).astype(jnp.float32).reshape(head + (s,))
+            for leaf, s in zip(leaves, self.sizes)
+        ]
+        pad = self.dim_aligned - self.dim
+        if pad:
+            parts.append(jnp.zeros(head + (pad,), jnp.float32))
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+
+    def unravel(self, mat):
+        """``(*lead, >= dim)`` matrix -> tree with that leading shape."""
+        if mat.shape[-1] < self.dim:
+            msg = f"LayoutTable.unravel: matrix width {mat.shape[-1]} < layout dim {self.dim}"
+            raise ValueError(msg + " — slab built from a different template")
+        head = tuple(mat.shape[:-1])
+        leaves = [
+            mat[..., off : off + size].reshape(head + shape).astype(dt)
+            for off, size, shape, dt in zip(self.offsets, self.sizes, self.shapes, self.dtypes)
+        ]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def slab(self, template, m: int):
+        """Broadcast a params tree to the (m, dim_aligned) initial slab."""
+        vec = self.ravel(template)
+        return jnp.broadcast_to(vec, (m,) + vec.shape) + 0.0

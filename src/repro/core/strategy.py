@@ -137,6 +137,19 @@ class FedConfig:
     Both require cohort rounds (the dense ``cohort=None`` path raises);
     ``None``/``None`` (the defaults) keep every existing trajectory
     bit-identical.
+
+    ``transport`` (a :class:`repro.federated.transport.TransportConfig`,
+    or ``None`` = off) opts cohort rounds into quantized uplink
+    transport: clients upload int8/fp8 per-chunk-scaled model deltas,
+    dequantized before the masked mix inside the same jitted round (one
+    compiled shape), with per-client error-feedback accumulators in the
+    strategy state so compression noise stays unbiased — including under
+    ``w_refresh``, whose Δ/σ² estimation observes the dequantized
+    uploads. Supported by the strategies whose uplink is a single model
+    delta to the PS (ucfl full/clustered and the FedAvg family, barrier
+    and buffered-async); the rest raise at construction. Requires cohort
+    rounds (the dense path has no upload stage). ``None`` (the default)
+    keeps every existing trajectory bit-identical.
     """
     lr: float = 0.1
     momentum: float = 0.9
@@ -149,3 +162,4 @@ class FedConfig:
     async_buffer: Any = None
     faults: Any = None
     robust: Any = None
+    transport: Any = None

@@ -54,7 +54,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, clustering, similarity
+from repro.core import aggregation, clustering, flat, similarity
 from repro.core.baselines import common
 from repro.core.pytree import gather_rows, stacked_ravel, tree_count_params
 from repro.core.strategy import FedConfig, Strategy, register
@@ -62,6 +62,7 @@ from repro.data.loader import fixed_partition
 from repro.federated import async_buffer
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import transport as transport_lib
 
 
 def compute_collaboration(apply_fn, params0, data, *, var_batch_size=100,
@@ -131,6 +132,10 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     # fault injection / finite guard / robust rewrite of the upload slab
     # (None when both knobs are off — the bodies keep their exact trace)
     ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
+    # quantized uplink (None when off — exact stage-free trace); the EF
+    # accumulator slab rides the params layout, shard_state included
+    tstage = transport_lib.make_stage(cfg.transport)
+    layout = flat.LayoutTable.build(params0)
 
     def init(key, data):
         m = data.num_clients
@@ -152,24 +157,24 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             # represented clusters (downlink streams) on device instead of
             # a per-round np.unique host round-trip
             onehot = jax.nn.one_hot(labels, int(k), dtype=jnp.float32)
-        stacked = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (m,) + x.shape) + 0.0, params0
-        )
+        stacked = layout.slab(params0, m)
         state = {"params": stacked, "W": w, "labels": labels,
                  "cluster_onehot": onehot, "streams": k, "collab": collab}
         if refresh_hook is not None:
             state["refresh"] = similarity.init_refresh_state(collab, m)
+        if tstage is not None:
+            state["ef"] = jnp.zeros_like(stacked)
         return state
 
     @functools.partial(jax.jit, static_argnames=("streams",))
     def _round(params, w, labels, x, y, key, streams):
-        updated, _ = local(params, x, y, key)
+        updated, _ = local(layout.unravel(params), x, y, key)
         if streams is None:
             mixed = aggregation.user_centric(updated, w, impl=kernel_impl)
         else:
             mixed = aggregation.clustered(updated, w, labels, streams,
                                           impl=kernel_impl)
-        return mixed
+        return layout.ravel(mixed)
 
     def _mix_rows(w, labels, onehot, idx, mask, safe, streams,
                   weights=None):
@@ -188,60 +193,70 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return rows, n_streams
 
     @functools.partial(jax.jit, static_argnames=("streams",),
-                       donate_argnums=(0,))
-    def _masked(params, w, labels, onehot, idx, mask, x, y, key, streams):
-        # masked gather -> cohort local SGD -> (fault/robust upload
-        # rewrite) -> fused masked mix + scatter
+                       donate_argnums=(0, 1))
+    def _masked(params, ef, w, labels, onehot, idx, mask, x, y, key,
+                streams):
+        # masked gather -> cohort local SGD -> (quantized transport) ->
+        # (fault/robust upload rewrite) -> fused masked mix + scatter.
+        # ``ef`` is None when transport is off (an empty pytree — its
+        # donation slot is inert and the trace is exactly stage-free).
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         keys = common.cohort_keys(key, x.shape[0], safe)
         pc = sops.gather(params, safe)
-        updated, _ = local(pc, x[safe], y[safe], None, keys=keys)
-        if ustage is None:
-            rows, n_streams = _mix_rows(w, labels, onehot, idx, mask,
-                                        safe, streams)
-            new = sops.mix_scatter(params, updated, rows, idx, mask,
-                                   impl=kernel_impl)
-            return new, n_streams
-        flat, idx, mask = ustage(stacked_ravel(pc), stacked_ravel(updated),
-                                 idx, mask, key, x.shape[0])
-        safe = aggregation.safe_gather_index(idx, x.shape[0])
+        updated, _ = local(layout.unravel(pc), x[safe], y[safe], None,
+                           keys=keys)
+        post = layout.ravel(updated)
+        if tstage is not None:
+            # EF rows ride the cohort: gathered at the clamped indices,
+            # scattered back at the ORIGINAL slots (a later fault/robust
+            # demotion loses the upload, not the client's residual)
+            post, efc = tstage(pc, post, sops.gather(ef, safe))
+            ef = sops.scatter(ef, idx, efc)
+        if ustage is not None:
+            post, idx, mask = ustage(pc, post, idx, mask, key, x.shape[0])
+            safe = aggregation.safe_gather_index(idx, x.shape[0])
         rows, n_streams = _mix_rows(w, labels, onehot, idx, mask, safe,
                                     streams)
-        new = sops.mix_scatter_flat(params, flat, rows, idx, mask,
+        new = sops.mix_scatter_flat(params, post, rows, idx, mask,
                                     impl=kernel_impl)
-        return new, n_streams
+        return new, ef, n_streams
 
     @functools.partial(jax.jit, static_argnames=("streams",),
-                       donate_argnums=(0, 1))
-    def _masked_refresh(params, refresh, w, labels, onehot, idx, mask, n,
-                        x, y, key, streams):
-        # masked gather -> cohort local SGD -> (fault/robust upload
-        # rewrite) -> streaming W refresh from the uploads -> fused
-        # masked mix + scatter with the FRESH rows. The stage runs FIRST
-        # so the refresh only ever folds sanitized uploads with the
-        # FINAL slot arrays — demoted/Byzantine-trimmed rows never enter
-        # the Δ/σ² statistics (W quarantines what the guard caught).
+                       donate_argnums=(0, 1, 2))
+    def _masked_refresh(params, ef, refresh, w, labels, onehot, idx, mask,
+                        n, x, y, key, streams):
+        # masked gather -> cohort local SGD -> (quantized transport) ->
+        # (fault/robust upload rewrite) -> streaming W refresh from the
+        # uploads -> fused masked mix + scatter with the FRESH rows. The
+        # stages run FIRST so the refresh only ever folds the upload the
+        # server actually decoded, with the FINAL slot arrays: the
+        # dequantized post (EF keeps its drift from the raw delta
+        # bounded, so quantization noise stays out of the Δ/σ²
+        # statistics) and none of the demoted/Byzantine-trimmed rows (W
+        # quarantines what the guard caught).
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         keys = common.cohort_keys(key, x.shape[0], safe)
         pc = sops.gather(params, safe)
-        updated, _ = local(pc, x[safe], y[safe], None, keys=keys)
-        pre_flat = stacked_ravel(pc)
-        post_flat = stacked_ravel(updated)
+        updated, _ = local(layout.unravel(pc), x[safe], y[safe], None,
+                           keys=keys)
+        post = layout.ravel(updated)
+        if tstage is not None:
+            post, efc = tstage(pc, post, sops.gather(ef, safe))
+            ef = sops.scatter(ef, idx, efc)
         if ustage is not None:
-            post_flat, idx, mask = ustage(pre_flat, post_flat, idx, mask,
-                                          key, x.shape[0])
+            post, idx, mask = ustage(pc, post, idx, mask, key, x.shape[0])
             safe = aggregation.safe_gather_index(idx, x.shape[0])
-        refresh, w = refresh_hook(pre_flat, post_flat, refresh, idx,
+        # the refresh buffers are true-dim wide (they come from the
+        # special round's raveled gradients); the slab's aligned tail is
+        # zero on both sides, so slicing it off is value-free
+        refresh, w = refresh_hook(pc[..., :layout.dim],
+                                  post[..., :layout.dim], refresh, idx,
                                   mask, n)
         rows, n_streams = _mix_rows(w, labels, onehot, idx, mask, safe,
                                     streams)
-        if ustage is None:
-            new = sops.mix_scatter(params, updated, rows, idx, mask,
-                                   impl=kernel_impl)
-        else:
-            new = sops.mix_scatter_flat(params, post_flat, rows, idx,
-                                        mask, impl=kernel_impl)
-        return new, refresh, w, n_streams
+        new = sops.mix_scatter_flat(params, post, rows, idx, mask,
+                                    impl=kernel_impl)
+        return new, ef, refresh, w, n_streams
 
     amasked = _amasked_jit = None
     if acfg is not None:
@@ -250,9 +265,9 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         ascatter = sops.buffer_scatter()
 
         @functools.partial(jax.jit, static_argnames=("streams",),
-                           donate_argnums=(0, 1))
-        def _amasked(params, abuf, w, labels, onehot, idx, mask, x, y, key,
-                     streams):
+                           donate_argnums=(0, 1, 2))
+        def _amasked(params, ef, abuf, w, labels, onehot, idx, mask, x, y,
+                     key, streams):
             # masked gather -> cohort local SGD -> buffer deposit ->
             # staleness-weighted flush (fused mix + scatter) when >= K
             # uploads are pending. ONE compiled shape covers deposit-only
@@ -262,15 +277,22 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             safe = aggregation.safe_gather_index(idx, m)
             keys = common.cohort_keys(key, m, safe)
             pc = sops.gather(params, safe)
-            updated, _ = local(pc, x[safe], y[safe], None, keys=keys)
-            post_flat = stacked_ravel(updated)
+            updated, _ = local(layout.unravel(pc), x[safe], y[safe], None,
+                               keys=keys)
+            post_flat = layout.ravel(updated)
+            if tstage is not None:
+                # the user-centric buffer holds MODELS, so the deposit is
+                # the reconstructed post' = pre + dequant — exactly what
+                # the wire carried plus the base the server already has
+                post_flat, efc = tstage(pc, post_flat,
+                                        sops.gather(ef, safe))
+                ef = sops.scatter(ef, idx, efc)
             if ustage is not None:
                 # rewrite the upload BEFORE it is deposited: demoted
                 # slots carry the sentinel/False mask, so their junk
                 # rows never enter the pending buffer
-                post_flat, idx, mask = ustage(stacked_ravel(pc),
-                                              post_flat, idx, mask, key,
-                                              m)
+                post_flat, idx, mask = ustage(pc, post_flat, idx, mask,
+                                              key, m)
                 safe = aggregation.safe_gather_index(idx, m)
             # a client trains from its OWN row, untouched since the flush
             # that last wrote it — that version is the upload's base
@@ -303,18 +325,21 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             metrics = {**async_buffer.flush_metrics(
                 flush, applied, tau, weights, abuf["count"]),
                 "streams": n_streams}
-            return params, abuf, metrics
+            return params, ef, abuf, metrics
 
         _amasked_jit = _amasked
 
         def amasked(state, data, key, idx, mask):
             abuf = common.state_async_buffer(state, acfg, data.num_clients,
                                              idx.shape[0], dim, sops)
-            new, abuf, am = _amasked(state["params"], abuf, state["W"],
-                                     state["labels"],
-                                     state["cluster_onehot"], idx, mask,
-                                     data.x, data.y, key, state["streams"])
-            return dict(state, params=new, abuf=abuf), am
+            new, ef, abuf, am = _amasked(
+                state["params"], state.get("ef"), abuf, state["W"],
+                state["labels"], state["cluster_onehot"], idx, mask,
+                data.x, data.y, key, state["streams"])
+            out = dict(state, params=new, abuf=abuf)
+            if ef is not None:
+                out["ef"] = ef
+            return out, am
 
     def dense(state, data, key):
         # the dense path never refreshes: cohort=None must stay bit-exact
@@ -326,17 +351,23 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
     def masked(state, data, key, idx, mask):
         if refresh_hook is None:
-            new, n_streams = _masked(state["params"], state["W"],
-                                     state["labels"],
-                                     state["cluster_onehot"],
-                                     idx, mask, data.x, data.y, key,
-                                     state["streams"])
-            return dict(state, params=new), {"streams": n_streams}
-        new, refresh, w, n_streams = _masked_refresh(
-            state["params"], state["refresh"], state["W"],
-            state["labels"], state["cluster_onehot"], idx, mask, data.n,
-            data.x, data.y, key, state["streams"])
-        return (dict(state, params=new, refresh=refresh, W=w),
+            new, ef, n_streams = _masked(state["params"], state.get("ef"),
+                                         state["W"], state["labels"],
+                                         state["cluster_onehot"],
+                                         idx, mask, data.x, data.y, key,
+                                         state["streams"])
+            out = dict(state, params=new)
+            if ef is not None:
+                out["ef"] = ef
+            return out, {"streams": n_streams}
+        new, ef, refresh, w, n_streams = _masked_refresh(
+            state["params"], state.get("ef"), state["refresh"],
+            state["W"], state["labels"], state["cluster_onehot"], idx,
+            mask, data.n, data.x, data.y, key, state["streams"])
+        out = dict(state, params=new, refresh=refresh, W=w)
+        if ef is not None:
+            out["ef"] = ef
+        return (out,
                 {"streams": n_streams, **common.staleness_metrics(refresh)})
 
     scheme = "unicast" if num_streams is None else "groupcast"
@@ -346,13 +377,16 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         masked_jit = _masked_refresh
     else:
         masked_jit = _masked
+    shard_keys = ("params", "ef") if tstage is not None else ("params",)
     return Strategy(
         name="ucfl" if num_streams is None else f"ucfl_k{num_streams}",
         init=init, round=common.cohort_round(
             dense, masked, masked_jit=masked_jit, mesh=cfg.mesh,
             async_fn=amasked, async_cfg=acfg, sops=sops,
-            upload_stage=ustage),
-        eval_params=lambda s: s["params"], comm_scheme=scheme,
+            shard_keys=shard_keys, upload_stage=ustage,
+            transport=cfg.transport),
+        eval_params=lambda s: layout.unravel(s["params"]),
+        comm_scheme=scheme,
         num_streams=None if num_streams in (None, "auto") else num_streams,
         skip_round=common.refresh_skip_round if refresh_hook is not None
         else None,
@@ -381,11 +415,17 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             "the m× per-stream update stack has no single (c, d) upload "
             "slab for the fault/robust stage to rewrite — this idealized "
             "§V-E upper bound assumes honest clients by construction")
+    common.reject_transport(
+        cfg.transport, "ucfl_parallel",
+        "the m× per-stream update stack has no single (c, d) upload "
+        "slab to quantize — the m× uplink cost is the point of this "
+        "upper bound")
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
     refresh_hook = common.w_refresh_hook(cfg.w_refresh)
+    layout = flat.LayoutTable.build(params0)
 
     def init(key, data):
         m = data.num_clients
@@ -393,10 +433,7 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             apply_fn, params0, data, var_batch_size=var_batch_size,
             impl=kernel_impl, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
         )
-        stacked = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (m,) + x.shape) + 0.0, params0
-        )
-        state = {"params": stacked, "W": collab["W"]}
+        state = {"params": layout.slab(params0, m), "W": collab["W"]}
         if refresh_hook is not None:
             state["refresh"] = similarity.init_refresh_state(collab, m)
         return state
@@ -404,6 +441,7 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     @jax.jit
     def _round(params, w, x, y, key):
         m = x.shape[0]
+        tree = layout.unravel(params)
 
         # θ_{i,j}: client j optimizes stream i's model on its local data.
         def per_stream(stream_params, skey):
@@ -415,16 +453,16 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             )[0]
 
         keys = jax.random.split(key, m)
-        all_updates = jax.vmap(per_stream)(params, keys)  # leaves (i=m, j=m, ...)
+        all_updates = jax.vmap(per_stream)(tree, keys)  # leaves (i=m, j=m, ...)
         # Eq. 12: θ_i ← Σ_j w_{i,j} θ_{i,j}
-        return jax.tree.map(
+        return layout.ravel(jax.tree.map(
             lambda u: jnp.einsum("ij,ij...->i...", w, u), all_updates
-        )
+        ))
 
     def _all_updates(params, idx, mask, x, y, key):
         # Only cohort clients compute, but they still optimize ALL m stream
         # models (the defining m× cost of this upper bound).
-        m = jax.tree.leaves(params)[0].shape[0]
+        m = params.shape[0]
         c = idx.shape[0]
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         xc, yc = x[safe], y[safe]
@@ -439,24 +477,18 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
         keys = jax.random.split(key, m)
         # leaves (i=m, j=c, ...)
-        return jax.vmap(per_stream)(params, keys), safe
+        return jax.vmap(per_stream)(layout.unravel(params), keys), safe
 
     def _masked_mix(params, w, all_updates, idx, mask):
         # every stream mixes over the cohort's uploads with masked
         # renormalized weights (pad slots carry zero weight).
-        m = jax.tree.leaves(params)[0].shape[0]
         wc, alive = aggregation.masked_column_mixing(w, idx, mask)  # (m, c)
         mixed = jax.tree.map(
             lambda u: jnp.einsum("ij,ij...->i...", wc, u), all_updates
         )
         # a stream whose W row has no mass on the cohort keeps its last
         # model instead of collapsing to the zero mix
-        return jax.tree.map(
-            lambda mix, old: jnp.where(
-                alive.reshape((m,) + (1,) * (mix.ndim - 1)), mix, old
-            ),
-            mixed, params,
-        )
+        return jnp.where(alive[:, None], layout.ravel(mixed), params)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def _masked(params, w, idx, mask, x, y, key):
@@ -471,7 +503,8 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         c = idx.shape[0]
         own = jax.tree.map(lambda u: u[safe, jnp.arange(c)], all_updates)
         pre = gather_rows(params, safe)
-        refresh, w = refresh_hook(stacked_ravel(pre), stacked_ravel(own),
+        refresh, w = refresh_hook(pre[..., :layout.dim],
+                                  layout.ravel(own)[..., :layout.dim],
                                   refresh, idx, mask, n)
         return _masked_mix(params, w, all_updates, idx, mask), refresh, w
 
@@ -500,7 +533,8 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             dense, masked,
             masked_jit=_masked if refresh_hook is None else _masked_refresh,
             mesh=cfg.mesh, async_cfg=cfg.async_buffer),
-        eval_params=lambda s: s["params"], comm_scheme="unicast",
+        eval_params=lambda s: layout.unravel(s["params"]),
+        comm_scheme="unicast",
         skip_round=common.refresh_skip_round if refresh_hook is not None
         else None,
     )

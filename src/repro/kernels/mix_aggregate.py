@@ -47,8 +47,10 @@ def mix_aggregate_pallas(w, theta, *, block_d: int = DEFAULT_BLOCK_D,
     m2, d = theta.shape
     assert m == m2, (w.shape, theta.shape)
     if d == 0:
-        # Zero-width leaves (e.g. a flatten layer with no features at small
-        # input sizes) would build an empty grid the interpreter can't slice.
+        # A zero-width matrix would build an empty grid the interpreter
+        # can't slice. Unreachable from the strategy engine (the slab is
+        # never narrower than one 128 lane tile); kept for direct callers
+        # mixing arbitrary matrices.
         return jnp.zeros((k, 0), theta.dtype)
     k_pad = _round_up(k, 8)
     m_pad = _round_up(m, 8)

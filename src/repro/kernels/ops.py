@@ -88,6 +88,11 @@ def masked_mix_scatter(w, theta, idx, mask, full, *, impl=None, block_d=None):
     VMEM-slab kernel while ``slab_fits(m, c)``, the HBM-resident DMA
     kernel past that bound — O(c·d) traffic at any m.
     """
+    if theta.shape[1] != full.shape[1]:
+        raise ValueError(
+            f"masked_mix_scatter: upload width {theta.shape[1]} != state "
+            f"width {full.shape[1]} — the layout table and the slab "
+            "disagree (state rebuilt from a different params template?)")
     impl = _auto_impl(impl)
     if impl == "ref":
         return ref.masked_mix_scatter(w, theta, idx, mask, full)

@@ -254,8 +254,8 @@ def test_mix_scatter_noncohort_rows_property(seed, m, c, d, pads, hbm):
        c=st.integers(1, 6), d=st.integers(2, 100), pads=st.integers(0, 6))
 def test_mix_scatter_flat_property(seed, m, c, d, pads):
     """aggregation.mix_scatter_flat leaves non-cohort rows bit-identical
-    through the ravel/unravel layer, and an aligned-width flat_c (tail
-    columns past the state dim, even garbage) changes nothing."""
+    on the single-leaf slab state, and a wider flat_c (tail columns past
+    the state dim, even garbage) changes nothing."""
     from repro.core import aggregation
 
     pads = min(pads, c)
@@ -263,19 +263,45 @@ def test_mix_scatter_flat_property(seed, m, c, d, pads):
         pads = c - m
     rng = np.random.default_rng(seed)
     w, theta, idx, mask, full, real = _scatter_case(m, c, d, pads, rng)
-    tree = {"a": full[:, : d // 2], "b": full[:, d // 2:]}
+    tree = {"slab": jnp.asarray(full)}
     out = aggregation.mix_scatter_flat(tree, theta, w, idx, mask,
                                        impl="ref")
     wide = jnp.concatenate(
-        [theta, jnp.full((c, ops.aligned_dim(d) - d), 99.0)], axis=1)
+        [theta, jnp.full((c, ops.aligned_dim(d) + 128 - d), 99.0)],
+        axis=1)
     out_wide = aggregation.mix_scatter_flat(tree, wide, w, idx, mask,
                                             impl="ref")
     absent = np.setdiff1d(np.arange(m), real)
-    for k in tree:
-        a, b = np.asarray(out[k]), np.asarray(out_wide[k])
-        np.testing.assert_array_equal(a, b)
-        np.testing.assert_array_equal(a[absent],
-                                      np.asarray(tree[k])[absent])
+    a, b = np.asarray(out["slab"]), np.asarray(out_wide["slab"])
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a[absent], np.asarray(full)[absent])
+
+
+def test_mix_scatter_multi_leaf_state_raises():
+    """The slab engine is the contract: a multi-leaf stacked state on the
+    mix path is a caller error, not a fallback."""
+    from repro.core import aggregation
+
+    rng = np.random.default_rng(0)
+    w, theta, idx, mask, full, _ = _scatter_case(6, 3, 10, 0, rng)
+    tree = {"a": full[:, :5], "b": full[:, 5:]}
+    with pytest.raises(ValueError, match="multi-leaf stacked state"):
+        aggregation.mix_scatter_flat(tree, theta, w, idx, mask, impl="ref")
+    with pytest.raises(ValueError, match="multi-leaf stacked state"):
+        aggregation.mix_scatter(
+            tree, {"a": theta[:, :5], "b": theta[:, 5:]}, w, idx, mask,
+            impl="ref")
+
+
+def test_masked_mix_scatter_width_mismatch_raises():
+    """ops.masked_mix_scatter refuses an upload whose width disagrees
+    with the state slab (a layout-table/slab mismatch), as a ValueError
+    rather than a kernel-shape assert."""
+    rng = np.random.default_rng(1)
+    w, theta, idx, mask, full, _ = _scatter_case(6, 3, 10, 0, rng)
+    with pytest.raises(ValueError, match="layout table and the slab"):
+        ops.masked_mix_scatter(w, theta[:, :6], idx, mask,
+                               jnp.array(full), impl="ref")
 
 
 @pytest.mark.parametrize("m,d", [(2, 64), (8, 500), (16, 4096), (9, 129)])

@@ -1,0 +1,204 @@
+"""Quantized uplink transport tests (``FedConfig.transport``).
+
+Covers the transport contract end to end:
+
+  * per-chunk quantization error bound (int8: half a step of
+    ``max|chunk|/127``; fp8-e4m3: 3 mantissa bits, ≤ max|chunk|/16);
+  * exact zeros on all-zero chunks (the slab's aligned tail);
+  * error-feedback telescoping — on a constant delta the T-round applied
+    sum is ``T·delta`` up to the single residual ``ef_T``, i.e. one
+    quantization step, not T of them;
+  * config validation (kind / chunk / divisibility / make_stage typing);
+  * strategy integration — supporting strategies grow an ``ef`` slab and
+    stay within float drift of the raw-f32 wire over 3 cohort rounds;
+    non-supporting strategies raise NotImplementedError at construction;
+    ``transport=None`` runs carry NO ef state and are deterministic
+    (two identical runs are bit-equal);
+  * composition: transport under ``w_refresh`` and under the
+    buffered-async server both run in one jitted shape.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, load_ci_profile, st
+from repro.core import FedConfig, REGISTRY, ucfl
+from repro.core.similarity import RefreshConfig
+from repro.data import synthetic
+from repro.federated import transport
+from repro.federated.async_buffer import AsyncConfig
+from repro.federated.transport import TransportConfig
+from repro.models import lenet
+
+load_ci_profile(max_examples=20)
+
+INT8 = TransportConfig("int8")
+FP8 = TransportConfig("fp8")
+
+# strategies whose uplink is a single model delta to the PS support the
+# quantized wire; the rest must refuse loudly at construction
+SUPPORTED = ("ucfl", "clustered", "fedavg", "fedprox", "local", "oracle")
+REJECTED = ("scaffold", "ditto", "pfedme", "fedfomo", "cfl",
+            "ucfl_parallel")
+
+
+# ----------------------------------------------------------- quantization
+def _chunk_steps(x, cfg):
+    """Per-element max|chunk|, same shape as x."""
+    x = np.asarray(x)
+    xs = x.reshape(x.shape[:-1] + (-1, cfg.chunk))
+    peak = np.abs(xs).max(-1, keepdims=True)
+    return np.broadcast_to(peak, xs.shape).reshape(x.shape)
+
+
+@pytest.mark.parametrize("shape", [(256,), (3, 256), (2, 3, 128)])
+def test_int8_error_bound(shape):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32)) * 7.0
+    err = np.abs(np.asarray(transport.roundtrip(x, INT8) - x))
+    step = _chunk_steps(x, INT8) / 127.0
+    assert (err <= 0.5 * step + 1e-7).all()
+
+
+def test_fp8_error_bound():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 256)).astype(np.float32))
+    err = np.abs(np.asarray(transport.roundtrip(x, FP8) - x))
+    # e4m3: 3 mantissa bits -> relative step <= 2^-3, so after per-chunk
+    # rescale the absolute error is <= max|chunk|/16 (half a step)
+    assert (err <= _chunk_steps(x, FP8) / 16.0 + 1e-7).all()
+
+
+@pytest.mark.parametrize("cfg", [INT8, FP8])
+def test_zero_chunks_exact(cfg):
+    # the slab's aligned tail is all-zero chunks: must decode to exact 0
+    x = jnp.zeros((3, 256), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(transport.roundtrip(x, cfg)),
+                                  0.0)
+
+
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_int8_error_bound_property(seed):
+    rng = np.random.default_rng(seed)
+    scale = 10.0 ** rng.uniform(-3, 3)
+    x = jnp.asarray(rng.normal(size=(2, 256)).astype(np.float32)) * scale
+    err = np.abs(np.asarray(transport.roundtrip(x, INT8) - x))
+    step = _chunk_steps(x, INT8) / 127.0
+    assert (err <= 0.5 * step + 1e-6 * scale).all()
+
+
+def test_error_feedback_telescopes():
+    rng = np.random.default_rng(2)
+    delta = jnp.asarray(rng.normal(size=(3, 256)).astype(np.float32))
+    stage = transport.make_stage(INT8)
+    pre = jnp.zeros_like(delta)
+    ef = jnp.zeros_like(delta)
+    total = np.zeros(delta.shape, np.float32)
+    rounds = 17
+    for _ in range(rounds):
+        post_prime, ef = stage(pre, pre + delta, ef)
+        total += np.asarray(post_prime - pre)
+    # sum of applied updates = rounds*delta - ef_T: ONE residual, bounded
+    # by a single quantization step — compression never accumulates bias
+    step = _chunk_steps(delta, INT8) / 127.0
+    err = np.abs(total - rounds * np.asarray(delta))
+    assert (err <= step + 1e-5).all()
+    np.testing.assert_allclose(err, np.abs(np.asarray(ef)), atol=1e-5)
+
+
+# ------------------------------------------------------------- validation
+def test_config_validation():
+    with pytest.raises(ValueError, match="kind"):
+        TransportConfig("int4")
+    with pytest.raises(ValueError, match="positive"):
+        TransportConfig("int8", chunk=0)
+    with pytest.raises(ValueError, match="does not divide"):
+        transport.quantize(jnp.zeros((2, 100)), TransportConfig(chunk=64))
+    assert transport.make_stage(None) is None
+    with pytest.raises(TypeError, match="TransportConfig"):
+        transport.make_stage("int8")
+
+
+# ------------------------------------------------- strategy integration
+@functools.lru_cache(maxsize=1)
+def _setup():
+    key = jax.random.PRNGKey(3)
+    dkey, mkey, skey = jax.random.split(key, 3)
+    data = synthetic.label_shift(dkey, m=6, n=60, n_test=20, num_classes=6,
+                                 alpha=0.4, hw=(16, 16))
+    params0 = lenet.init(mkey, input_hw=(16, 16), channels=1, num_classes=6)
+    return data, params0, skey
+
+
+def _make(name, params0, cfg):
+    if name == "clustered":
+        return ucfl.make_ucfl(lenet.apply, params0, cfg, num_streams=2,
+                              var_batch_size=10)
+    if name in ("ucfl", "ucfl_parallel"):
+        return REGISTRY[name](lenet.apply, params0, cfg, var_batch_size=10)
+    return REGISTRY[name](lenet.apply, params0, cfg)
+
+
+def _run_rounds(strat, data, skey, rounds=3):
+    cohort = np.arange(data.num_clients, dtype=np.int32)
+    state = strat.init(jax.random.fold_in(skey, 1), data)
+    key = skey
+    for _ in range(rounds):
+        key, rkey = jax.random.split(key)
+        state, _ = strat.round(state, data, rkey, cohort)
+    return state
+
+
+@pytest.mark.parametrize("name", SUPPORTED)
+def test_supported_close_to_raw_wire(name):
+    data, params0, skey = _setup()
+    cfg = FedConfig(batch_size=30)
+    raw = _run_rounds(_make(name, params0, cfg), data, skey)
+    assert "ef" not in raw
+    for tcfg, tol in ((INT8, 2e-3), (FP8, 1e-2)):
+        qcfg = FedConfig(batch_size=30, transport=tcfg)
+        q = _run_rounds(_make(name, params0, qcfg), data, skey)
+        assert q["ef"].shape == q["params"].shape
+        assert float(jnp.abs(q["ef"]).max()) > 0.0
+        diff = float(jnp.abs(q["params"] - raw["params"]).max())
+        assert diff <= tol, (name, tcfg.kind, diff)
+
+
+@pytest.mark.parametrize("name", REJECTED)
+def test_rejected_at_construction(name):
+    _, params0, _ = _setup()
+    with pytest.raises(NotImplementedError, match="transport"):
+        _make(name, params0, FedConfig(batch_size=30, transport=INT8))
+
+
+def test_transport_none_bit_exact_and_ef_free():
+    data, params0, skey = _setup()
+    cfg = FedConfig(batch_size=30, transport=None)
+    a = _run_rounds(_make("fedavg", params0, cfg), data, skey)
+    b = _run_rounds(_make("fedavg", params0, cfg), data, skey)
+    assert "ef" not in a
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_transport_under_w_refresh():
+    data, params0, skey = _setup()
+    cfg = FedConfig(batch_size=30, transport=INT8,
+                    w_refresh=RefreshConfig())
+    state = _run_rounds(_make("ucfl", params0, cfg), data, skey)
+    assert "ef" in state and "refresh" in state
+    for leaf in jax.tree.leaves(state):
+        assert bool(jnp.isfinite(jnp.asarray(leaf, jnp.float32)).all())
+
+
+def test_transport_under_async_buffer():
+    data, params0, skey = _setup()
+    cfg = FedConfig(batch_size=30, transport=INT8,
+                    async_buffer=AsyncConfig(flush_k=3))
+    state = _run_rounds(_make("fedavg", params0, cfg), data, skey,
+                        rounds=4)
+    assert "ef" in state and "abuf" in state
+    assert bool(jnp.isfinite(state["params"]).all())
