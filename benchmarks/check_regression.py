@@ -47,6 +47,14 @@ Turns the ROADMAP's engine targets into enforced checks:
     cheap elementwise stage it is specified to be. (The ~3.88x UL byte
     win it buys is asserted by ``participation_sweep.py``'s
     quantized-uplink replay, not here.)
+  * quant-multi overhead — the ``quant_multi`` regime (scaffold's
+    two-stream uplink wire + compressed two-stream downlink, int8 on
+    every delta stream) must stay within ``--max-quant-multi-ratio``
+    (default 1.3) of the ``multi`` regime — the SAME scaffold config
+    with ``transport=None`` — so the gate isolates the per-stream
+    WireSchema stage cost. A ratio above the gate means the per-slice
+    fold over the concatenated wire slab stopped being a cheap
+    elementwise stage inside the one jitted round.
   * m-scaling — a fixed-cohort round must cost O(c·d), not O(m·d). The
     ``m_scaling_ratio`` (round time at m=512 over m=8, same cohort size)
     must stay within ``--max-mscale-ratio`` (default 1.3); above it some
@@ -103,6 +111,10 @@ def main(argv=None) -> int:
                     help="gate on flat_tree_over_cohort_ratio")
     ap.add_argument("--max-quant-ratio", type=float, default=1.3,
                     help="gate on quant_over_cohort_ratio")
+    ap.add_argument("--max-quant-multi-ratio", type=float, default=1.3,
+                    help="gate on quant_multi_over_multi_ratio (scaffold "
+                         "two-stream wire + compressed downlink over the "
+                         "same scaffold config with transport off)")
     ap.add_argument("--max-mscale-ratio", type=float, default=1.3,
                     help="gate on m_scaling_ratio (fixed-cohort round "
                          "time at m=512 over m=8)")
@@ -143,6 +155,14 @@ def main(argv=None) -> int:
                     "a cheap in-round elementwise quantize→dequantize→"
                     "EF fold — check for a recompile, a host sync, or "
                     "an EF path that left the fused masked mix-scatter")
+        ok &= _gate(payload, "quant_multi_over_multi_ratio", "multi",
+                    "quant_multi", args.max_quant_multi_ratio,
+                    "the multi-stream wire (scaffold's model + control "
+                    "uplink streams and the compressed two-stream "
+                    "downlink) is no longer a cheap per-slice "
+                    "quantize→dequantize→EF fold over the concatenated "
+                    "wire slab — check for a recompile, a host sync, or "
+                    "per-stream work that left the one jitted round")
         ok &= _gate(payload, "m_scaling_ratio", "m8", "m512",
                     args.max_mscale_ratio,
                     "a fixed-cohort round's time grew with the client "

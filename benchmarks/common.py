@@ -76,7 +76,17 @@ def make_strategy(name: str, params0, s: BenchScale, *, chunk_size=None,
         return REGISTRY["ucfl_parallel"](lenet.apply, params0, cfg,
                                          var_batch_size=s.var_batch)
     if name in ("scaffold", "pfedme"):
-        return REGISTRY[name](lenet.apply, params0)
+        # keep each maker's paper-footnote local-solver defaults (lr,
+        # momentum, epochs, batch size) but thread the ENGINE knobs —
+        # dropping cfg here used to silently ignore transport/mesh/faults
+        import inspect
+
+        base = inspect.signature(REGISTRY[name]).parameters["cfg"].default
+        cfg = dataclasses.replace(
+            base, chunk_size=chunk_size, mesh=mesh, w_refresh=w_refresh,
+            async_buffer=async_buffer, faults=faults, robust=robust,
+            transport=transport)
+        return REGISTRY[name](lenet.apply, params0, cfg, **kw)
     return REGISTRY[name](lenet.apply, params0, cfg, **kw)
 
 

@@ -6,7 +6,13 @@ UCFL=m unicast, UCFL-k4=4 groupcast, FedFomo=client mixing (m models DL).
 
 Also emits the partial-participation comm sweep: round time and downlink
 bytes for each algorithm at several cohort fractions (the O(cohort) round
-cost the participation engine buys).
+cost the participation engine buys) — each row twice, raw f32 wire and
+the int8 WireSchema wire (``transport``/``schema`` threaded into
+``cm.round_time`` and ``cm.downlink_bytes_per_round``), so the Tdl
+frontier shows what per-stream compression buys per algorithm: fedavg's
+delta broadcast and ucfl's per-client delta rows shrink ~3.9x, the k=4
+raw centroids and FedFomo's relayed peer models move by their own
+codings.
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ import time
 
 from benchmarks import common
 from repro.core import comm_model as cm
+from repro.federated.transport import TransportConfig
 
 SYSTEMS = {
     "wireless_slow_ul": dict(rho=4.0, inv_mu=1.0),
@@ -29,26 +36,51 @@ ALGOS = {
 FRACTIONS = (1.0, 0.5, 0.25, 0.1)
 
 
-def sweep_participation(scale, *, model_bytes: int | None = None) -> list[str]:
-    """Round-time / DL-bytes rows for ≥3 participation fractions."""
-    if model_bytes is None:
-        import jax
+def _algo_schemas(scale):
+    """Each fig5 algo's declared WireSchema (from the real constructors —
+    duplicating the stream declarations here would drift)."""
+    import jax
 
+    params0 = common.make_params0(jax.random.PRNGKey(0), scale)
+    tr = TransportConfig("int8")
+    out = {}
+    for algo in ALGOS:
+        name = "ucfl_k4" if algo == "ucfl_k4" else algo
+        strat = common.make_strategy(name, params0, scale, transport=tr)
+        out[algo] = strat.wire_schema
+    return params0, out
+
+
+def sweep_participation(scale, *, model_bytes: int | None = None) -> list[str]:
+    """Round-time / DL-bytes rows for ≥3 participation fractions.
+
+    Every (fraction, algo) cell is priced on the raw f32 wire AND the
+    int8 schema wire — the schema comes from the algo's own strategy
+    constructor, so the frontier prices exactly the streams the engine
+    ships.
+    """
+    params0, schemas = _algo_schemas(scale)
+    if model_bytes is None:
         from repro.core.pytree import tree_count_params
-        params0 = common.make_params0(jax.random.PRNGKey(0), scale)
         model_bytes = 4 * tree_count_params(params0)
     rows = []
     p = cm.SystemParams(m=scale.m, rho=4.0, inv_mu=1.0)
+    wires = (("", None, None),
+             ("_int8", TransportConfig("int8"), schemas))
     for frac in FRACTIONS:
         c = max(1, round(frac * scale.m))
         for algo, (scheme, k) in ALGOS.items():
-            rt = cm.round_time(p, scheme, k, cohort_size=c)
-            dl = cm.downlink_bytes_per_round(model_bytes, scheme, scale.m, k,
-                                             cohort_size=c)
-            rows.append(common.csv_row(
-                f"fig5/participation/{algo}_f{frac}", 0.0,
-                f"cohort={c};t_round={rt:.2f}Tdl;dl_bytes={dl}"))
-            print(rows[-1], flush=True)
+            for tag, tr, sch in wires:
+                schema = sch[algo] if sch else None
+                rt = cm.round_time(p, scheme, k, cohort_size=c,
+                                   transport=tr, schema=schema)
+                dl = cm.downlink_bytes_per_round(
+                    model_bytes, scheme, scale.m, k, cohort_size=c,
+                    transport=tr, schema=schema)
+                rows.append(common.csv_row(
+                    f"fig5/participation/{algo}_f{frac}{tag}", 0.0,
+                    f"cohort={c};t_round={rt:.2f}Tdl;dl_bytes={dl}"))
+                print(rows[-1], flush=True)
     return rows
 
 

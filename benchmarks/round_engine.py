@@ -50,6 +50,15 @@ Measures the per-round wall time of the jitted round in three regimes:
                          The WIRE win it buys (~3.88x fewer UL bytes)
                          is priced by the comm model in
                          ``participation_sweep.py``, not here.
+  * ``quant_multi``    — the multi-STREAM wire: SCAFFOLD with int8 on
+                         both uplink streams (model delta + control
+                         delta, each with its own EF slice) AND the
+                         compressed two-stream downlink (server-side EF
+                         row). Ratioed against ``multi`` — the same
+                         scaffold config with ``transport=None`` — so
+                         the gate isolates the per-stream stage cost
+                         from scaffold-vs-ucfl differences. Must stay
+                         within ~1.3x (the seventh CI ratio gate).
   * ``async``          — the fixed-size cohort regime with the
                          buffered-async server on
                          (``FedConfig.async_buffer``, flush_k = half the
@@ -90,7 +99,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import FedConfig, ucfl
+from repro.core import FedConfig, REGISTRY, ucfl
 from repro.core.aggregation import RobustConfig
 from repro.core.similarity import RefreshConfig
 from repro.federated import participation as part
@@ -313,6 +322,23 @@ def run(scale) -> list[str]:
                                          chunk_size=chunk,
                                          transport=TransportConfig("int8")),
                     cohort_cfg))
+    # quant_multi vs multi: identical scaffold configs except the wire
+    # (epochs=1 keeps the timed local phase comparable to the other
+    # regimes; the paper-footnote epochs=5 is a fidelity knob, not a
+    # stage-overhead one)
+    scaffold_cfg = FedConfig(lr=0.01, momentum=0.0, epochs=1,
+                             batch_size=s.batch_size, chunk_size=chunk)
+    entries.append(("multi",
+                    REGISTRY["scaffold"](lenet.apply, params0,
+                                         scaffold_cfg),
+                    cohort_cfg))
+    entries.append(("quant_multi",
+                    REGISTRY["scaffold"](
+                        lenet.apply, params0,
+                        dataclasses.replace(
+                            scaffold_cfg,
+                            transport=TransportConfig("int8"))),
+                    cohort_cfg))
 
     # sharded cohort regimes (only with a multi-device host platform,
     # e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8)
@@ -335,10 +361,13 @@ def run(scale) -> list[str]:
 
     results, sharded = {}, {}
     for name in list(regimes) + ["refresh", "async", "faults",
-                                 "flat_tree", "quant"]:
+                                 "flat_tree", "quant", "multi",
+                                 "quant_multi"]:
         results[name] = {"round_us": times[name], "rounds": rounds}
+        strat_tag = "scaffold" if name in ("multi", "quant_multi") \
+            else "ucfl"
         rows.append(common.csv_row(
-            f"round_engine/ucfl_{name}", times[name],
+            f"round_engine/{strat_tag}_{name}", times[name],
             f"m={s.m};cohort={s.m if name == 'dense' else cohort};"
             f"rounds={rounds}"))
         print(rows[-1], flush=True)
@@ -373,6 +402,8 @@ def run(scale) -> list[str]:
         max(results["cohort"]["round_us"], 1e-9)
     quant_ratio = results["quant"]["round_us"] / \
         max(results["cohort"]["round_us"], 1e-9)
+    quant_multi_ratio = results["quant_multi"]["round_us"] / \
+        max(results["multi"]["round_us"], 1e-9)
     payload = {
         "config": {"m": s.m, "cohort_size": cohort, "rounds": rounds,
                    "model": "lenet", "scenario": "label_shift",
@@ -391,6 +422,7 @@ def run(scale) -> list[str]:
         "faults_over_cohort_ratio": faults_ratio,
         "flat_tree_over_cohort_ratio": flat_ratio,
         "quant_over_cohort_ratio": quant_ratio,
+        "quant_multi_over_multi_ratio": quant_multi_ratio,
         "m_scaling_ratio": m_ratio,
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
@@ -400,6 +432,8 @@ def run(scale) -> list[str]:
                           ("faults_over_cohort", faults_ratio, 1.2),
                           ("flat_tree_over_cohort", flat_ratio, 1.2),
                           ("quant_over_cohort", quant_ratio, 1.3),
+                          ("quant_multi_over_multi", quant_multi_ratio,
+                           1.3),
                           ("m_scaling_m512_over_m8", m_ratio, 1.3)):
         rows.append(common.csv_row(
             f"round_engine/{label}", r,

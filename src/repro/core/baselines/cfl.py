@@ -28,6 +28,7 @@ from repro.core.baselines.common import group_average
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import transport as transport_lib
 
 
 def _spectral_bipartition(sim: np.ndarray) -> np.ndarray:
@@ -55,20 +56,26 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
-    common.reject_transport(
-        cfg.transport, "cfl",
-        "the spectral split statistics consume raw update-delta rows; "
-        "quantization noise in the pairwise cosine matrix would need "
-        "its own bias analysis before the split rule could trust it")
     layout = flat.LayoutTable.build(params0)
+    # the split statistics consume the DEQUANTIZED wire deltas — the
+    # server can only cluster on what it received; the cluster-model
+    # groupcast stays raw (a cluster mean is not any receiver's old model)
+    schema = transport_lib.single_delta_schema(
+        "cfl", layout.dim,
+        downlink=(transport_lib.Stream("cluster_models", layout.dim,
+                                       coding="raw"),))
 
     def init(key, data):
         m = data.num_clients
-        return {
+        state = {
             "params": layout.slab(params0, m),
             "assignment": np.zeros(m, dtype=np.int32),
             "round": 0,
         }
+        if cfg.transport is not None:
+            state["ef"] = jnp.zeros(
+                (m, schema.width_aligned("uplink")), jnp.float32)
+        return state
 
     @jax.jit
     def _train_agg(params, assignment, n, x, y, key):
@@ -79,10 +86,11 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return new_params, post - params
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
-    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
+    tstage = transport_lib.make_wire_stage(schema, cfg.transport, "uplink")
 
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def _masked(params, idx, mask, assignment_c, n, x, y, key):
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def _masked(params, ef, idx, mask, assignment_c, n, x, y, key):
         # within-cluster FedAvg over the masked cohort members of each
         # cluster; absent clients keep their last model.
         safe = aggregation.safe_gather_index(idx, x.shape[0])
@@ -91,6 +99,12 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         updated, _ = local(layout.unravel(pc), x[safe], y[safe], None,
                            keys=keys)
         post = layout.ravel(updated)
+        if tstage is not None:
+            # quantize the upload FIRST: the split statistics (and the
+            # mix) consume the dequantized wire delta post' − pc — the
+            # server clusters on what it received
+            post, efc = tstage(pc, post, sops.gather(ef, safe))
+            ef = sops.scatter(ef, idx, efc)
         if ustage is not None:
             # sanitize the upload BEFORE the split statistics: the
             # returned deltas (and the split bookkeeping fed from them)
@@ -103,8 +117,8 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         new_params = sops.mix_scatter_flat(params, post, rows, idx, mask,
                                            impl=kernel_impl)
         if ustage is not None:
-            return new_params, delta, mask
-        return new_params, delta
+            return new_params, delta, mask, ef
+        return new_params, delta, ef
 
     def _maybe_split(assignment, members_pool, dmat_rows):
         """Recursive bipartition check over the clients in members_pool.
@@ -154,33 +168,41 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         assignment = state["assignment"]
         safe = np.minimum(np.asarray(idx), data.num_clients - 1)
         out = _masked(
-            state["params"], idx, mask, jnp.asarray(assignment[safe]),
-            data.n, data.x, data.y, key,
+            state["params"], state.get("ef"), idx, mask,
+            jnp.asarray(assignment[safe]), data.n, data.x, data.y, key,
         )
         if ustage is None:
-            new_params, dmat = out
+            new_params, dmat, ef = out
             members = np.asarray(idx)[np.asarray(mask)]  # sorted real prefix
             slots = np.arange(len(members))
         else:
             # the stage may demote slots mid-cohort, so the survivors are
             # no longer a slot prefix — index dmat by surviving slot
-            new_params, dmat, fmask = out
+            new_params, dmat, fmask, ef = out
             slots = np.nonzero(np.asarray(fmask))[0]
             members = np.asarray(idx)[slots]
         dmat = np.asarray(dmat)
         assignment, rnd = _bookkeep(
             state, members,
             {int(g): dmat[j] for j, g in zip(slots, members)})
-        return ({"params": new_params, "assignment": assignment,
-                 "round": rnd},
+        new_state = {"params": new_params, "assignment": assignment,
+                     "round": rnd}
+        if ef is not None:
+            new_state["ef"] = ef
+        return (new_state,
                 {"streams": len(np.unique(assignment[members]))
                  if len(members) else 0})
 
+    shard_keys = (("params", "ef") if cfg.transport is not None
+                  else ("params",))
     return Strategy("cfl", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
-                                        sops=sops, upload_stage=ustage),
+                                        sops=sops, shard_keys=shard_keys,
+                                        upload_stage=ustage,
+                                        transport=cfg.transport),
                     lambda s: layout.unravel(s["params"]),
                     comm_scheme="groupcast",
-                    injects_faults=cfg.faults is not None)
+                    injects_faults=cfg.faults is not None,
+                    wire_schema=schema)

@@ -74,13 +74,6 @@ def broadcast_params(params0, m):
     )
 
 
-def reject_transport(transport, name, why):
-    """Construction-time guard for strategies without a quantizable uplink."""
-    if transport is not None:
-        raise NotImplementedError(
-            f"FedConfig.transport is not supported by {name}: {why}")
-
-
 def group_mixing_matrix(assignment, n):
     """Row-stochastic W implementing per-group FedAvg (CFL/Oracle).
 
@@ -445,7 +438,8 @@ def cohort_keys(key, m, safe_idx):
 
 
 def make_masked_round(train, mix, *, donate=True, sops=None,
-                      upload_stage=None, layout=None, transport=None):
+                      upload_stage=None, layout=None, transport=None,
+                      schema=None):
     """Jit the standard masked round body with a donated params buffer.
 
     With ``layout`` (a :class:`repro.core.flat.LayoutTable` — the slab
@@ -466,11 +460,21 @@ def make_masked_round(train, mix, *, donate=True, sops=None,
     ``transport`` (``FedConfig.transport``; requires ``layout``) inserts
     the quantize→dequantize delta stage with error feedback between
     local SGD and the upload stage: the returned body then takes AND
-    returns the (m, d_al) ``ef`` accumulator slab as its second donated
+    returns the (m, W_ul) ``ef`` accumulator slab as its second donated
     argument — ``body(params, ef, idx, mask, x, y, key, *args) ->
-    (mix(...), ef')``. ``transport=None`` keeps the stage (and the extra
-    argument) out of the trace entirely — bit-exact with the
-    transport-free engine.
+    (mix(...), ef')``. ``schema`` (the strategy's
+    :class:`~repro.federated.transport.WireSchema`) keys the stage: the
+    per-stream :func:`~repro.federated.transport.make_wire_stage` over
+    the schema's concatenated uplink slab (W_ul = its aligned width;
+    a single-delta schema is bit-identical to the legacy single-slab
+    stage, which ``schema=None`` keeps for direct callers/tests).
+    ``transport=None`` keeps the stage (and the extra argument) out of
+    the trace entirely — bit-exact with the transport-free engine.
+    Downlink compression is a MIX concern (the served payload is mix
+    output): see :func:`fedavg_mix_closure` for the broadcast family's
+    compressed-downlink mix; ``mix`` results are opaque to this body, so
+    a downlink-compressing mix simply returns ``(new_state, ef_dl')``
+    with the server-side EF threaded through ``*args``.
 
     ``upload_stage`` (:func:`repro.federated.faults.upload_stage`) is the
     fault-injection / finite-guard / robust rewrite applied between
@@ -497,7 +501,10 @@ def make_masked_round(train, mix, *, donate=True, sops=None,
     gather = sops.gather if sops is not None else (
         lambda tree, safe: gather_rows(tree, safe))
     scatter = sops.scatter if sops is not None else scatter_rows
-    tstage = transport_lib.make_stage(transport)
+    if schema is not None:
+        tstage = transport_lib.make_wire_stage(schema, transport, "uplink")
+    else:
+        tstage = transport_lib.make_stage(transport)
     if tstage is not None and layout is None:
         raise ValueError("transport requires the slab layout table")
 
@@ -564,35 +571,84 @@ def fedavg_masked_mix(params, updated, idx, mask, n, *, impl=None):
         mixed, params)
 
 
-def make_fedavg_masked_round(local, *, impl=None, donate=True, sops=None,
-                             upload_stage=None, layout=None,
-                             transport=None):
+def fedavg_mix_closure(*, sops=None, impl=None, dstage=None):
+    """Build the FedAvg-family mix (masked Eq. 1, broadcast back).
+
+    ``dstage=None`` returns the plain broadcast mix
+    (:func:`fedavg_masked_mix` / ``sops.fedavg_mix``) — the exact
+    pre-schema trace. With ``dstage`` (the schema's downlink
+    :func:`~repro.federated.transport.make_wire_stage`) the served
+    global is delta-coded against the receivers' shared reference — the
+    OLD global, row 0 of the broadcast-uniform stacked state — with the
+    server-side (1, W_dl) EF accumulator threaded as a trailing mix arg:
+    ``mix(params, updated, idx, mask, n, ef_dl) -> (new, ef_dl')``. An
+    all-masked cohort keeps params AND ef_dl unchanged (no wire
+    activity — skip-round semantics, like the plain mix).
+    """
+    if dstage is None:
+        if sops is None:
+            return functools.partial(fedavg_masked_mix, impl=impl)
+
+        def plain_mix(params, updated, idx, mask, n):
+            return sops.fedavg_mix(params, updated, idx, mask, n,
+                                   impl=impl)
+
+        return plain_mix
+
+    gather = sops.gather if sops is not None else (
+        lambda tree, safe: gather_rows(tree, safe))
+
+    def mix(params, updated, idx, mask, n, ef_dl):
+        rows = jax.tree.leaves(params)[0].shape[0]
+        safe = aggregation.safe_gather_index(idx, n.shape[0])
+        w = aggregation.masked_fedavg_weights(jnp.take(n, safe), mask)
+        mixed = aggregation.user_centric(updated, w, impl=impl)  # (1, W)
+        ref = gather(params, jnp.zeros((1,), jnp.int32))
+        served, new_ef = dstage(ref, mixed, ef_dl)
+        alive = jnp.any(mask)
+        ef_dl = jnp.where(alive, new_ef, ef_dl)
+        if sops is not None and sops.sharded:
+            new = mesh_lib.shard_broadcast_rows(params, served, alive,
+                                                sops.mesh)
+        else:
+            new = jnp.where(
+                alive,
+                jnp.broadcast_to(served, (rows,) + served.shape[1:]),
+                params)
+        return new, ef_dl
+
+    return mix
+
+
+def make_fedavg_masked_round(local, *, train=None, impl=None, donate=True,
+                             sops=None, upload_stage=None, layout=None,
+                             transport=None, schema=None):
     """The FedAvg-family masked round (FedAvg/FedProx reuse it).
 
     ``fedavg_masked_mix`` is tree-generic, so the same mix serves the
     legacy tree contract and the slab engine (where ``updated`` is the
-    (c, d_al) upload matrix) unchanged.
+    (c, d_al) upload matrix) unchanged. ``train`` overrides the default
+    plain-local-SGD train closure (FedProx passes its proximal-centered
+    one); it must accept ``(pc, xc, yc, keys, n, *extra)`` — the extra
+    args carry the downlink EF when the schema compresses the broadcast.
     """
 
-    def train(pc, xc, yc, keys, n):
-        updated, _ = local(pc, xc, yc, None, keys=keys)
-        return updated
+    if train is None:
+        def train(pc, xc, yc, keys, n, *_):
+            updated, _ = local(pc, xc, yc, None, keys=keys)
+            return updated
 
-    if sops is None:
-        mix = functools.partial(fedavg_masked_mix, impl=impl)
-    else:
-        def mix(params, updated, idx, mask, n):
-            return sops.fedavg_mix(params, updated, idx, mask, n,
-                                   impl=impl)
-
+    dstage = (transport_lib.make_wire_stage(schema, transport, "downlink")
+              if schema is not None else None)
+    mix = fedavg_mix_closure(sops=sops, impl=impl, dstage=dstage)
     return make_masked_round(train, mix, donate=donate, sops=sops,
                              upload_stage=upload_stage, layout=layout,
-                             transport=transport)
+                             transport=transport, schema=schema)
 
 
 # ------------------------------------------------------- buffered-async path
 
-def state_async_buffer(state, acfg, m, slots, dim, sops=None):
+def state_async_buffer(state, acfg, m, slots, dim, sops=None, schema=None):
     """Fetch — or lazily create — the strategy state's upload buffer.
 
     The buffer's slot count depends on the participation policy's cohort
@@ -612,7 +668,8 @@ def state_async_buffer(state, acfg, m, slots, dim, sops=None):
     buf = state.get("abuf")
     if buf is None:
         shards = sops.buffer_shards if sops is not None else 1
-        buf = async_buffer.init_buffer(acfg, m, slots, dim, shards=shards)
+        buf = async_buffer.init_buffer(acfg, m, slots, dim, shards=shards,
+                                       schema=schema)
         if sops is not None:
             buf = sops.commit_buffer(buf)
     return buf
@@ -620,7 +677,7 @@ def state_async_buffer(state, acfg, m, slots, dim, sops=None):
 
 def make_fedavg_async_round(train, acfg, *, impl=None, sops=None,
                             upload_stage=None, layout=None,
-                            transport=None):
+                            transport=None, schema=None):
     """The FedAvg-family buffered-async round (FedAvg/FedProx reuse it).
 
     FedBuff's server rule in delta form: the buffer holds the cohort's
@@ -660,7 +717,10 @@ def make_fedavg_async_round(train, acfg, *, impl=None, sops=None,
         lambda tree, safe: gather_rows(tree, safe))
     scatter = sops.buffer_scatter() if sops is not None else None
     efscatter = sops.scatter if sops is not None else scatter_rows
-    tstage = transport_lib.make_stage(transport)
+    if schema is not None:
+        tstage = transport_lib.make_wire_stage(schema, transport, "uplink")
+    else:
+        tstage = transport_lib.make_stage(transport)
     if tstage is not None and layout is None:
         raise ValueError("transport requires the slab layout table")
 
@@ -737,7 +797,8 @@ def make_fedavg_async_round(train, acfg, *, impl=None, sops=None,
 
 
 def fedavg_async_wrapper(train, params0, acfg, *, impl=None, sops=None,
-                         upload_stage=None, layout=None, transport=None):
+                         upload_stage=None, layout=None, transport=None,
+                         schema=None):
     """Build the FedAvg-family buffered-async cohort body + jit handle.
 
     Returns ``(amasked, jitted_body)`` for ``cohort_round(async_fn=...,
@@ -745,18 +806,22 @@ def fedavg_async_wrapper(train, params0, acfg, *, impl=None, sops=None,
     ``train`` as in :func:`make_fedavg_async_round`; the body manages the
     lazily-created buffer in ``state["abuf"]`` (and, with ``transport``
     on, the error-feedback slab in ``state["ef"]``), committed to the
-    layout ``sops`` (the strategy's :class:`StateOps`) picks.
+    layout ``sops`` (the strategy's :class:`StateOps`) picks. ``schema``
+    sizes the buffer rows at the uplink wire-slab width and keys the
+    per-stream transport stage (the async downlink stays raw f32 — see
+    the transport capability matrix).
     """
     if acfg is None:
         return None, None
     body = make_fedavg_async_round(train, acfg, impl=impl, sops=sops,
                                    upload_stage=upload_stage,
-                                   layout=layout, transport=transport)
+                                   layout=layout, transport=transport,
+                                   schema=schema)
     dim = tree_count_params(params0)
 
     def amasked(state, data, key, idx, mask):
         abuf = state_async_buffer(state, acfg, data.num_clients,
-                                  idx.shape[0], dim, sops)
+                                  idx.shape[0], dim, sops, schema)
         if transport is None:
             new, abuf, metrics = body(state["params"], abuf, idx, mask,
                                       data.x, data.y, key, data.n)

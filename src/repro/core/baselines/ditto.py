@@ -7,12 +7,14 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import aggregation, flat
 from repro.core.baselines import common
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import transport as transport_lib
 
 
 @register("ditto")
@@ -35,19 +37,25 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
-    common.reject_transport(
-        cfg.transport, "ditto",
-        "the personal solver consumes the exact global the client "
-        "received; a quantized global upload would need a second EF "
-        "stream for the personal proximal center")
     layout = flat.LayoutTable.build(params0)
+    # only the GLOBAL model crosses the wire: the personal model (and its
+    # proximal pull toward the received global) is client-side state
+    schema = transport_lib.single_delta_schema(
+        "ditto", layout.dim,
+        downlink=(transport_lib.Stream("model", layout.dim),))
 
     def init(key, data):
         m = data.num_clients
-        return {
+        state = {
             "params": layout.slab(params0, m),  # global (stacked)
             "personal": layout.slab(params0, m),
         }
+        if cfg.transport is not None:
+            state["ef"] = jnp.zeros(
+                (m, schema.width_aligned("uplink")), jnp.float32)
+            state["ef_dl"] = jnp.zeros(
+                (1, schema.width_aligned("downlink")), jnp.float32)
+        return state
 
     @jax.jit
     def _round(params, personal, n, x, y, key):
@@ -62,10 +70,18 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return new_global, layout.ravel(new_personal)
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
-    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
+    tstage = transport_lib.make_wire_stage(schema, cfg.transport, "uplink")
+    dstage = transport_lib.make_wire_stage(schema, cfg.transport,
+                                           "downlink")
+    # the broadcast-family mix: plain masked Eq. 1 when the downlink is
+    # raw, delta-coded against the old global with server-side EF when
+    # the schema compresses the broadcast
+    dl_mix = common.fedavg_mix_closure(sops=sops, impl=kernel_impl,
+                                       dstage=dstage)
 
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
-    def _masked(params, personal, idx, mask, n, x, y, key):
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+    def _masked(params, personal, ef, ef_dl, idx, mask, n, x, y, key):
         k1, k2 = jax.random.split(key)
         m = x.shape[0]
         safe = aggregation.safe_gather_index(idx, m)
@@ -75,19 +91,26 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         updated, _ = local_global(pct, xc, yc, None,
                                   keys=common.cohort_keys(k1, m, safe))
         post = layout.ravel(updated)
+        if tstage is not None:
+            post, efc = tstage(pc, post, sops.gather(ef, safe))
+            ef = sops.scatter(ef, idx, efc)
         # the fault/robust stage rewrites the UPLINK (the global-model
         # upload) only: personal models are client-side state that never
         # leaves the device, so their scatter keeps the ORIGINAL slots
         gidx, gmask = idx, mask
         if ustage is not None:
             post, gidx, gmask = ustage(pc, post, idx, mask, key, m)
-        new_global = sops.fedavg_mix(params, post, gidx, gmask, n,
-                                     impl=kernel_impl)
-        # only participants advance their personal solver
+        if dstage is None:
+            new_global = dl_mix(params, post, gidx, gmask, n)
+        else:
+            new_global, ef_dl = dl_mix(params, post, gidx, gmask, n, ef_dl)
+        # only participants advance their personal solver (against the
+        # global they hold — pct, the round-start row)
         new_pc, _ = local_personal(
             layout.unravel(sops.gather(personal, safe)), xc, yc, None,
             pct, keys=common.cohort_keys(k2, m, safe))
-        return new_global, sops.scatter(personal, idx, layout.ravel(new_pc))
+        return (new_global, sops.scatter(personal, idx,
+                                         layout.ravel(new_pc)), ef, ef_dl)
 
     def dense(state, data, key):
         g, p = _round(state["params"], state["personal"], data.n, data.x,
@@ -95,18 +118,29 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return {"params": g, "personal": p}, {"streams": 1}
 
     def masked(state, data, key, idx, mask):
-        g, p = _masked(state["params"], state["personal"], idx, mask,
-                       data.n, data.x, data.y, key)
-        return {"params": g, "personal": p}, {"streams": 1}
+        g, p, ef, ef_dl = _masked(state["params"], state["personal"],
+                                  state.get("ef"), state.get("ef_dl"),
+                                  idx, mask, data.n, data.x, data.y, key)
+        out = {"params": g, "personal": p}
+        if ef is not None:
+            out["ef"] = ef
+        if ef_dl is not None:
+            out["ef_dl"] = ef_dl
+        return out, {"streams": 1}
 
+    shard_keys = ("params", "personal")
+    if cfg.transport is not None:
+        shard_keys += ("ef",)
     return Strategy(f"ditto_lam{lam}", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
                                         sops=sops,
-                                        shard_keys=("params", "personal"),
-                                        upload_stage=ustage),
+                                        shard_keys=shard_keys,
+                                        upload_stage=ustage,
+                                        transport=cfg.transport),
                     lambda s: layout.unravel(s["personal"]),
                     comm_scheme="broadcast",
                     num_streams=1,
-                    injects_faults=cfg.faults is not None)
+                    injects_faults=cfg.faults is not None,
+                    wire_schema=schema)

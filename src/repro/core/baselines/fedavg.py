@@ -15,6 +15,7 @@ from repro.core.baselines import common
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import transport as transport_lib
 
 
 @register("fedavg")
@@ -25,13 +26,20 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
-    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
     layout = flat.LayoutTable.build(params0)
+    schema = transport_lib.single_delta_schema(
+        "fedavg", layout.dim,
+        downlink=(transport_lib.Stream("model", layout.dim),))
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
 
     def init(key, data):
         state = {"params": layout.slab(params0, data.num_clients)}
         if cfg.transport is not None:
-            state["ef"] = jnp.zeros_like(state["params"])
+            state["ef"] = jnp.zeros(
+                (data.num_clients, schema.width_aligned("uplink")),
+                jnp.float32)
+            state["ef_dl"] = jnp.zeros(
+                (1, schema.width_aligned("downlink")), jnp.float32)
         return state
 
     @jax.jit
@@ -44,7 +52,8 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                               sops=sops,
                                               upload_stage=ustage,
                                               layout=layout,
-                                              transport=cfg.transport)
+                                              transport=cfg.transport,
+                                              schema=schema)
 
     def dense(state, data, key):
         new = _round(state["params"], data.n, data.x, data.y, key)
@@ -55,14 +64,16 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             new = _masked(state["params"], idx, mask, data.x, data.y, key,
                           data.n)
             return dict(state, params=new), {"streams": 1}
-        new, ef = _masked(state["params"], state["ef"], idx, mask, data.x,
-                          data.y, key, data.n)
-        return dict(state, params=new, ef=ef), {"streams": 1}
+        (new, ef_dl), ef = _masked(state["params"], state["ef"], idx, mask,
+                                   data.x, data.y, key, data.n,
+                                   state["ef_dl"])
+        return dict(state, params=new, ef=ef, ef_dl=ef_dl), {"streams": 1}
 
     amasked, masked_jit = common.fedavg_async_wrapper(
         lambda pc, xc, yc, keys, n: local(pc, xc, yc, None, keys=keys)[0],
         params0, cfg.async_buffer, impl=kernel_impl, sops=sops,
-        upload_stage=ustage, layout=layout, transport=cfg.transport)
+        upload_stage=ustage, layout=layout, transport=cfg.transport,
+        schema=schema)
 
     shard_keys = (("params", "ef") if cfg.transport is not None
                   else ("params",))
@@ -76,4 +87,5 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                         transport=cfg.transport),
                     lambda s: layout.unravel(s["params"]),
                     comm_scheme="broadcast", num_streams=1,
-                    injects_faults=cfg.faults is not None)
+                    injects_faults=cfg.faults is not None,
+                    wire_schema=schema)

@@ -23,6 +23,7 @@ from repro.core.baselines import common
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import transport as transport_lib
 from repro.federated.client import make_loss
 from repro.kernels import ops
 
@@ -35,14 +36,24 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
     loss = make_loss(apply_fn)
-    common.reject_transport(
-        cfg.transport, "fedfomo",
-        "clients exchange models peer-to-peer (client_mixing) — there "
-        "is no single PS uplink delta to quantize")
     layout = flat.LayoutTable.build(params0)
+    # uplink: each participant ships its model delta to the PS (EF
+    # client-side); downlink: peers RELAY the already-quantized uploads
+    # (priced compressed, no second stage — re-quantizing a dequantized
+    # payload would double the noise), so the loss matrix scores exactly
+    # the models the wire carried
+    schema = transport_lib.single_delta_schema(
+        "fedfomo", layout.dim,
+        downlink=(transport_lib.Stream("peer_models", layout.dim,
+                                       coding="relay"),))
 
     def init(key, data):
-        return {"params": layout.slab(params0, data.num_clients)}
+        state = {"params": layout.slab(params0, data.num_clients)}
+        if cfg.transport is not None:
+            state["ef"] = jnp.zeros(
+                (data.num_clients, schema.width_aligned("uplink")),
+                jnp.float32)
+        return state
 
     def _train_val(params_c, x, y, key, keys=None):
         """Local SGD on the train split; returns the updated models plus
@@ -90,43 +101,59 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return _fomo_mix(updated, layout.ravel(updated), x_val, y_val)
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
-    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
+    tstage = transport_lib.make_wire_stage(schema, cfg.transport, "uplink")
 
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def _masked(params, idx, mask, x, y, key):
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def _masked(params, ef, idx, mask, x, y, key):
         # client-side mixing restricted to the masked cohort: each
         # participant downloads only the real cohort models (len(cohort),
         # not m, DL streams per client); absent clients keep their last
-        # model and pad slots are dropped by the scatter. The fault
-        # stage rewrites the shared models BEFORE the loss matrix is
-        # scored, and the FINAL mask zeroes demoted columns — a
-        # guarded/trimmed model is never downloaded by peers.
+        # model and pad slots are dropped by the scatter. The transport
+        # stage quantizes the PS uploads FIRST (peers relay what the
+        # wire carried — the loss matrix scores dequantized models), the
+        # fault stage rewrites them BEFORE the matrix is scored, and the
+        # FINAL mask zeroes demoted columns — a guarded/trimmed model is
+        # never downloaded by peers.
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         pc = sops.gather(params, safe)
         updated, x_val, y_val = _train_val(
             layout.unravel(pc), x[safe], y[safe], None,
             keys=common.cohort_keys(key, x.shape[0], safe))
         flat = layout.ravel(updated)
+        if tstage is not None:
+            flat, efc = tstage(pc, flat, sops.gather(ef, safe))
+            ef = sops.scatter(ef, idx, efc)
+            updated = layout.unravel(flat)
         if ustage is not None:
             flat, idx, mask = ustage(pc, flat, idx, mask, key, x.shape[0])
             updated = layout.unravel(flat)  # the scored models = the wire
         mixed = _fomo_mix(updated, flat, x_val, y_val,
                           mask.astype(jnp.float32))
-        return sops.scatter(params, idx, mixed)
+        return sops.scatter(params, idx, mixed), ef
 
     def dense(state, data, key):
         new = _round(state["params"], data.x, data.y, key)
         return {"params": new}, {"streams": data.num_clients}
 
     def masked(state, data, key, idx, mask):
-        new = _masked(state["params"], idx, mask, data.x, data.y, key)
-        return {"params": new}, {"streams": int(mask.sum())}  # host mask
+        new, ef = _masked(state["params"], state.get("ef"), idx, mask,
+                          data.x, data.y, key)
+        out = dict(state, params=new)
+        if ef is not None:
+            out["ef"] = ef
+        return out, {"streams": int(mask.sum())}  # host mask
 
+    shard_keys = (("params", "ef") if cfg.transport is not None
+                  else ("params",))
     return Strategy("fedfomo", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
-                                        sops=sops, upload_stage=ustage),
+                                        sops=sops, shard_keys=shard_keys,
+                                        upload_stage=ustage,
+                                        transport=cfg.transport),
                     lambda s: layout.unravel(s["params"]),
                     comm_scheme="client_mixing",
-                    injects_faults=cfg.faults is not None)
+                    injects_faults=cfg.faults is not None,
+                    wire_schema=schema)

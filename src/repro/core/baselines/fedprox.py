@@ -9,6 +9,7 @@ from repro.core.baselines import common
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import transport as transport_lib
 
 
 @register("fedprox")
@@ -26,11 +27,18 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     )
 
     layout = flat.LayoutTable.build(params0)
+    schema = transport_lib.single_delta_schema(
+        "fedprox", layout.dim,
+        downlink=(transport_lib.Stream("model", layout.dim),))
 
     def init(key, data):
         state = {"params": layout.slab(params0, data.num_clients)}
         if cfg.transport is not None:
-            state["ef"] = jnp.zeros_like(state["params"])
+            state["ef"] = jnp.zeros(
+                (data.num_clients, schema.width_aligned("uplink")),
+                jnp.float32)
+            state["ef_dl"] = jnp.zeros(
+                (1, schema.width_aligned("downlink")), jnp.float32)
         return state
 
     @jax.jit
@@ -40,17 +48,16 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return layout.ravel(aggregation.fedavg(updated, n,
                                                impl=kernel_impl))
 
-    def _train(pc, xc, yc, keys, n):
+    def _train(pc, xc, yc, keys, n, *_):
         updated, _ = local(pc, xc, yc, None, pc, keys=keys)  # center = start
         return updated
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
-    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
-    _masked = common.make_masked_round(
-        _train, lambda params, updated, idx, mask, n:
-        sops.fedavg_mix(params, updated, idx, mask, n,
-                        impl=kernel_impl), sops=sops, upload_stage=ustage,
-        layout=layout, transport=cfg.transport)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
+    _masked = common.make_fedavg_masked_round(
+        local, train=_train, impl=kernel_impl, sops=sops,
+        upload_stage=ustage, layout=layout, transport=cfg.transport,
+        schema=schema)
 
     def dense(state, data, key):
         new = _round(state["params"], data.n, data.x, data.y, key)
@@ -61,13 +68,15 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             new = _masked(state["params"], idx, mask, data.x, data.y, key,
                           data.n)
             return dict(state, params=new), {"streams": 1}
-        new, ef = _masked(state["params"], state["ef"], idx, mask, data.x,
-                          data.y, key, data.n)
-        return dict(state, params=new, ef=ef), {"streams": 1}
+        (new, ef_dl), ef = _masked(state["params"], state["ef"], idx, mask,
+                                   data.x, data.y, key, data.n,
+                                   state["ef_dl"])
+        return dict(state, params=new, ef=ef, ef_dl=ef_dl), {"streams": 1}
 
     amasked, masked_jit = common.fedavg_async_wrapper(
         _train, params0, cfg.async_buffer, impl=kernel_impl, sops=sops,
-        upload_stage=ustage, layout=layout, transport=cfg.transport)
+        upload_stage=ustage, layout=layout, transport=cfg.transport,
+        schema=schema)
 
     shard_keys = (("params", "ef") if cfg.transport is not None
                   else ("params",))
@@ -81,4 +90,5 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                         transport=cfg.transport),
                     lambda s: layout.unravel(s["params"]),
                     comm_scheme="broadcast", num_streams=1,
-                    injects_faults=cfg.faults is not None)
+                    injects_faults=cfg.faults is not None,
+                    wire_schema=schema)

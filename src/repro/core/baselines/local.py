@@ -9,6 +9,7 @@ from repro.core.baselines import common
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import transport as transport_lib
 
 
 @register("local")
@@ -19,6 +20,8 @@ def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
     )
 
     layout = flat.LayoutTable.build(params0)
+    # no downlink: each participant keeps its own update on the server
+    schema = transport_lib.single_delta_schema("local", layout.dim)
 
     def init(key, data):
         state = {"params": layout.slab(params0, data.num_clients)}
@@ -36,13 +39,13 @@ def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
         return updated
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
-    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
     # no mixing: each participant keeps its own update (pad slots are
     # dropped by the sentinel-index scatter)
     _masked = common.make_masked_round(
         _train, lambda params, updated, idx, mask: sops.scatter(
             params, idx, updated), sops=sops, upload_stage=ustage,
-        layout=layout, transport=cfg.transport)
+        layout=layout, transport=cfg.transport, schema=schema)
 
     def dense(state, data, key):
         return {"params": _round(state["params"], data.x, data.y, key)}, \
@@ -67,4 +70,5 @@ def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
                                         transport=cfg.transport),
                     lambda s: layout.unravel(s["params"]),
                     comm_scheme="broadcast", num_streams=0,
-                    injects_faults=cfg.faults is not None)
+                    injects_faults=cfg.faults is not None,
+                    wire_schema=schema)

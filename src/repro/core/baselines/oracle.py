@@ -10,6 +10,7 @@ from repro.core.baselines.common import group_average
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import transport as transport_lib
 
 
 @register("oracle")
@@ -21,6 +22,12 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     )
 
     layout = flat.LayoutTable.build(params0)
+    # groupcast downlink stays raw: group means are weight-scale values
+    # with no per-receiver reference to delta-code against
+    schema = transport_lib.single_delta_schema(
+        "oracle", layout.dim,
+        downlink=(transport_lib.Stream("group_models", layout.dim,
+                                       coding="raw"),))
 
     def init(key, data):
         num_groups = int(jnp.max(data.group)) + 1
@@ -45,7 +52,7 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         return updated
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
-    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
 
     def _mix(params, updated, idx, mask, group, n, onehot):
         # per-group FedAvg over the cohort members of each ground-truth
@@ -61,7 +68,8 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
     _masked = common.make_masked_round(_train, _mix, sops=sops,
                                        upload_stage=ustage, layout=layout,
-                                       transport=cfg.transport)
+                                       transport=cfg.transport,
+                                       schema=schema)
 
     def dense(state, data, key):
         new = _round(state["params"], data.group, data.n, data.x, data.y,
@@ -91,4 +99,5 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                         transport=cfg.transport),
                     lambda s: layout.unravel(s["params"]),
                     comm_scheme="groupcast",
-                    injects_faults=cfg.faults is not None)
+                    injects_faults=cfg.faults is not None,
+                    wire_schema=schema)

@@ -11,12 +11,14 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import aggregation, flat
 from repro.core.baselines import common
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.data.loader import epoch_batches
 from repro.federated import faults as faults_lib
+from repro.federated import transport as transport_lib
 from repro.federated.client import client_vmap, make_loss
 
 
@@ -60,19 +62,26 @@ def make_pfedme(apply_fn, params0,
     run_clients = client_vmap(client_update, chunk_size=cfg.chunk_size,
                               mesh=cfg.mesh)
 
-    common.reject_transport(
-        cfg.transport, "pfedme",
-        "the β-mix pulls each w_i toward the cohort average of the "
-        "EXACT uploads; quantizing w_i would need EF on both the server "
-        "mix and the client-side (1-β) retention term")
     layout = flat.LayoutTable.build(params0)
+    # uplink: the w_i delta, quantized with client-side EF; the (1-β)
+    # retention term is client-side physical state and keeps the RAW w_i
+    # (no second EF stream needed). Downlink: the β-mix average is a
+    # weight-scale value with no shared receiver reference — raw.
+    schema = transport_lib.single_delta_schema(
+        "pfedme", layout.dim,
+        downlink=(transport_lib.Stream("average", layout.dim,
+                                       coding="raw"),))
 
     def init(key, data):
         m = data.num_clients
-        return {
+        state = {
             "params": layout.slab(params0, m),  # local copies w_i
             "personal": layout.slab(params0, m),  # φ_i
         }
+        if cfg.transport is not None:
+            state["ef"] = jnp.zeros(
+                (m, schema.width_aligned("uplink")), jnp.float32)
+        return state
 
     @jax.jit
     def _round(w, n, x, y, key):
@@ -84,10 +93,11 @@ def make_pfedme(apply_fn, params0,
         return layout.ravel(mixed), layout.ravel(phi)
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
-    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
+    tstage = transport_lib.make_wire_stage(schema, cfg.transport, "uplink")
 
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
-    def _masked(w, personal, idx, mask, n, x, y, key):
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+    def _masked(w, personal, ef, idx, mask, n, x, y, key):
         # masked cohort-only Moreau steps; the β-mix pulls participants
         # toward the zero-weight-padded cohort average, absent clients and
         # pad slots keep their last w_i / φ_i. The FedAvg broadcast here
@@ -98,38 +108,57 @@ def make_pfedme(apply_fn, params0,
         wc = sops.gather(w, safe)
         new_wc_t, phic_t = run_clients(layout.unravel(wc), x[safe],
                                        y[safe], keys)
-        new_wc = layout.ravel(new_wc_t)
+        raw_wc = layout.ravel(new_wc_t)
         phic = layout.ravel(phic_t)
+        # the server's avg consumes the DEQUANTIZED wire upload; the
+        # (1-β) retention keeps the client's raw w_i (client-side state
+        # the wire never touched)
+        if tstage is not None:
+            wire, efc = tstage(wc, raw_wc, sops.gather(ef, safe))
+            ef = sops.scatter(ef, idx, efc)
+        else:
+            wire = raw_wc
         # the fault/robust stage rewrites the w_i UPLOAD; φ_i is
         # client-side and keeps the original slots (like Ditto's
         # personal models). Demoted w slots drop out of the scatter.
         widx, wmask = idx, mask
         if ustage is not None:
-            new_wc, widx, wmask = ustage(wc, new_wc, idx, mask, key,
-                                         x.shape[0])
-        avg = common.fedavg_masked_mix(wc, new_wc, widx, wmask, n,
+            wire, widx, wmask = ustage(wc, wire, idx, mask, key,
+                                       x.shape[0])
+            if tstage is None:
+                raw_wc = wire  # pre-schema faults-only trace, bit-exact
+        avg = common.fedavg_masked_mix(wc, wire, widx, wmask, n,
                                        impl=kernel_impl)
-        mixed = (1 - beta) * new_wc + beta * avg
+        mixed = (1 - beta) * raw_wc + beta * avg
         return (sops.scatter(w, widx, mixed),
-                sops.scatter(personal, idx, phic))
+                sops.scatter(personal, idx, phic), ef)
 
     def dense(state, data, key):
         w, phi = _round(state["params"], data.n, data.x, data.y, key)
         return {"params": w, "personal": phi}, {"streams": 1}
 
     def masked(state, data, key, idx, mask):
-        w, phi = _masked(state["params"], state["personal"], idx, mask,
-                         data.n, data.x, data.y, key)
-        return {"params": w, "personal": phi}, {"streams": 1}
+        w, phi, ef = _masked(state["params"], state["personal"],
+                             state.get("ef"), idx, mask, data.n, data.x,
+                             data.y, key)
+        out = {"params": w, "personal": phi}
+        if ef is not None:
+            out["ef"] = ef
+        return out, {"streams": 1}
 
+    shard_keys = ("params", "personal")
+    if cfg.transport is not None:
+        shard_keys += ("ef",)
     return Strategy("pfedme", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
                                         sops=sops,
-                                        shard_keys=("params", "personal"),
-                                        upload_stage=ustage),
+                                        shard_keys=shard_keys,
+                                        upload_stage=ustage,
+                                        transport=cfg.transport),
                     lambda s: layout.unravel(s["personal"]),
                     comm_scheme="broadcast",
                     num_streams=1,
-                    injects_faults=cfg.faults is not None)
+                    injects_faults=cfg.faults is not None,
+                    wire_schema=schema)

@@ -4,6 +4,17 @@ Local step: θ ← θ − η(∇f_i(θ) − c_i + c). Control update (option II)
 c_i⁺ = c_i − c + (θ_global − θ_i⁺)/(K·η); with full participation the
 server sets c ← mean_i c_i⁺ and θ ← mean_i θ_i⁺. Paper footnote 2 uses
 η=0.01, E=5, no momentum.
+
+Wire schema: the SCAFFOLD upload is genuinely TWO streams — the model
+delta and the control-variate delta — so its wire slab is the (c, 2·W)
+concatenation ``[post | c_i⁺]`` against ``[pre | c_i]``, each half
+quantized with its own error-feedback slice (quantizing only the model
+half would bias the c_i update the server derives from it, which is why
+the pre-schema engine rejected transport here). The downlink mirrors it:
+``[new global | new c]`` delta-coded against the broadcast-uniform
+``[old global | old c]`` with one shared server-side EF row. The fault
+stage operates on the same concatenated wire, and the per-stream finite
+guard demotes a slot when EITHER half goes non-finite.
 """
 from __future__ import annotations
 
@@ -17,6 +28,8 @@ from repro.core.baselines import common
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import mesh as mesh_lib
+from repro.federated import transport as transport_lib
 
 
 @register("scaffold")
@@ -34,21 +47,34 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
         chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
 
-    common.reject_transport(
-        cfg.transport, "scaffold",
-        "the uplink carries the control variate alongside the model "
-        "delta; quantizing only the model half would bias the c_i "
-        "update the server derives from it")
     layout = flat.LayoutTable.build(params0)
+    schema = transport_lib.WireSchema(
+        "scaffold",
+        uplink=(transport_lib.Stream("delta", layout.dim),
+                transport_lib.Stream("control_delta", layout.dim)),
+        downlink=(transport_lib.Stream("model", layout.dim),
+                  transport_lib.Stream("control", layout.dim)),
+    )
+    width = layout.dim_aligned  # one stream's slab slice
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
+    tstage = transport_lib.make_wire_stage(schema, cfg.transport, "uplink")
+    dstage = transport_lib.make_wire_stage(schema, cfg.transport,
+                                           "downlink")
 
     def init(key, data):
         m = data.num_clients
         stacked = layout.slab(params0, m)
-        return {
+        state = {
             "params": stacked,
             "c_i": jnp.zeros_like(stacked),
             "c": jnp.zeros_like(stacked),  # stacked copy of the global c
         }
+        if tstage is not None:
+            state["ef"] = jnp.zeros(
+                (m, schema.width_aligned("uplink")), jnp.float32)
+            state["ef_dl"] = jnp.zeros(
+                (1, schema.width_aligned("downlink")), jnp.float32)
+        return state
 
     @jax.jit
     def _round(params, c_i, c, n, x, y, key):
@@ -66,14 +92,15 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
         return new_params, new_c_i, new_c
 
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
-    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
 
-    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
-    def _masked(params, c_i, c, idx, mask, n, x, y, key):
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4))
+    def _masked(params, c_i, c, ef, ef_dl, idx, mask, n, x, y, key):
         # Option II with partial participation: only the cohort refreshes
         # its c_i (pad slots are dropped by the sentinel-index scatter);
         # the server control c re-averages ALL stored c_i (stale ones
         # included) and the new global mixes the cohort's masked uploads.
+        # ``ef``/``ef_dl`` are None when transport is off (inert donation
+        # slots — the trace is exactly stage-free).
         steps = (x.shape[1] // cfg.batch_size) * cfg.epochs
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         pc = sops.gather(params, safe)
@@ -83,23 +110,61 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
                            (layout.unravel(cic), layout.unravel(cc)),
                            keys=keys)
         post = layout.ravel(updated)
-        if ustage is not None:
-            # the fault/robust stage rewrites the MODEL upload; the
-            # control update below then derives from the sanitized
-            # upload, and demoted slots (sentinel idx) drop out of BOTH
-            # scatters — a faulty client's stale c_i survives untouched
-            post, idx, mask = ustage(pc, post, idx, mask, key, x.shape[0])
         inv = 1.0 / (steps * cfg.lr)
-        new_cic = cic - cc + inv * (pc - post)
+        if tstage is not None or ustage is not None:
+            # the wire carries BOTH halves: the client derives its new
+            # control from its RAW local model (a client-side physical
+            # quantity — the wire never saw it), then the transport stage
+            # quantizes each stream slice of [model | control] with its
+            # own EF slice, and the fault/robust stage corrupts/sanitizes
+            # exactly what the wire carried
+            new_cic = cic - cc + inv * (pc - post)
+            wire_pre = jnp.concatenate([pc, cic], axis=-1)
+            wire_post = jnp.concatenate([post, new_cic], axis=-1)
+            if tstage is not None:
+                wire_post, efc = tstage(wire_pre, wire_post,
+                                        sops.gather(ef, safe))
+                ef = sops.scatter(ef, idx, efc)
+            if ustage is not None:
+                wire_post, idx, mask = ustage(wire_pre, wire_post, idx,
+                                              mask, key, x.shape[0])
+            post = wire_post[..., :width]
+            new_cic = wire_post[..., width:]
+        else:
+            new_cic = cic - cc + inv * (pc - post)
         c_i_full = sops.scatter(c_i, idx, new_cic)
-        new_params = sops.fedavg_mix(params, post, idx, mask, n,
-                                     impl=kernel_impl)
-        # cross-row mean all-reduces under a sharded layout; re-pin the
-        # broadcast result to the committed row sharding
-        new_c = sops.constrain(
-            jnp.broadcast_to(jnp.mean(c_i_full, axis=0),
-                             c_i_full.shape) + 0.0)
-        return new_params, c_i_full, new_c
+        if dstage is None:
+            new_params = sops.fedavg_mix(params, post, idx, mask, n,
+                                         impl=kernel_impl)
+            # cross-row mean all-reduces under a sharded layout; re-pin
+            # the broadcast result to the committed row sharding
+            new_c = sops.constrain(
+                jnp.broadcast_to(jnp.mean(c_i_full, axis=0),
+                                 c_i_full.shape) + 0.0)
+            return new_params, c_i_full, new_c, ef, ef_dl
+        # compressed downlink: both broadcast rows delta-coded against
+        # the receivers' shared reference — row 0 of the broadcast-
+        # uniform [params | c] state — with one server-side EF row; an
+        # all-masked cohort keeps everything unchanged (no wire activity)
+        safe = aggregation.safe_gather_index(idx, n.shape[0])
+        w = aggregation.masked_fedavg_weights(jnp.take(n, safe), mask)
+        mixed = aggregation.user_centric(post, w, impl=kernel_impl)
+        mean_c = jnp.mean(c_i_full, axis=0, keepdims=True)
+        dl_pre = jnp.concatenate([params[0:1], c[0:1]], axis=-1)
+        dl_post = jnp.concatenate([mixed, mean_c], axis=-1)
+        served, new_efdl = dstage(dl_pre, dl_post, ef_dl)
+        alive = jnp.any(mask)
+        ef_dl = jnp.where(alive, new_efdl, ef_dl)
+        sm, sc = served[..., :width], served[..., width:]
+        if sops.sharded:
+            new_params = mesh_lib.shard_broadcast_rows(params, sm, alive,
+                                                       sops.mesh)
+            new_c = mesh_lib.shard_broadcast_rows(c, sc, alive, sops.mesh)
+        else:
+            new_params = jnp.where(
+                alive, jnp.broadcast_to(sm, params.shape), params)
+            new_c = jnp.where(alive, jnp.broadcast_to(sc, c.shape), c)
+        return new_params, c_i_full, new_c, ef, ef_dl
 
     def dense(state, data, key):
         p, ci, c = _round(state["params"], state["c_i"], state["c"],
@@ -107,18 +172,30 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
         return {"params": p, "c_i": ci, "c": c}, {"streams": 1}
 
     def masked(state, data, key, idx, mask):
-        p, ci, c = _masked(state["params"], state["c_i"], state["c"],
-                           idx, mask, data.n, data.x, data.y, key)
-        return {"params": p, "c_i": ci, "c": c}, {"streams": 1}
+        p, ci, c, ef, ef_dl = _masked(
+            state["params"], state["c_i"], state["c"], state.get("ef"),
+            state.get("ef_dl"), idx, mask, data.n, data.x, data.y, key)
+        out = {"params": p, "c_i": ci, "c": c}
+        if ef is not None:
+            out["ef"] = ef
+        if ef_dl is not None:
+            out["ef_dl"] = ef_dl
+        return out, {"streams": 1}
 
+    # ef_dl is a (1, ·) broadcast row — replicate-committed, not sharded
+    shard_keys = ("params", "c_i", "c")
+    if tstage is not None:
+        shard_keys += ("ef",)
     return Strategy("scaffold", init,
                     common.cohort_round(dense, masked, masked_jit=_masked,
                                         mesh=cfg.mesh,
                                         async_cfg=cfg.async_buffer,
                                         sops=sops,
-                                        shard_keys=("params", "c_i", "c"),
-                                        upload_stage=ustage),
+                                        shard_keys=shard_keys,
+                                        upload_stage=ustage,
+                                        transport=cfg.transport),
                     lambda s: layout.unravel(s["params"]),
                     comm_scheme="broadcast",
                     num_streams=1,
-                    injects_faults=cfg.faults is not None)
+                    injects_faults=cfg.faults is not None,
+                    wire_schema=schema)

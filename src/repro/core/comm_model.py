@@ -36,13 +36,19 @@ batch. :func:`sample_arrival_times` draws per-client completion times
 from the same shifted-exponential compute + ρ-asymmetric link model for
 trace replays that want realized (not expected) arrivals.
 
-Quantized uplink transport (``FedConfig.transport``): the wire carries
-1 B/param plus one float32 scale per chunk instead of 4 B/param, so
-:func:`transport_payload_bytes` reprices the per-client upload and
-:func:`transport_ul_scale` shrinks the ``t_ul`` term of every round-time
-function (``(1 + 4/chunk)/4`` ≈ 0.258 at the default chunk of 128 — a
-~3.88× UL reduction). The downlink is untouched: the server broadcasts
-full-precision models either way.
+Quantized wire transport (``FedConfig.transport``): a quantized stream
+carries 1 B/param plus one float32 scale per chunk instead of 4 B/param.
+Pricing is per STREAM via the strategy's declared wire schema
+(:func:`wire_bytes` — duck-typed on ``.width``/``.coding`` so this
+module stays numpy-only): ``delta`` and ``relay`` streams compress,
+``raw`` streams ship 4 B/coordinate regardless of transport. Every
+round-time/bytes function takes an optional ``schema``; the uplink AND
+the downlink terms scale by the schema's compressed/raw byte ratio, so
+a compressed broadcast (server-side EF) shrinks Tdl exactly like the
+quantized upload shrinks Tul. ``schema=None`` falls back to the scalar
+pre-schema pricing — :func:`transport_payload_bytes` /
+:func:`transport_ul_scale` on the uplink, raw downlink — which a
+single-delta-uplink schema reproduces exactly.
 
 TPU-adaptation note (DESIGN.md §2): on a pod these DL streams become ICI
 collective volume; this module keeps the paper's analytic wireless model so
@@ -83,6 +89,51 @@ def transport_payload_bytes(model_bytes: int, transport=None) -> int:
         raise ValueError(f"transport.chunk must be positive, got {chunk}")
     d = int(model_bytes) / 4.0  # float32 params on the dense wire
     return int(math.ceil(d + 4.0 * math.ceil(d / chunk)))
+
+
+def wire_bytes(schema, transport=None, direction: str = "uplink") -> int:
+    """Bytes ONE transmission of a direction's declared streams costs.
+
+    Replaces the scalar :func:`transport_payload_bytes` for
+    schema-declaring strategies: each stream of
+    ``schema.uplink``/``schema.downlink`` is priced by its TRUE
+    coordinate count and coding — ``raw`` streams (and every stream when
+    ``transport`` is None) cost ``4·width`` (float32); quantized
+    ``delta`` streams, and ``relay`` streams (whose payload some other
+    hop already quantized), cost ``width + 4·ceil(width/chunk)``
+    (1 B/coordinate + one f32 scale per chunk). Duck-typed on the
+    stream's ``width``/``coding`` and the transport's ``chunk`` so this
+    module stays numpy-only.
+
+    A transmission is one emission of the direction's streams: per
+    uploading client on the uplink; per downlink stream-slot (broadcast
+    = 1, groupcast = m_t, unicast/client_mixing = per receiver) on the
+    downlink — the scheme multiplicity lives in
+    :func:`uplink_bytes_per_round` / :func:`downlink_bytes_per_round`.
+    """
+    streams = schema.uplink if direction == "uplink" else schema.downlink
+    total = 0
+    for s in streams:
+        w = int(s.width)
+        if transport is None or s.coding == "raw":
+            total += 4 * w
+        else:
+            chunk = int(transport.chunk)
+            if chunk <= 0:
+                raise ValueError(
+                    f"transport.chunk must be positive, got {chunk}")
+            total += w + 4 * math.ceil(w / chunk)
+    return total
+
+
+def _wire_scale(schema, transport, direction: str) -> float:
+    """Compressed/raw byte ratio of a direction (1.0 when inapplicable)."""
+    if schema is None:
+        return transport_ul_scale(transport) if direction == "uplink" else 1.0
+    raw = wire_bytes(schema, None, direction)
+    if raw == 0:
+        return 1.0
+    return wire_bytes(schema, transport, direction) / raw
 
 
 def transport_ul_scale(transport=None) -> float:
@@ -138,26 +189,30 @@ def expected_compute_time(p: SystemParams,
 
 def round_time(p: SystemParams, scheme: str, num_streams: int | None = None,
                cohort_size: int | None = None, *,
-               transport=None) -> float:
+               transport=None, schema=None) -> float:
     """Wall-clock time of one communication round under §V-D.
 
     ``cohort_size`` prices a partial-participation round: only the cohort
     computes (straggler max over c), and only the cohort is served on the
-    downlink. ``transport`` (a quantized-uplink config, None = raw f32)
-    shrinks the UL transmission term by :func:`transport_ul_scale` — the
-    downlink still ships full-precision models, as the server does.
+    downlink. ``transport`` (a quantized-wire config, None = raw f32)
+    shrinks the UL transmission term — and, with ``schema`` (the
+    strategy's wire schema), BOTH link terms by the per-direction
+    compressed/raw byte ratio of :func:`wire_bytes`; ``schema=None``
+    keeps the pre-schema pricing (UL by :func:`transport_ul_scale`,
+    downlink full-precision).
     """
     c = _active(p.m, cohort_size)
-    t_ul = p.rho * p.t_dl * transport_ul_scale(transport)
+    t_ul = p.rho * p.t_dl * _wire_scale(schema, transport, "uplink")
+    t_dl = p.t_dl * _wire_scale(schema, transport, "downlink")
     t_comp = expected_compute_time(p, cohort_size)
     if scheme == "broadcast":
-        dl = p.t_dl
+        dl = t_dl
     elif scheme == "groupcast":
-        dl = min(_require_streams(num_streams, scheme), c) * p.t_dl
+        dl = min(_require_streams(num_streams, scheme), c) * t_dl
     elif scheme == "unicast":
-        dl = c * p.t_dl
+        dl = c * t_dl
     elif scheme == "client_mixing":  # FedFomo-style client-side aggregation
-        dl = c * p.t_dl
+        dl = c * t_dl
     else:
         raise ValueError(f"unknown scheme {scheme!r}")
     return dl + t_comp + t_ul
@@ -167,7 +222,7 @@ def deadline_round_time(p: SystemParams, scheme: str,
                         num_streams: int | None = None,
                         cohort_size: int | None = None, *,
                         deadline: float = math.inf, compute=None,
-                        transport=None):
+                        transport=None, schema=None):
     """:func:`round_time` with a straggler deadline; returns the price
     AND who got cut.
 
@@ -205,18 +260,19 @@ def deadline_round_time(p: SystemParams, scheme: str,
         c = compute.shape[0]
     dropped = compute > deadline
     survivors = int((~dropped).sum())
-    t_ul = p.rho * p.t_dl * transport_ul_scale(transport)
+    t_ul = p.rho * p.t_dl * _wire_scale(schema, transport, "uplink")
+    t_dl = p.t_dl * _wire_scale(schema, transport, "downlink")
     if survivors == 0:
         # everyone timed out: the server waits out the deadline (or the
         # fastest client under an infinite one) and serves nobody
         return float(min(deadline, compute.min())), dropped
     t_comp = float(deadline) if dropped.any() else float(compute.max())
     if scheme == "broadcast":
-        dl = p.t_dl
+        dl = t_dl
     elif scheme == "groupcast":
-        dl = min(_require_streams(num_streams, scheme), survivors) * p.t_dl
+        dl = min(_require_streams(num_streams, scheme), survivors) * t_dl
     elif scheme in ("unicast", "client_mixing"):
-        dl = survivors * p.t_dl
+        dl = survivors * t_dl
     else:
         raise ValueError(f"unknown scheme {scheme!r}")
     return dl + t_comp + t_ul, dropped
@@ -264,7 +320,7 @@ def async_round_time(p: SystemParams, scheme: str,
                      num_streams: int | None = None,
                      cohort_size: int | None = None, *, flush_k: int,
                      applied: int | None = None,
-                     transport=None) -> float:
+                     transport=None, schema=None) -> float:
     """Wall-clock §V-D price of one buffered-async round.
 
     Same ``dl + compute + ul`` structure as :func:`round_time`, with two
@@ -288,7 +344,11 @@ def async_round_time(p: SystemParams, scheme: str,
     aggregation.
     """
     c = _active(p.m, cohort_size)
-    t_ul = p.rho * p.t_dl * transport_ul_scale(transport)
+    # the async UPLINK compresses per schema like the barrier round; the
+    # async DOWNLINK stays raw f32 (a flush rewrites arbitrary row
+    # subsets — no per-receiver reference to delta-code against), so the
+    # dl terms below deliberately keep the raw t_dl
+    t_ul = p.rho * p.t_dl * _wire_scale(schema, transport, "uplink")
     if applied is not None and applied <= 0:
         return expected_compute_time(p, cohort_size) + t_ul
     b = min(min(int(flush_k), c) if applied is None else int(applied), p.m)
@@ -306,29 +366,41 @@ def async_round_time(p: SystemParams, scheme: str,
 
 def rounds_to_time(p: SystemParams, scheme: str, num_rounds: int,
                    num_streams: int | None = None,
-                   cohort_size: int | None = None, *, transport=None):
+                   cohort_size: int | None = None, *, transport=None,
+                   schema=None):
     """Cumulative time axis (length num_rounds) for accuracy-vs-time plots."""
-    rt = round_time(p, scheme, num_streams, cohort_size, transport=transport)
+    rt = round_time(p, scheme, num_streams, cohort_size, transport=transport,
+                    schema=schema)
     return [rt * (t + 1) for t in range(num_rounds)]
 
 
 def downlink_bytes_per_round(model_bytes: int, scheme: str, m: int,
                              num_streams: int | None = None,
-                             cohort_size: int | None = None) -> int:
-    """Raw DL payload per round — the wireless quantity the paper trades."""
+                             cohort_size: int | None = None, *,
+                             transport=None, schema=None) -> int:
+    """DL payload per round — the wireless quantity the paper trades.
+
+    One downlink transmission costs ``model_bytes`` raw, or the schema's
+    per-stream :func:`wire_bytes` when the strategy declares one (a
+    compressed ``delta`` broadcast with server-side EF is cheaper than
+    raw; a ``raw``-coded downlink like the clustered centroids is not);
+    the scheme then sets how many transmissions a round needs.
+    """
     c = _active(m, cohort_size)
+    unit = (wire_bytes(schema, transport, "downlink")
+            if schema is not None else int(model_bytes))
     if scheme == "broadcast":
-        return model_bytes
+        return unit
     if scheme == "groupcast":
-        return min(_require_streams(num_streams, scheme), c) * model_bytes
+        return min(_require_streams(num_streams, scheme), c) * unit
     if scheme in ("unicast", "client_mixing"):
-        return c * model_bytes
+        return c * unit
     raise ValueError(f"unknown scheme {scheme!r}")
 
 
 def uplink_bytes_per_round(model_bytes: int, scheme: str, m: int,
                            cohort_size: int | None = None, *,
-                           transport=None) -> int:
+                           transport=None, schema=None) -> int:
     """UL payload per round: every active client uploads ONE model.
 
     This holds for every scheme — broadcast/groupcast/unicast servers and
@@ -342,11 +414,15 @@ def uplink_bytes_per_round(model_bytes: int, scheme: str, m: int,
     ``transport`` prices the quantized wire per client via
     :func:`transport_payload_bytes` (dtype-aware: 1 B/param + one f32
     scale per chunk); ``None`` is the raw float32 payload, unchanged.
+    With a ``schema`` the per-client unit is the schema's per-stream
+    :func:`wire_bytes` instead — SCAFFOLD's two-stream upload honestly
+    costs twice a model, quantized or not.
     """
     if scheme not in ("broadcast", "groupcast", "unicast", "client_mixing"):
         raise ValueError(f"unknown scheme {scheme!r}")
-    return _active(m, cohort_size) * transport_payload_bytes(model_bytes,
-                                                             transport)
+    unit = (wire_bytes(schema, transport, "uplink") if schema is not None
+            else transport_payload_bytes(model_bytes, transport))
+    return _active(m, cohort_size) * unit
 
 
 def ici_collective_bytes(model_bytes: int, scheme: str, m: int,

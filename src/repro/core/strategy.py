@@ -62,6 +62,13 @@ class Strategy:
     # NaN/Inf uploads are expected and absorbed by the finite guard;
     # raising on them would defeat the graceful-degradation test).
     injects_faults: bool = False
+    # the strategy's declared wire layout (a
+    # :class:`repro.federated.transport.WireSchema`): named uplink and
+    # downlink streams with per-stream widths and codings, consumed by
+    # the transport stages and the §V-D byte pricing
+    # (``comm_model.wire_bytes``). None only for strategies that reject
+    # ``FedConfig.transport`` (ucfl_parallel).
+    wire_schema: Any = None
 
 
 def register(name):
@@ -139,17 +146,22 @@ class FedConfig:
     bit-identical.
 
     ``transport`` (a :class:`repro.federated.transport.TransportConfig`,
-    or ``None`` = off) opts cohort rounds into quantized uplink
-    transport: clients upload int8/fp8 per-chunk-scaled model deltas,
-    dequantized before the masked mix inside the same jitted round (one
-    compiled shape), with per-client error-feedback accumulators in the
-    strategy state so compression noise stays unbiased — including under
-    ``w_refresh``, whose Δ/σ² estimation observes the dequantized
-    uploads. Supported by the strategies whose uplink is a single model
-    delta to the PS (ucfl full/clustered and the FedAvg family, barrier
-    and buffered-async); the rest raise at construction. Requires cohort
-    rounds (the dense path has no upload stage). ``None`` (the default)
-    keeps every existing trajectory bit-identical.
+    or ``None`` = off) opts cohort rounds into quantized wire transport.
+    Each strategy declares a :class:`repro.federated.transport.WireSchema`
+    — named uplink and downlink streams, each a slab-width slice with
+    its own coding and its own error-feedback accumulator — and the
+    transport stages run per stream inside the same jitted round (one
+    compiled shape): ``delta`` streams travel int8/fp8 per-chunk-scaled
+    with EF (client-side on the uplink, server-side on the downlink),
+    ``raw`` streams stay float32, ``relay`` streams forward payloads
+    another hop already quantized. Compression noise stays unbiased —
+    including under ``w_refresh``, whose Δ/σ² estimation observes the
+    dequantized uploads. Every strategy supports the knob except
+    ``ucfl_parallel`` (no PS wire to compress — it raises at
+    construction; see the capability matrix in
+    :mod:`repro.federated.transport`). Requires cohort rounds (the dense
+    path has no upload stage). ``None`` (the default) keeps every
+    existing trajectory bit-identical.
     """
     lr: float = 0.1
     momentum: float = 0.9

@@ -63,6 +63,7 @@ from repro.federated import async_buffer
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
 from repro.federated import transport as transport_lib
+from repro.kernels import ops
 
 
 def compute_collaboration(apply_fn, params0, data, *, var_batch_size=100,
@@ -129,13 +130,31 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     refresh_hook = common.w_refresh_hook(cfg.w_refresh)
     acfg = cfg.async_buffer
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
+    layout = flat.LayoutTable.build(params0)
+    # wire schema: one delta upload either way; full personalization also
+    # delta-codes its per-client downlink (each receiver's reference is
+    # its own round-start row), while the clustered variant's centroid
+    # groupcast stays raw — a centroid is not any receiver's old model
+    if num_streams is None:
+        schema = transport_lib.single_delta_schema(
+            "ucfl", layout.dim,
+            downlink=(transport_lib.Stream("personalized", layout.dim),))
+    else:
+        schema = transport_lib.single_delta_schema(
+            f"ucfl_k{num_streams}", layout.dim,
+            downlink=(transport_lib.Stream("centroids", layout.dim,
+                                           coding="raw"),))
     # fault injection / finite guard / robust rewrite of the upload slab
     # (None when both knobs are off — the bodies keep their exact trace)
-    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust)
+    ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
     # quantized uplink (None when off — exact stage-free trace); the EF
     # accumulator slab rides the params layout, shard_state included
-    tstage = transport_lib.make_stage(cfg.transport)
-    layout = flat.LayoutTable.build(params0)
+    tstage = transport_lib.make_wire_stage(schema, cfg.transport, "uplink")
+    # per-client downlink stage (full personalization only): the served
+    # row is delta-coded against the receiver's round-start model with a
+    # server-side per-client EF slab
+    dstage = transport_lib.make_wire_stage(schema, cfg.transport,
+                                           "downlink")
 
     def init(key, data):
         m = data.num_clients
@@ -164,6 +183,8 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             state["refresh"] = similarity.init_refresh_state(collab, m)
         if tstage is not None:
             state["ef"] = jnp.zeros_like(stacked)
+        if dstage is not None:
+            state["ef_dl"] = jnp.zeros_like(stacked)
         return state
 
     @functools.partial(jax.jit, static_argnames=("streams",))
@@ -192,14 +213,32 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             n_streams = jnp.sum(jnp.max(oc, axis=0) > 0)
         return rows, n_streams
 
+    def _serve(params, pc, post, rows, idx, mask, ef_dl):
+        # PS mix + downlink. dstage None (transport off, or the clustered
+        # raw groupcast) keeps the fused masked mix + scatter — the exact
+        # pre-schema trace. With the full variant's delta downlink the
+        # mix is materialized per cohort row (same O(c·d) math, unfused),
+        # delta-coded against each receiver's round-start row pc with the
+        # per-client server-side EF, and scattered at the ORIGINAL slots
+        # (sentinel-demoted slots drop — their receiver gets nothing, and
+        # keeps both its model and its EF row).
+        if dstage is None:
+            return (sops.mix_scatter_flat(params, post, rows, idx, mask,
+                                          impl=kernel_impl), ef_dl)
+        safe = aggregation.safe_gather_index(idx, params.shape[0])
+        mixed = ops.mix_aggregate(rows, post, impl=kernel_impl)
+        served, efdc = dstage(pc, mixed, sops.gather(ef_dl, safe))
+        ef_dl = sops.scatter(ef_dl, idx, efdc)
+        return sops.scatter(params, idx, served), ef_dl
+
     @functools.partial(jax.jit, static_argnames=("streams",),
-                       donate_argnums=(0, 1))
-    def _masked(params, ef, w, labels, onehot, idx, mask, x, y, key,
+                       donate_argnums=(0, 1, 2))
+    def _masked(params, ef, ef_dl, w, labels, onehot, idx, mask, x, y, key,
                 streams):
         # masked gather -> cohort local SGD -> (quantized transport) ->
-        # (fault/robust upload rewrite) -> fused masked mix + scatter.
-        # ``ef`` is None when transport is off (an empty pytree — its
-        # donation slot is inert and the trace is exactly stage-free).
+        # (fault/robust upload rewrite) -> masked mix + downlink serve.
+        # ``ef``/``ef_dl`` are None when the owning stage is off (empty
+        # pytrees — inert donation slots, exactly the stage-free trace).
         safe = aggregation.safe_gather_index(idx, x.shape[0])
         keys = common.cohort_keys(key, x.shape[0], safe)
         pc = sops.gather(params, safe)
@@ -217,14 +256,13 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             safe = aggregation.safe_gather_index(idx, x.shape[0])
         rows, n_streams = _mix_rows(w, labels, onehot, idx, mask, safe,
                                     streams)
-        new = sops.mix_scatter_flat(params, post, rows, idx, mask,
-                                    impl=kernel_impl)
-        return new, ef, n_streams
+        new, ef_dl = _serve(params, pc, post, rows, idx, mask, ef_dl)
+        return new, ef, ef_dl, n_streams
 
     @functools.partial(jax.jit, static_argnames=("streams",),
-                       donate_argnums=(0, 1, 2))
-    def _masked_refresh(params, ef, refresh, w, labels, onehot, idx, mask,
-                        n, x, y, key, streams):
+                       donate_argnums=(0, 1, 2, 3))
+    def _masked_refresh(params, ef, ef_dl, refresh, w, labels, onehot, idx,
+                        mask, n, x, y, key, streams):
         # masked gather -> cohort local SGD -> (quantized transport) ->
         # (fault/robust upload rewrite) -> streaming W refresh from the
         # uploads -> fused masked mix + scatter with the FRESH rows. The
@@ -254,9 +292,8 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                   mask, n)
         rows, n_streams = _mix_rows(w, labels, onehot, idx, mask, safe,
                                     streams)
-        new = sops.mix_scatter_flat(params, post, rows, idx, mask,
-                                    impl=kernel_impl)
-        return new, ef, refresh, w, n_streams
+        new, ef_dl = _serve(params, pc, post, rows, idx, mask, ef_dl)
+        return new, ef, ef_dl, refresh, w, n_streams
 
     amasked = _amasked_jit = None
     if acfg is not None:
@@ -331,7 +368,8 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
         def amasked(state, data, key, idx, mask):
             abuf = common.state_async_buffer(state, acfg, data.num_clients,
-                                             idx.shape[0], dim, sops)
+                                             idx.shape[0], dim, sops,
+                                             schema)
             new, ef, abuf, am = _amasked(
                 state["params"], state.get("ef"), abuf, state["W"],
                 state["labels"], state["cluster_onehot"], idx, mask,
@@ -351,22 +389,26 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
     def masked(state, data, key, idx, mask):
         if refresh_hook is None:
-            new, ef, n_streams = _masked(state["params"], state.get("ef"),
-                                         state["W"], state["labels"],
-                                         state["cluster_onehot"],
-                                         idx, mask, data.x, data.y, key,
-                                         state["streams"])
+            new, ef, ef_dl, n_streams = _masked(
+                state["params"], state.get("ef"), state.get("ef_dl"),
+                state["W"], state["labels"], state["cluster_onehot"],
+                idx, mask, data.x, data.y, key, state["streams"])
             out = dict(state, params=new)
             if ef is not None:
                 out["ef"] = ef
+            if ef_dl is not None:
+                out["ef_dl"] = ef_dl
             return out, {"streams": n_streams}
-        new, ef, refresh, w, n_streams = _masked_refresh(
-            state["params"], state.get("ef"), state["refresh"],
-            state["W"], state["labels"], state["cluster_onehot"], idx,
-            mask, data.n, data.x, data.y, key, state["streams"])
+        new, ef, ef_dl, refresh, w, n_streams = _masked_refresh(
+            state["params"], state.get("ef"), state.get("ef_dl"),
+            state["refresh"], state["W"], state["labels"],
+            state["cluster_onehot"], idx, mask, data.n, data.x, data.y,
+            key, state["streams"])
         out = dict(state, params=new, refresh=refresh, W=w)
         if ef is not None:
             out["ef"] = ef
+        if ef_dl is not None:
+            out["ef_dl"] = ef_dl
         return (out,
                 {"streams": n_streams, **common.staleness_metrics(refresh)})
 
@@ -377,7 +419,11 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         masked_jit = _masked_refresh
     else:
         masked_jit = _masked
-    shard_keys = ("params", "ef") if tstage is not None else ("params",)
+    shard_keys = ("params",)
+    if tstage is not None:
+        shard_keys += ("ef",)
+    if dstage is not None:
+        shard_keys += ("ef_dl",)
     return Strategy(
         name="ucfl" if num_streams is None else f"ucfl_k{num_streams}",
         init=init, round=common.cohort_round(
@@ -391,6 +437,7 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         skip_round=common.refresh_skip_round if refresh_hook is not None
         else None,
         injects_faults=cfg.faults is not None,
+        wire_schema=schema,
     )
 
 
@@ -415,7 +462,7 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             "the m× per-stream update stack has no single (c, d) upload "
             "slab for the fault/robust stage to rewrite — this idealized "
             "§V-E upper bound assumes honest clients by construction")
-    common.reject_transport(
+    transport_lib.unsupported(
         cfg.transport, "ucfl_parallel",
         "the m× per-stream update stack has no single (c, d) upload "
         "slab to quantize — the m× uplink cost is the point of this "

@@ -70,14 +70,23 @@ owner shard via the ``scatter`` hook of :func:`deposit`, and a flush's
 tiled all-gather of ``upd`` is the engine's only model-sized collective;
 the (B,) metadata stays replicated.
 
-Row width: ``upd`` is allocated at ``ops.aligned_dim(dim)`` — the flat
-feature dim padded to the 128-lane multiple — so the flush's fused
-``masked_mix_scatter`` against a flat single-leaf state always takes the
-aliased zero-copy kernel path (never a padding copy; see
-``masked_mix_scatter.padding_copy_needed``). Deposits zero-pad each
-(c, dim) row batch into the aligned width and flush consumers slice the
-mixed rows back to the true dim.
+Row width: ``upd`` rows are the strategy's uplink WIRE slab — the
+concatenated aligned stream widths of its
+:class:`~repro.federated.transport.WireSchema` (``init_buffer``'s
+``schema``), or ``ops.aligned_dim(dim)`` when no schema is given; both
+are 128-lane multiples, so the flush's fused ``masked_mix_scatter``
+against a flat single-leaf state always takes the aliased zero-copy
+kernel path (never a padding copy; see
+``masked_mix_scatter.padding_copy_needed``). Every strategy with a
+buffered-async body today has a single-delta uplink (the two widths
+coincide), but the deposit/flush machinery is width-agnostic: it banks
+whatever slab the wire carried. Deposits zero-pad narrower row batches
+into the buffer width and flush consumers slice the mixed rows back to
+the true dim. The async downlink stays raw f32 (see the transport
+capability matrix): a flush rewrites arbitrary row subsets, so there is
+no per-receiver reference to delta-code the broadcast against.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -91,8 +100,7 @@ def _pad_rows(rows, width: int):
     """Zero-pad a (c, d) row batch to the buffer's aligned row width."""
     if rows.shape[1] == width:
         return rows
-    return jnp.zeros((rows.shape[0], width), rows.dtype).at[
-        :, : rows.shape[1]].set(rows)
+    return jnp.zeros((rows.shape[0], width), rows.dtype).at[:, : rows.shape[1]].set(rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,19 +132,23 @@ class AsyncConfig:
         return int(self.flush_k) - 1 + int(slots)
 
 
-def init_buffer(cfg: AsyncConfig, m: int, slots: int, dim: int, *,
-                shards: int = 1) -> dict:
+def init_buffer(
+    cfg: AsyncConfig, m: int, slots: int, dim: int, *, shards: int = 1, schema=None
+) -> dict:
     """Fresh (empty) fixed-shape buffer state (see the module docstring).
 
     ``dim`` is the flat model size; rows are allocated at the 128-aligned
-    width (:func:`repro.kernels.ops.aligned_dim`). ``shards`` pads the
+    width (:func:`repro.kernels.ops.aligned_dim`), or — with ``schema``,
+    the strategy's wire schema — at its uplink wire-slab width, so the
+    buffer banks exactly what the wire carried. ``shards`` pads the
     slot count B up to a multiple so a row-sharded ``upd`` partitions
     evenly — the extra slots are permanently-empty sentinels.
     """
     b = cfg.capacity(slots)
     b = -(-b // int(shards)) * int(shards)
+    width = schema.width_aligned("uplink") if schema is not None else ops.aligned_dim(dim)
     return {
-        "upd": jnp.zeros((b, ops.aligned_dim(dim)), jnp.float32),
+        "upd": jnp.zeros((b, width), jnp.float32),
         "idx": jnp.full((b,), m, jnp.int32),
         "ver": jnp.zeros((b,), jnp.int32),
         "count": jnp.zeros((), jnp.int32),
@@ -176,8 +188,7 @@ def deposit(buf, rows, idx, mask, base_ver, m: int, *, scatter=None):
     pending = valid_mask(buf, m)  # (B,)
     # (c, B) membership of each incoming client among the pending slots;
     # buffer indices are unique, so each row has at most one hit
-    dup = (idx[:, None] == buf["idx"][None, :]) & mask[:, None] & \
-        pending[None, :]
+    dup = (idx[:, None] == buf["idx"][None, :]) & mask[:, None] & pending[None, :]
     has_dup = jnp.any(dup, axis=1)
     dup_pos = jnp.argmax(dup, axis=1)
     fresh = mask & ~has_dup
@@ -187,8 +198,11 @@ def deposit(buf, rows, idx, mask, base_ver, m: int, *, scatter=None):
     # rows, so only flush_reset may move it (the documented contract)
     dest = jnp.where(mask, jnp.where(has_dup, dup_pos, append_pos), bcap)
     rows = _pad_rows(rows.astype(buf["upd"].dtype), buf["upd"].shape[1])
-    upd = (buf["upd"].at[dest].set(rows, mode="drop") if scatter is None
-           else scatter(buf["upd"], dest, rows))
+    upd = (
+        buf["upd"].at[dest].set(rows, mode="drop")
+        if scatter is None
+        else scatter(buf["upd"], dest, rows)
+    )
     return dict(
         buf,
         upd=upd,
@@ -227,7 +241,8 @@ def flush_reset(buf, m: int):
     """
     new_version = buf["version"] + 1
     synced = buf["last_sync"].at[buf["idx"]].set(
-        jnp.full_like(buf["ver"], new_version), mode="drop")
+        jnp.full_like(buf["ver"], new_version), mode="drop"
+    )
     return dict(
         buf,
         idx=jnp.full_like(buf["idx"], m),
@@ -257,5 +272,6 @@ def flush_metrics(flushed, applied, tau, weights, fill):
         "tau_mean": jnp.where(
             flushed,
             jnp.sum(jnp.where(live, tau, 0).astype(jnp.float32)) / wsum,
-            0.0),
+            0.0,
+        ),
     }

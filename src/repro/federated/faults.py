@@ -32,6 +32,15 @@ uploads; with every slot demoted the sentinel-index scatter writes
 nothing and the round degrades to skip-round semantics (state
 unchanged).
 
+Wire-slab generality: the stage operates on whatever slab the strategy's
+:class:`~repro.federated.transport.WireSchema` declares as its uplink —
+the single ``(c, d_al)`` delta for most strategies, SCAFFOLD's
+concatenated ``(c, 2·d_al)`` model+control wire, ... Every transform
+here is shape-agnostic over the trailing axis, and the finite guard
+checks finiteness PER STREAM (ANDed across the schema's slices — a NaN
+in scaffold's control stream demotes the whole slot, exactly like a NaN
+in its model stream: the slot's upload is one wire transmission).
+
 Donation interaction: the stage runs between local SGD and the mix
 inside the SAME jitted body, on cohort-shaped intermediates — the
 donated (m, ·) state buffers are never touched by the rewrite, so the
@@ -45,6 +54,7 @@ per-round drop/noise randomness derives from the round key via
 cohorts reproduce unpadded ones bit-for-bit and a replay with the same
 seeds injects the same faults.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -89,14 +99,11 @@ class FaultConfig:
 
     def __post_init__(self):
         if self.attack not in self._ATTACKS:
-            raise ValueError(f"unknown attack {self.attack!r} "
-                             f"(expected one of {self._ATTACKS})")
+            raise ValueError(f"unknown attack {self.attack!r} (expected one of {self._ATTACKS})")
         if not 0.0 <= self.byzantine_frac <= 1.0:
-            raise ValueError(
-                f"byzantine_frac must be in [0, 1], got {self.byzantine_frac}")
+            raise ValueError(f"byzantine_frac must be in [0, 1], got {self.byzantine_frac}")
         if not 0.0 <= self.drop_rate <= 1.0:
-            raise ValueError(
-                f"drop_rate must be in [0, 1], got {self.drop_rate}")
+            raise ValueError(f"drop_rate must be in [0, 1], got {self.drop_rate}")
 
 
 def num_attackers(cfg: FaultConfig, m: int) -> int:
@@ -141,10 +148,11 @@ def inject(cfg: FaultConfig, pre_flat, post_flat, idx, mask, key, m: int):
         if cfg.attack == "sign_flip":
             bad = pre_flat - cfg.attack_scale * (post_flat - pre_flat)
         elif cfg.attack == "scaled_noise":
-            noise = jax.vmap(
-                lambda k, r: cfg.attack_scale * jax.random.normal(
-                    jax.random.fold_in(k, 1), r.shape))(slot_keys, post_flat)
-            bad = pre_flat + noise
+
+            def _noise(k, r):
+                return cfg.attack_scale * jax.random.normal(jax.random.fold_in(k, 1), r.shape)
+
+            bad = pre_flat + jax.vmap(_noise)(slot_keys, post_flat)
         elif cfg.attack == "nan":
             bad = jnp.full_like(post_flat, jnp.nan)
         else:  # inf
@@ -152,15 +160,14 @@ def inject(cfg: FaultConfig, pre_flat, post_flat, idx, mask, key, m: int):
         post_flat = jnp.where(atk[:, None], bad, post_flat)
 
     if cfg.drop_rate > 0.0:
-        u = jax.vmap(
-            lambda k: jax.random.uniform(jax.random.fold_in(k, 2)))(slot_keys)
+        u = jax.vmap(lambda k: jax.random.uniform(jax.random.fold_in(k, 2)))(slot_keys)
         drop = (u < cfg.drop_rate) & mask
         mask = mask & ~drop
         idx = jnp.where(drop, m, idx)
     return post_flat, idx, mask
 
 
-def finite_guard(flat_c, idx, mask, m: int):
+def finite_guard(flat_c, idx, mask, m: int, schema=None):
     """Demote non-finite upload rows to masked pad slots.
 
     A guarded row gets mask False, the sentinel index ``m`` (so the
@@ -169,23 +176,41 @@ def finite_guard(flat_c, idx, mask, m: int):
     and ``0 · NaN = NaN`` would still poison the mix. With every row
     demoted the round degrades to skip-round semantics. Returns
     ``(flat_c', idx', mask')``.
+
+    ``schema`` (the strategy's wire schema) checks finiteness per uplink
+    STREAM slice and ANDs the flags — numerically identical to the
+    whole-row check (booleans associate), but it states the contract the
+    multi-stream wire needs: ANY stream of a slot's upload going
+    non-finite demotes the whole slot.
     """
-    finite = jnp.all(jnp.isfinite(flat_c), axis=-1) & mask
-    return (jnp.where(finite[:, None], flat_c, 0.0),
-            jnp.where(finite, idx, m),
-            finite)
+    if schema is None:
+        finite = jnp.all(jnp.isfinite(flat_c), axis=-1)
+    else:
+        finite = jnp.ones(flat_c.shape[:-1], bool)
+        for lo, hi in schema.slices("uplink"):
+            finite &= jnp.all(jnp.isfinite(flat_c[..., lo:hi]), axis=-1)
+    finite = finite & mask
+    return (
+        jnp.where(finite[:, None], flat_c, 0.0),
+        jnp.where(finite, idx, m),
+        finite,
+    )
 
 
-def upload_stage(faults_cfg: FaultConfig | None, robust_cfg=None):
+def upload_stage(faults_cfg: FaultConfig | None, robust_cfg=None, schema=None):
     """Compose inject → finite guard → robust rewrite into ONE stage.
 
     Returns ``None`` when both knobs are off (the round body keeps its
     exact pre-existing trace — bit-exact), else a traceable
     ``stage(pre_flat, post_flat, idx, mask, key, m) ->
     (post_flat', idx', mask')`` the round bodies thread between local
-    SGD and the masked mix. The finite guard runs whenever the stage is
-    active: robustness without graceful degradation would still die on
-    the first NaN upload, and fault injection without it is the
+    SGD and the masked mix. ``pre_flat``/``post_flat`` are the
+    strategy's concatenated uplink WIRE slab (``schema`` — the single
+    delta for most strategies); injection, guard and robust rules are
+    all shape-agnostic over its width, and the guard demotes per stream
+    (see :func:`finite_guard`). The finite guard runs whenever the stage
+    is active: robustness without graceful degradation would still die
+    on the first NaN upload, and fault injection without it is the
     non-survival baseline the subsystem exists to remove.
     """
     rstage = aggregation.robust_stage(robust_cfg)
@@ -194,9 +219,8 @@ def upload_stage(faults_cfg: FaultConfig | None, robust_cfg=None):
 
     def stage(pre_flat, post_flat, idx, mask, key, m):
         if faults_cfg is not None:
-            post_flat, idx, mask = inject(faults_cfg, pre_flat, post_flat,
-                                          idx, mask, key, m)
-        post_flat, idx, mask = finite_guard(post_flat, idx, mask, m)
+            post_flat, idx, mask = inject(faults_cfg, pre_flat, post_flat, idx, mask, key, m)
+        post_flat, idx, mask = finite_guard(post_flat, idx, mask, m, schema)
         if rstage is not None:
             post_flat, idx, mask = rstage(post_flat, idx, mask, m)
         return post_flat, idx, mask

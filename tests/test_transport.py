@@ -9,11 +9,11 @@ Covers the transport contract end to end:
     sum is ``T·delta`` up to the single residual ``ef_T``, i.e. one
     quantization step, not T of them;
   * config validation (kind / chunk / divisibility / make_stage typing);
-  * strategy integration — supporting strategies grow an ``ef`` slab and
-    stay within float drift of the raw-f32 wire over 3 cohort rounds;
-    non-supporting strategies raise NotImplementedError at construction;
-    ``transport=None`` runs carry NO ef state and are deterministic
-    (two identical runs are bit-equal);
+  * strategy integration — every schema-declaring strategy grows a
+    schema-width ``ef`` slab and stays within float drift of the raw-f32
+    wire over 3 cohort rounds; only ``ucfl_parallel`` raises
+    NotImplementedError at construction; ``transport=None`` runs carry
+    NO ef/ef_dl state and are deterministic (two runs are bit-equal);
   * composition: transport under ``w_refresh`` and under the
     buffered-async server both run in one jitted shape.
 """
@@ -38,11 +38,11 @@ load_ci_profile(max_examples=20)
 INT8 = TransportConfig("int8")
 FP8 = TransportConfig("fp8")
 
-# strategies whose uplink is a single model delta to the PS support the
-# quantized wire; the rest must refuse loudly at construction
-SUPPORTED = ("ucfl", "clustered", "fedavg", "fedprox", "local", "oracle")
-REJECTED = ("scaffold", "ditto", "pfedme", "fedfomo", "cfl",
-            "ucfl_parallel")
+# every strategy that declares a WireSchema supports the quantized wire;
+# only ucfl_parallel (no single upload slab) refuses at construction
+SUPPORTED = ("ucfl", "clustered", "fedavg", "fedprox", "local", "oracle",
+             "scaffold", "ditto", "pfedme", "fedfomo", "cfl")
+REJECTED = ("ucfl_parallel",)
 
 
 # ----------------------------------------------------------- quantization
@@ -157,11 +157,16 @@ def test_supported_close_to_raw_wire(name):
     data, params0, skey = _setup()
     cfg = FedConfig(batch_size=30)
     raw = _run_rounds(_make(name, params0, cfg), data, skey)
-    assert "ef" not in raw
+    assert "ef" not in raw and "ef_dl" not in raw
     for tcfg, tol in ((INT8, 2e-3), (FP8, 1e-2)):
         qcfg = FedConfig(batch_size=30, transport=tcfg)
-        q = _run_rounds(_make(name, params0, qcfg), data, skey)
-        assert q["ef"].shape == q["params"].shape
+        strat = _make(name, params0, qcfg)
+        schema = strat.wire_schema
+        q = _run_rounds(strat, data, skey)
+        # the ef slab is schema-width: one EF slice per uplink stream
+        # (scaffold's is 2× the model slab — delta AND control_delta)
+        assert q["ef"].shape == (q["params"].shape[0],
+                                 schema.width_aligned("uplink"))
         assert float(jnp.abs(q["ef"]).max()) > 0.0
         diff = float(jnp.abs(q["params"] - raw["params"]).max())
         assert diff <= tol, (name, tcfg.kind, diff)
@@ -174,12 +179,13 @@ def test_rejected_at_construction(name):
         _make(name, params0, FedConfig(batch_size=30, transport=INT8))
 
 
-def test_transport_none_bit_exact_and_ef_free():
+@pytest.mark.parametrize("name", ("fedavg", "scaffold", "pfedme"))
+def test_transport_none_bit_exact_and_ef_free(name):
     data, params0, skey = _setup()
     cfg = FedConfig(batch_size=30, transport=None)
-    a = _run_rounds(_make("fedavg", params0, cfg), data, skey)
-    b = _run_rounds(_make("fedavg", params0, cfg), data, skey)
-    assert "ef" not in a
+    a = _run_rounds(_make(name, params0, cfg), data, skey)
+    b = _run_rounds(_make(name, params0, cfg), data, skey)
+    assert "ef" not in a and "ef_dl" not in a
     for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 

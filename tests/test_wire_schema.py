@@ -1,0 +1,282 @@
+"""WireSchema tests — the declared-stream wire layer (PR 9).
+
+Pins the schema contract on top of the single-slab transport tests:
+
+  * geometry — stream widths align per-stream (odd widths round up to
+    the 128 lane, zero-width streams vanish), ``slices`` tile the
+    concatenated slab in declaration order, ``width`` prices TRUE
+    coordinates while ``width_aligned`` sizes the slab;
+  * per-stream round-trip (hypothesis) — a mixed delta/raw/delta schema
+    quantizes each ``delta`` slice within the int8 bound while the
+    ``raw`` slice passes through BIT-EXACT with a zero EF slice;
+  * per-stream error feedback — scaffold's two uplink streams telescope
+    independently: on constant per-stream deltas of very different
+    magnitude each stream's applied sum is within ONE of its own
+    quantization steps (a shared EF would leak the big stream's error
+    into the small one);
+  * construction-time validation — a chunk that does not divide a
+    stream's aligned width raises at ``make_wire_stage`` naming the
+    strategy, the stream and both widths; ucfl_parallel raises the ONE
+    uniform capability error pointing at the capability matrix;
+  * engine composition — fedavg's compressed DOWNLINK carries a
+    ``(1, Σ)`` server-side EF row that activates; the per-stream finite
+    guard demotes a slot when ANY stream goes non-finite (NaN in
+    scaffold's control stream kills the model half too); the streaming
+    W-refresh under a quantized wire estimates Δ/σ² from the
+    DEQUANTIZED uploads only — W stays close to the raw-wire refresh
+    while the model trajectory visibly carries quantization drift.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, load_ci_profile, st
+from repro.core import FedConfig, REGISTRY, ucfl
+from repro.core.similarity import RefreshConfig
+from repro.data import synthetic
+from repro.federated import faults as faults_lib
+from repro.federated import transport
+from repro.federated.transport import Stream, TransportConfig, WireSchema
+from repro.models import lenet
+
+load_ci_profile(max_examples=20)
+
+INT8 = TransportConfig("int8")
+
+# odd + zero + odd widths: 100 -> 128, 0 -> 0, 130 -> 256
+MIXED = WireSchema(
+    "mixed",
+    uplink=(Stream("a", 100), Stream("gap", 0), Stream("b", 130,
+                                                       coding="raw"),
+            Stream("c", 130)),
+)
+
+
+# --------------------------------------------------------------- geometry
+def test_stream_alignment_and_slices():
+    assert Stream("a", 100).width_aligned == 128
+    assert Stream("gap", 0).width_aligned == 0
+    assert Stream("b", 130).width_aligned == 256
+    assert MIXED.width("uplink") == 100 + 0 + 130 + 130
+    assert MIXED.width_aligned("uplink") == 128 + 0 + 256 + 256
+    assert MIXED.slices("uplink") == ((0, 128), (128, 128), (128, 384),
+                                      (384, 640))
+    assert MIXED.streams("downlink") == ()
+    with pytest.raises(ValueError, match="direction"):
+        MIXED.streams("sideways")
+
+
+def test_stream_validation():
+    with pytest.raises(ValueError, match="coding"):
+        Stream("x", 8, coding="zip")
+    with pytest.raises(ValueError, match=">= 0"):
+        Stream("x", -1)
+
+
+def test_single_stream_stage_is_make_stage():
+    # the one-delta schema compiles to the EXACT pre-schema stage: the
+    # single-slab trajectories of PR 8 stay bit-identical
+    schema = transport.single_delta_schema("fedavg", 300)
+    stage = transport.make_wire_stage(schema, INT8, "uplink")
+    ref = transport.make_stage(INT8)
+    rng = np.random.default_rng(0)
+    pre = jnp.asarray(rng.normal(size=(3, 384)).astype(np.float32))
+    post = jnp.asarray(rng.normal(size=(3, 384)).astype(np.float32))
+    ef = jnp.zeros_like(pre)
+    (a, ea), (b, eb) = stage(pre, post, ef), ref(pre, post, ef)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(ea), np.asarray(eb))
+
+
+def test_raw_only_direction_has_no_stage():
+    schema = WireSchema("cfl_like", downlink=(Stream("centroids", 130,
+                                                     coding="raw"),))
+    assert transport.make_wire_stage(schema, INT8, "downlink") is None
+    assert transport.make_wire_stage(schema, None, "downlink") is None
+
+
+# ------------------------------------------------- per-stream round-trip
+def _chunk_steps(x, cfg):
+    x = np.asarray(x)
+    xs = x.reshape(x.shape[:-1] + (-1, cfg.chunk))
+    peak = np.abs(xs).max(-1, keepdims=True)
+    return np.broadcast_to(peak, xs.shape).reshape(x.shape)
+
+
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_per_stream_roundtrip_property(seed):
+    rng = np.random.default_rng(seed)
+    w = MIXED.width_aligned("uplink")
+    # wildly different per-stream scales: a shared quantizer would let
+    # the loud stream's step swamp the quiet one
+    pre = jnp.asarray(rng.normal(size=(2, w)).astype(np.float32))
+    post = pre.at[..., :128].add(
+        jnp.asarray(rng.normal(size=(2, 128)).astype(np.float32)) * 100.0)
+    post = post.at[..., 128:].add(
+        jnp.asarray(rng.normal(size=(2, w - 128)).astype(np.float32)) * 0.01)
+    ef = jnp.zeros_like(pre)
+    stage = transport.make_wire_stage(MIXED, INT8, "uplink")
+    out, ef2 = stage(pre, post, ef)
+    applied = np.asarray(out - pre)
+    delta = np.asarray(post - pre)
+    for s, (lo, hi) in zip(MIXED.streams("uplink"), MIXED.slices("uplink")):
+        if s.coding == "raw":
+            # bit-exact pass-through, EF slice stays zero
+            np.testing.assert_array_equal(applied[..., lo:hi],
+                                          delta[..., lo:hi])
+            np.testing.assert_array_equal(np.asarray(ef2)[..., lo:hi], 0.0)
+        elif hi > lo:
+            step = _chunk_steps(delta[..., lo:hi], INT8) / 127.0
+            err = np.abs(applied[..., lo:hi] - delta[..., lo:hi])
+            assert (err <= 0.5 * step + 1e-6 * (1 + step)).all(), s.name
+            # the stream's EF is exactly its own residual
+            np.testing.assert_allclose(
+                np.asarray(ef2)[..., lo:hi],
+                delta[..., lo:hi] - applied[..., lo:hi], atol=1e-6)
+
+
+def test_per_stream_ef_telescopes_scaffold():
+    # scaffold's two-stream uplink: constant deltas of very different
+    # magnitude per stream; each stream's T-round applied sum must land
+    # within ONE of ITS OWN quantization steps of T·delta
+    schema = WireSchema("scaffold",
+                        uplink=(Stream("delta", 256),
+                                Stream("control_delta", 256)))
+    stage = transport.make_wire_stage(schema, INT8, "uplink")
+    rng = np.random.default_rng(7)
+    d_model = rng.normal(size=(3, 256)).astype(np.float32) * 50.0
+    d_ctrl = rng.normal(size=(3, 256)).astype(np.float32) * 1e-3
+    delta = jnp.asarray(np.concatenate([d_model, d_ctrl], axis=-1))
+    pre = jnp.zeros_like(delta)
+    ef = jnp.zeros_like(delta)
+    total = np.zeros(delta.shape, np.float32)
+    rounds = 17
+    for _ in range(rounds):
+        out, ef = stage(pre, pre + delta, ef)
+        total += np.asarray(out - pre)
+    for d, (lo, hi) in zip((d_model, d_ctrl), schema.slices("uplink")):
+        step = _chunk_steps(d, INT8) / 127.0
+        err = np.abs(total[..., lo:hi] - rounds * d)
+        assert (err <= step + 1e-5 * (1 + np.abs(d))).all()
+
+
+# ------------------------------------------------------------- validation
+def test_chunk_mismatch_names_strategy_and_widths():
+    # chunk=192 divides the first stream's 384-wide slice but not the
+    # second's 256: the error must name the OFFENDING stream, not slot 0
+    schema = WireSchema("scaffold",
+                        uplink=(Stream("delta", 300),
+                                Stream("control_delta", 250)))
+    with pytest.raises(ValueError) as exc:
+        transport.make_wire_stage(schema, TransportConfig(chunk=192),
+                                  "uplink")
+    msg = str(exc.value)
+    for needle in ("scaffold", "control_delta", "250", "256", "192",
+                   "does not divide"):
+        assert needle in msg, (needle, msg)
+
+
+def test_ucfl_parallel_uniform_capability_error():
+    with pytest.raises(NotImplementedError,
+                       match="transport.*capability matrix"):
+        transport.unsupported(INT8, "ucfl_parallel", "no single slab")
+    assert transport.unsupported(None, "ucfl_parallel", "off is fine") is None
+
+
+# ------------------------------------------------------------ composition
+@functools.lru_cache(maxsize=1)
+def _setup():
+    key = jax.random.PRNGKey(11)
+    dkey, mkey, skey = jax.random.split(key, 3)
+    data = synthetic.label_shift(dkey, m=6, n=60, n_test=20, num_classes=6,
+                                 alpha=0.4, hw=(16, 16))
+    params0 = lenet.init(mkey, input_hw=(16, 16), channels=1, num_classes=6)
+    return data, params0, skey
+
+
+def _run(strat, data, skey, rounds=3):
+    cohort = np.arange(data.num_clients, dtype=np.int32)
+    state = strat.init(jax.random.fold_in(skey, 1), data)
+    key = skey
+    for _ in range(rounds):
+        key, rkey = jax.random.split(key)
+        state, _ = strat.round(state, data, rkey, cohort)
+    return state
+
+
+def test_fedavg_downlink_ef_row_activates():
+    data, params0, skey = _setup()
+    strat = REGISTRY["fedavg"](lenet.apply, params0,
+                               FedConfig(batch_size=30, transport=INT8))
+    schema = strat.wire_schema
+    state = _run(strat, data, skey)
+    assert state["ef_dl"].shape == (1, schema.width_aligned("downlink"))
+    assert float(jnp.abs(state["ef_dl"]).max()) > 0.0
+
+
+def test_scaffold_state_matches_two_stream_schema():
+    data, params0, skey = _setup()
+    strat = REGISTRY["scaffold"](lenet.apply, params0,
+                                 FedConfig(batch_size=30, transport=INT8))
+    schema = strat.wire_schema
+    m = data.num_clients
+    state = _run(strat, data, skey)
+    d_al = state["params"].shape[1]
+    assert schema.width_aligned("uplink") == 2 * d_al
+    assert state["ef"].shape == (m, 2 * d_al)
+    assert state["ef_dl"].shape == (1, 2 * d_al)
+    # both stream halves carry residual: each wire stream really ran
+    # through its own quantizer
+    assert float(jnp.abs(state["ef"][:, :d_al]).max()) > 0.0
+    assert float(jnp.abs(state["ef"][:, d_al:]).max()) > 0.0
+
+
+def test_finite_guard_demotes_per_stream():
+    schema = WireSchema("scaffold",
+                        uplink=(Stream("delta", 128),
+                                Stream("control_delta", 128)))
+    m, c = 6, 4
+    rng = np.random.default_rng(3)
+    flat = rng.normal(size=(c, 256)).astype(np.float32)
+    flat[1, 200] = np.nan  # NaN in the CONTROL stream only
+    idx = jnp.asarray([0, 1, 2, m], jnp.int32)
+    mask = jnp.asarray([True, True, True, False])
+    out, idx2, mask2 = faults_lib.finite_guard(jnp.asarray(flat), idx, mask,
+                                               m, schema)
+    # the whole slot is demoted — model half included — and zeroed
+    np.testing.assert_array_equal(np.asarray(mask2),
+                                  [True, False, True, False])
+    np.testing.assert_array_equal(np.asarray(idx2), [0, m, 2, m])
+    np.testing.assert_array_equal(np.asarray(out)[1], 0.0)
+    # identical to the schema-less whole-row guard
+    out_b, idx_b, mask_b = faults_lib.finite_guard(jnp.asarray(flat), idx,
+                                                   mask, m, None)
+    np.testing.assert_array_equal(np.asarray(mask2), np.asarray(mask_b))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_b))
+
+
+def test_refresh_sees_dequantized_uploads_only():
+    # Δ/σ² under a quantized wire: the refresh consumes the DEQUANTIZED
+    # uploads (what the server received) — W stays close to the raw-wire
+    # refresh, while the params trajectory visibly drifts (the wire was
+    # really quantized). A refresh reading raw client state would be a
+    # contract break this pin exists to catch.
+    data, params0, skey = _setup()
+
+    def run(tcfg):
+        cfg = FedConfig(batch_size=30, transport=tcfg,
+                        w_refresh=RefreshConfig())
+        strat = ucfl.make_ucfl(lenet.apply, params0, cfg, var_batch_size=10)
+        return _run(strat, data, skey)
+
+    raw, q = run(None), run(INT8)
+    assert "ef" in q and "refresh" in q and "ef" not in raw
+    dW = float(jnp.abs(q["W"] - raw["W"]).max())
+    dP = float(jnp.abs(q["params"] - raw["params"]).max())
+    assert dP > 0.0  # quantization really touched the wire
+    assert dW <= 0.15, dW  # ...but the refresh stats track the raw run
+    for leaf in jax.tree.leaves(q):
+        assert bool(jnp.isfinite(jnp.asarray(leaf, jnp.float32)).all())
