@@ -55,6 +55,15 @@ Turns the ROADMAP's engine targets into enforced checks:
     WireSchema stage cost. A ratio above the gate means the per-slice
     fold over the concatenated wire slab stopped being a cheap
     elementwise stage inside the one jitted round.
+  * hier overhead — the ``hier`` regime (clustered ucfl k=2 under a
+    two-edge ``FedConfig.topology``: tier-1 per-edge partial sums,
+    tier-2 combine) must stay within ``--max-hier-ratio`` (default 1.3)
+    of the plain cohort round. The whole two-tier mix is traced into
+    the same jitted fixed-shape round over the donated slab; a ratio
+    above the gate means the edge partition introduced a recompile, a
+    host sync, or per-edge work that outgrew the O(c·d + E·k·d) mix it
+    is specified to be. (The PS-side byte win the tier buys is asserted
+    by ``participation_sweep.py``'s hierarchical replay, not here.)
   * m-scaling — a fixed-cohort round must cost O(c·d), not O(m·d). The
     ``m_scaling_ratio`` (round time at m=512 over m=8, same cohort size)
     must stay within ``--max-mscale-ratio`` (default 1.3); above it some
@@ -115,6 +124,10 @@ def main(argv=None) -> int:
                     help="gate on quant_multi_over_multi_ratio (scaffold "
                          "two-stream wire + compressed downlink over the "
                          "same scaffold config with transport off)")
+    ap.add_argument("--max-hier-ratio", type=float, default=1.3,
+                    help="gate on hier_over_cohort_ratio (clustered ucfl "
+                         "under a two-edge topology over the plain cohort "
+                         "round)")
     ap.add_argument("--max-mscale-ratio", type=float, default=1.3,
                     help="gate on m_scaling_ratio (fixed-cohort round "
                          "time at m=512 over m=8)")
@@ -163,6 +176,12 @@ def main(argv=None) -> int:
                     "quantize→dequantize→EF fold over the concatenated "
                     "wire slab — check for a recompile, a host sync, or "
                     "per-stream work that left the one jitted round")
+        ok &= _gate(payload, "hier_over_cohort_ratio", "cohort",
+                    "hier", args.max_hier_ratio,
+                    "the two-tier hierarchical mix is no longer a cheap "
+                    "in-round partition + per-edge partial-sum fold — "
+                    "check for a recompile, a host sync, or an edge "
+                    "partition that left the one jitted round")
         ok &= _gate(payload, "m_scaling_ratio", "m8", "m512",
                     args.max_mscale_ratio,
                     "a fixed-cohort round's time grew with the client "

@@ -61,10 +61,12 @@ def make_params0(key, s: BenchScale, num_classes=None):
 
 def make_strategy(name: str, params0, s: BenchScale, *, chunk_size=None,
                   mesh=None, w_refresh=None, async_buffer=None, faults=None,
-                  robust=None, transport=None, **kw):
+                  robust=None, transport=None, topology=None, selection=None,
+                  **kw):
     cfg = FedConfig(batch_size=s.batch_size, chunk_size=chunk_size, mesh=mesh,
                     w_refresh=w_refresh, async_buffer=async_buffer,
-                    faults=faults, robust=robust, transport=transport)
+                    faults=faults, robust=robust, transport=transport,
+                    topology=topology, selection=selection)
     if name == "ucfl":
         return ucfl.make_ucfl(lenet.apply, params0, cfg,
                               var_batch_size=s.var_batch, **kw)
@@ -85,7 +87,7 @@ def make_strategy(name: str, params0, s: BenchScale, *, chunk_size=None,
         cfg = dataclasses.replace(
             base, chunk_size=chunk_size, mesh=mesh, w_refresh=w_refresh,
             async_buffer=async_buffer, faults=faults, robust=robust,
-            transport=transport)
+            transport=transport, topology=topology, selection=selection)
         return REGISTRY[name](lenet.apply, params0, cfg, **kw)
     return REGISTRY[name](lenet.apply, params0, cfg, **kw)
 

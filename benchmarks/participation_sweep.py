@@ -48,6 +48,27 @@ dtype-aware comm model (``uplink_bytes_per_round(..., transport=...)``
 and the transport-scaled ``round_time`` Tdl frontier) and asserts the
 trade the transport exists to buy: ≥ 3.5x fewer uplink bytes per round
 at matched accuracy (average within ±1% absolute of the float32 run).
+
+The ``hier`` suite (``run.py --only hier``, kept out of the
+``participation`` suite so ``all`` runs each row once) adds the two-tier
+rows:
+
+  * ``participation/hier_replay`` — clustered ucfl (k=2) flat vs under a
+    two-edge ``FedConfig.topology`` (same data, seeds, and cohort
+    sequence; the tiered mix factorizes the flat rule exactly, so
+    accuracy must match up to float association) reporting the PS-side
+    backhaul bytes (``cm.ps_uplink_bytes_per_round``): flat ships the
+    cohort's c client uploads through the PS link, tiered ships
+    ``E·k`` edge aggregates — the ≥ 2x PS-traffic reduction the
+    topology exists to buy, plus the honest per-tier ``round_time``
+    and PS downlink counters.
+  * ``participation/select_*`` — Pareto-biased cohort selection
+    (``FedConfig.selection`` / the ``pareto`` sampler) swept over the
+    bias exponent on the accuracy-vs-Tdl frontier: sharper compute bias
+    picks faster cohorts (the realized straggler term shrinks — priced
+    from each round's actual min member speed) at the cost of the
+    rarely-picked slow clients' personalized accuracy; the fairness
+    lane bounds their starvation (``min_sel`` ≥ 1).
 """
 from __future__ import annotations
 
@@ -145,6 +166,170 @@ def run(scale) -> list[str]:
     rows.extend(async_replay_rows(scale, chunk))
     rows.extend(byzantine_replay_rows(scale, chunk))
     rows.extend(quant_replay_rows(scale, chunk))
+    return rows
+
+
+def run_hier(scale) -> list[str]:
+    """The two-tier suite: hierarchical replay + selection-bias sweep."""
+    chunk = max(2, scale.m // 4)
+    rows = hier_replay_rows(scale, chunk)
+    rows.extend(selection_sweep_rows(scale, chunk))
+    return rows
+
+
+def hier_replay_rows(scale, chunk) -> list[str]:
+    """Hierarchical replay: flat vs two-tier clustered ucfl, PS bytes.
+
+    Same data, seeds, and cohort sequence — only ``FedConfig.topology``
+    differs (None vs a two-edge contiguous assignment). The tiered round
+    factorizes the flat clustered mix exactly (per-edge partial centroid
+    sums + one tier-2 normalize), so the accuracies must match up to
+    float association; what changes is WHERE the traffic flows. The row
+    prices the edge↔PS backhaul with ``cm.ps_uplink_bytes_per_round``:
+    flat, all c cohort uploads transit the PS link; tiered, each of the
+    E active edges ships its k aggregate streams once — ``c/(E·k)``
+    fewer PS-side bytes (3x at this scale's c=12, E=2, k=2; the ≥ 2x
+    bar is the acceptance gate). The per-tier ``round_time`` (default
+    backhaul budget) and the PS DOWNLINK counter are reported too —
+    broadcast replication across E backhaul links makes the latter
+    LARGER than flat, and hiding it would oversell the topology.
+    """
+    import jax
+
+    from repro.core.pytree import tree_count_params
+    from repro.data import synthetic
+    from repro.federated import simulation
+    from repro.federated.topology import Topology
+    from repro.models import lenet
+
+    k, num_edges = 2, 2
+    # m=16/c=12 keeps the replay CPU-cheap while giving the PS-byte
+    # ratio c/(E·k) = 3 a real margin over the 2x acceptance bar
+    lscale = dataclasses.replace(scale, m=max(16, scale.m),
+                                 rounds=max(10, scale.rounds))
+    m = lscale.m
+    c = min(m, 12)
+    part = ParticipationConfig(cohort_size=c, seed=17)
+    topo = Topology.contiguous(m, num_edges)
+
+    key = jax.random.PRNGKey(41)
+    dkey, mkey, skey = jax.random.split(key, 3)
+    # noise=2.0 keeps accuracy off the 1.0 ceiling so "matched" is a
+    # real statement, not a saturated one
+    data = synthetic.concept_shift(
+        dkey, m=m, n=lscale.n, n_test=lscale.n_test,
+        num_classes=max(lscale.num_classes, 6), groups=2, hw=lscale.hw,
+        channels=1, noise=2.0)
+    params0 = common.make_params0(mkey, lscale,
+                                  max(lscale.num_classes, 6))
+    model_bytes = 4 * tree_count_params(params0)
+
+    res = {}
+    for label, tp in (("flat", None), ("hier", topo)):
+        strat = common.make_strategy("ucfl_k2", params0, lscale,
+                                     chunk_size=chunk, topology=tp)
+        schema = strat.wire_schema
+        h = simulation.run(strat, lenet.apply, data, skey,
+                           rounds=lscale.rounds, eval_every=2,
+                           participation=part)
+        edges = None if tp is None else num_edges
+        p = cm.SystemParams(
+            m=m, rho=4.0, inv_mu=1.0,
+            tiers=None if tp is None else cm.TierParams(num_edges))
+        avg, worst = h.paired_best
+        res[label] = {
+            "avg": avg, "worst": worst,
+            "ps_ul": cm.ps_uplink_bytes_per_round(
+                model_bytes, "groupcast", m, num_streams=k, cohort_size=c,
+                num_edges=edges, schema=schema),
+            "ps_dl": cm.ps_downlink_bytes_per_round(
+                model_bytes, "groupcast", m, num_streams=k, cohort_size=c,
+                num_edges=edges, schema=schema),
+            "t_round": cm.round_time(p, "groupcast", k, cohort_size=c),
+        }
+    ratio = res["flat"]["ps_ul"] / max(res["hier"]["ps_ul"], 1)
+    dacc = res["hier"]["avg"] - res["flat"]["avg"]
+    row = common.csv_row(
+        "participation/hier_replay", 0.0,
+        f"cohort={c};edges={num_edges};k={k};rounds={lscale.rounds};"
+        f"avg_flat={res['flat']['avg']:.4f};"
+        f"avg_hier={res['hier']['avg']:.4f};"
+        f"worst_flat={res['flat']['worst']:.4f};"
+        f"worst_hier={res['hier']['worst']:.4f};"
+        f"ps_ul_flat={res['flat']['ps_ul']}B;"
+        f"ps_ul_hier={res['hier']['ps_ul']}B;"
+        f"ps_ul_ratio={ratio:.2f}x;"
+        f"ps_dl_flat={res['flat']['ps_dl']}B;"
+        f"ps_dl_hier={res['hier']['ps_dl']}B;"
+        f"t_flat={res['flat']['t_round']:.2f}Tdl;"
+        f"t_hier={res['hier']['t_round']:.2f}Tdl;"
+        f"acc_matched={abs(dacc) <= 0.02};ps_ok={ratio >= 2.0}")
+    print(row, flush=True)
+    return [row]
+
+
+def selection_sweep_rows(scale, chunk) -> list[str]:
+    """Pareto-biased selection sweep on the accuracy-vs-Tdl frontier.
+
+    One shared data/seed draw; rows differ only in the cohort sampler:
+    uniform vs ``SelectionConfig(compute=speeds, bias=b)`` at rising
+    bias exponents (``simulation.run(selection=...)`` rewrites the
+    policy to the ``pareto`` sampler — the same seam FedConfig.selection
+    drivers use). Per-client compute speeds span a 16x geometric range;
+    the §V-D straggler term is priced from each round's REALIZED cohort
+    (``t_min + H_c/(μ·min speed)`` — the slowest member sets the
+    barrier), so sharper bias visibly buys wall-clock on the Tdl axis
+    while the rarely-selected slow clients pay in personalized accuracy
+    (``worst``). ``min_sel`` counts the least-selected client's draws
+    over the replay: the fairness lane keeps it ≥ 1 well before the
+    ``n_pos``-round worst-case bound.
+    """
+    import jax
+
+    from repro.federated import simulation
+    from repro.federated.participation import SelectionConfig
+    from repro.models import lenet
+
+    lscale = dataclasses.replace(scale, rounds=max(12, scale.rounds))
+    m = lscale.m
+    c = max(2, m // 4)
+    speeds = np.geomspace(0.25, 4.0, m)
+    p = cm.SystemParams(m=m, rho=4.0, inv_mu=1.0)
+
+    key = jax.random.PRNGKey(43)
+    dkey, mkey, skey = jax.random.split(key, 3)
+    data = common.scenario_data("label_shift", dkey, lscale)
+    params0 = common.make_params0(mkey, lscale)
+    part = ParticipationConfig(cohort_size=c, seed=31)
+
+    rows = []
+    sweeps = [("uniform", None)] + [
+        (f"b{b:g}", SelectionConfig(compute=speeds, bias=b))
+        for b in (1.0, 2.0, 4.0)]
+    for label, sel in sweeps:
+        strat = common.make_strategy("ucfl", params0, lscale,
+                                     chunk_size=chunk, selection=sel)
+        h = simulation.run(strat, lenet.apply, data, skey,
+                           rounds=lscale.rounds, eval_every=2,
+                           participation=part, selection=sel)
+        sched = pp.cohort_schedule(pp.with_selection(part, sel),
+                                   lscale.rounds, m)
+        counts = np.zeros(m, int)
+        t_rounds = []
+        for co in sched:
+            counts[co.members] += 1
+            # realized straggler barrier: the slowest member's rate
+            # scales the exponential tail of the c-way compute max
+            t_comp = p.t_min + cm.harmonic(len(co)) * p.inv_mu / \
+                float(speeds[co.members].min())
+            t_rounds.append(len(co) * p.t_dl + t_comp + p.rho * p.t_dl)
+        avg, worst = h.paired_best
+        rows.append(common.csv_row(
+            f"participation/select_{label}", 0.0,
+            f"cohort={c};rounds={lscale.rounds};avg={avg:.4f};"
+            f"worst={worst:.4f};t_round_eff={np.mean(t_rounds):.2f}Tdl;"
+            f"min_sel={int(counts.min())};max_sel={int(counts.max())}"))
+        print(rows[-1], flush=True)
     return rows
 
 

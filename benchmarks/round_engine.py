@@ -59,6 +59,18 @@ Measures the per-round wall time of the jitted round in three regimes:
                          the gate isolates the per-stream stage cost
                          from scaffold-vs-ucfl differences. Must stay
                          within ~1.3x (the seventh CI ratio gate).
+  * ``hier``           — the fixed-size cohort regime on CLUSTERED ucfl
+                         (k=2) with a two-edge ``FedConfig.topology``:
+                         the tier-1 per-edge partial sums, the tier-2
+                         combine and the edge one-hot partition all run
+                         inside the same jitted round (one compiled
+                         shape, donated slab), so the tiered round must
+                         stay within ~1.3x of the plain cohort round —
+                         the ``--max-hier-ratio`` CI gate. The PS-side
+                         byte win the tier buys (E·k edge aggregates vs
+                         c client uploads on the backhaul) is priced by
+                         the comm model in ``participation_sweep.py``,
+                         not here.
   * ``async``          — the fixed-size cohort regime with the
                          buffered-async server on
                          (``FedConfig.async_buffer``, flush_k = half the
@@ -106,6 +118,7 @@ from repro.federated import participation as part
 from repro.federated import simulation
 from repro.federated.async_buffer import AsyncConfig
 from repro.federated.faults import FaultConfig
+from repro.federated.topology import Topology
 from repro.federated.transport import TransportConfig
 from repro.models import lenet
 
@@ -322,6 +335,11 @@ def run(scale) -> list[str]:
                                          chunk_size=chunk,
                                          transport=TransportConfig("int8")),
                     cohort_cfg))
+    entries.append(("hier",
+                    common.make_strategy(
+                        "ucfl_k2", params0, s, chunk_size=chunk,
+                        topology=Topology.contiguous(s.m, 2)),
+                    cohort_cfg))
     # quant_multi vs multi: identical scaffold configs except the wire
     # (epochs=1 keeps the timed local phase comparable to the other
     # regimes; the paper-footnote epochs=5 is a fidelity knob, not a
@@ -361,11 +379,11 @@ def run(scale) -> list[str]:
 
     results, sharded = {}, {}
     for name in list(regimes) + ["refresh", "async", "faults",
-                                 "flat_tree", "quant", "multi",
+                                 "flat_tree", "quant", "hier", "multi",
                                  "quant_multi"]:
         results[name] = {"round_us": times[name], "rounds": rounds}
-        strat_tag = "scaffold" if name in ("multi", "quant_multi") \
-            else "ucfl"
+        strat_tag = ("scaffold" if name in ("multi", "quant_multi")
+                     else "ucfl_k2" if name == "hier" else "ucfl")
         rows.append(common.csv_row(
             f"round_engine/{strat_tag}_{name}", times[name],
             f"m={s.m};cohort={s.m if name == 'dense' else cohort};"
@@ -404,6 +422,8 @@ def run(scale) -> list[str]:
         max(results["cohort"]["round_us"], 1e-9)
     quant_multi_ratio = results["quant_multi"]["round_us"] / \
         max(results["multi"]["round_us"], 1e-9)
+    hier_ratio = results["hier"]["round_us"] / \
+        max(results["cohort"]["round_us"], 1e-9)
     payload = {
         "config": {"m": s.m, "cohort_size": cohort, "rounds": rounds,
                    "model": "lenet", "scenario": "label_shift",
@@ -423,6 +443,7 @@ def run(scale) -> list[str]:
         "flat_tree_over_cohort_ratio": flat_ratio,
         "quant_over_cohort_ratio": quant_ratio,
         "quant_multi_over_multi_ratio": quant_multi_ratio,
+        "hier_over_cohort_ratio": hier_ratio,
         "m_scaling_ratio": m_ratio,
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
@@ -434,6 +455,7 @@ def run(scale) -> list[str]:
                           ("quant_over_cohort", quant_ratio, 1.3),
                           ("quant_multi_over_multi", quant_multi_ratio,
                            1.3),
+                          ("hier_over_cohort", hier_ratio, 1.3),
                           ("m_scaling_m512_over_m8", m_ratio, 1.3)):
         rows.append(common.csv_row(
             f"round_engine/{label}", r,

@@ -31,6 +31,12 @@ def main() -> None:
                             participation_sweep, roofline_report,
                             round_engine, table1_accuracy, table2_worst_user)
 
+    class _Suite:
+        """Adapter exposing a bare row function as a suite module."""
+
+        def __init__(self, fn):
+            self.run = fn
+
     scale = common.FULL if args.full else common.FAST
     suites = {
         "kernel": kernel_bench,
@@ -45,6 +51,9 @@ def main() -> None:
         "fig6": fig6_parallel_ucfl,
         "fig7": fig7_minibatch,
         "participation": participation_sweep,
+        # two-tier topology replay + Pareto selection sweep; its own
+        # suite (not inside participation.run) so `all` runs each once
+        "hier": _Suite(participation_sweep.run_hier),
     }
     only = None if args.only == "all" else set(args.only.split(","))
     print("name,us_per_call,derived")

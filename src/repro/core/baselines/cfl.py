@@ -28,6 +28,7 @@ from repro.core.baselines.common import group_average
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import topology as topology_lib
 from repro.federated import transport as transport_lib
 
 
@@ -85,6 +86,11 @@ def make_cfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             group_average(updated, assignment, n, impl=kernel_impl))
         return new_params, post - params
 
+    topology_lib.unsupported(
+        cfg.topology, "cfl",
+        "the split check consumes every surviving member's PER-CLIENT "
+        "update-delta row at the host each round — per-edge partial "
+        "means would erase the rows the spectral bipartition needs")
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
     ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
     tstage = transport_lib.make_wire_stage(schema, cfg.transport, "uplink")

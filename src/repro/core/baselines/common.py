@@ -64,6 +64,7 @@ from repro.core.pytree import (  # noqa: F401  (re-export)
 from repro.federated import async_buffer
 from repro.federated import mesh as mesh_lib
 from repro.federated import participation
+from repro.federated import topology as topology_lib
 from repro.federated import transport as transport_lib
 from repro.kernels import ops
 
@@ -312,7 +313,7 @@ class StateOps:
 def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None,
                  async_fn=None, async_cfg=None, sops=None,
                  shard_keys=("params",), upload_stage=None,
-                 transport=None):
+                 transport=None, topology=None):
     """Build ``round(state, data, key, cohort=None)`` from the two paths.
 
     Args:
@@ -357,6 +358,11 @@ def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None,
       transport: the ``FedConfig.transport`` value, passed here ONLY so
         the dispatcher can reject ``cohort=None`` — quantization rewrites
         the masked upload stage, and the dense path has no upload.
+      topology: the ``FedConfig.topology`` value, passed here ONLY so
+        the dispatcher can reject ``cohort=None`` — the two-tier engine
+        partitions the COHORT's upload slots over edges, and the dense
+        path has no per-edge upload stage (the masked bodies already
+        closed over the tiered mix themselves).
 
     The returned ``round`` accepts ``cohort=None`` (dense), a
     :class:`~repro.federated.participation.Cohort`, or a plain index
@@ -408,6 +414,13 @@ def cohort_round(dense_fn, masked_fn, *, masked_jit=None, mesh=None,
                     "quantization compresses the masked upload stage, and "
                     "the dense full-participation path has no upload — "
                     "pass a participation config (or drop transport)")
+            if topology is not None:
+                raise ValueError(
+                    "FedConfig.topology requires cohort rounds: the "
+                    "two-tier engine partitions the cohort's upload slots "
+                    "over edge aggregators, and the dense "
+                    "full-participation path has no per-edge upload stage "
+                    "— pass a participation config (or drop topology)")
             state, metrics = dense_fn(state, data, key)
             size = data.num_clients
         else:
@@ -571,7 +584,41 @@ def fedavg_masked_mix(params, updated, idx, mask, n, *, impl=None):
         mixed, params)
 
 
-def fedavg_mix_closure(*, sops=None, impl=None, dstage=None):
+def tiered_fedavg_weights(edge_arr, num_edges, slots, idx, mask, n):
+    """Two-tier FedAvg weights over a padded cohort.
+
+    Tier 1 applies the existing masked rule PER EDGE: the cohort's slot
+    arrays are partitioned into fixed-shape ``(E, s)`` per-edge cohorts
+    (:func:`repro.federated.topology.edge_partition`) and
+    ``masked_fedavg_weights`` vmaps over them — each edge normalizes its
+    own members' ``n`` mass, an empty edge gets all-zero weights. Tier 2
+    is the same rule over the per-edge masses. Returns
+
+      wpe (E, c) — tier-1 weights mapped back to cohort columns, so
+                   ``wpe @ upload_slab`` is the (E, d) edge-aggregate
+                   slab that crosses the edge↔PS backhaul;
+      w2  (E,)   — tier-2 inter-edge weights (mass-proportional).
+
+    Because ``w2[e]·wpe[e, j] = n_j / Σn`` wherever edge e has mass, the
+    composition reproduces the flat n-weighted mean EXACTLY up to float
+    association — matched accuracy is by construction, the PS-side
+    saving is that only E aggregates transit the backhaul.
+    """
+    c = idx.shape[0]
+    eidx, emask, eslot = topology_lib.edge_partition(
+        edge_arr, num_edges, slots, idx, mask)
+    esafe = aggregation.safe_gather_index(eidx, n.shape[0])
+    ne = (jnp.take(n, esafe) * emask).astype(jnp.float32)  # (E, s)
+    w1 = jax.vmap(aggregation.masked_fedavg_weights)(ne, emask)[:, 0, :]
+    wpe = (jnp.zeros((num_edges, c), jnp.float32)
+           .at[jnp.arange(num_edges)[:, None], eslot]
+           .set(w1 * emask, mode="drop"))
+    mass = jnp.sum(ne, axis=1)  # (E,)
+    w2 = aggregation.masked_fedavg_weights(mass, mass > 0)[0]
+    return wpe, w2
+
+
+def fedavg_mix_closure(*, sops=None, impl=None, dstage=None, topology=None):
     """Build the FedAvg-family mix (masked Eq. 1, broadcast back).
 
     ``dstage=None`` returns the plain broadcast mix
@@ -584,7 +631,17 @@ def fedavg_mix_closure(*, sops=None, impl=None, dstage=None):
     ``mix(params, updated, idx, mask, n, ef_dl) -> (new, ef_dl')``. An
     all-masked cohort keeps params AND ef_dl unchanged (no wire
     activity — skip-round semantics, like the plain mix).
+
+    ``topology`` (a :class:`repro.federated.topology.Topology`) swaps
+    the single global mean for the two-tier factorization
+    (:func:`tiered_fedavg_weights`): tier-1 edge aggregates, tier-2
+    mass-weighted combine, then the identical broadcast/EF tail — so
+    the tiered mix composes with the compressed downlink unchanged.
+    ``None`` keeps the flat mix bit-exact.
     """
+    if topology is not None:
+        return _tiered_fedavg_mix_closure(topology, sops=sops,
+                                          dstage=dstage)
     if dstage is None:
         if sops is None:
             return functools.partial(fedavg_masked_mix, impl=impl)
@@ -620,9 +677,62 @@ def fedavg_mix_closure(*, sops=None, impl=None, dstage=None):
     return mix
 
 
+def _tiered_fedavg_mix_closure(topology, *, sops=None, dstage=None):
+    """The two-tier FedAvg mix (see :func:`fedavg_mix_closure`).
+
+    Tier-1 edge aggregates materialize as one ``(E, d)`` matmul over the
+    upload slab, tier-2 as a length-E weighted sum — both inside the
+    same jitted round body, so the tiered path keeps the one-compilation
+    guarantee and O(c·d + E·d) cost. Construction-time guards upstream
+    ensure ``sops`` is never row-sharded here.
+    """
+    edge_arr = topology.edge_array()
+    num_edges = topology.num_edges
+
+    def tiered_global(updated, idx, mask, n):
+        c = idx.shape[0]
+        slots = topology.slots_per_edge(c)
+        wpe, w2 = tiered_fedavg_weights(edge_arr, num_edges, slots,
+                                        idx, mask, n)
+
+        def leaf(u):
+            agg = wpe @ u.reshape(c, -1)  # (E, d) edge-aggregate slab
+            return (w2 @ agg).reshape((1,) + u.shape[1:])
+
+        return jax.tree.map(leaf, updated)
+
+    def broadcast(params, mixed, mask):
+        rows = jax.tree.leaves(params)[0].shape[0]
+        alive = jnp.any(mask)
+        return jax.tree.map(
+            lambda x, p: jnp.where(
+                alive, jnp.broadcast_to(x, (rows,) + x.shape[1:]), p),
+            mixed, params)
+
+    if dstage is None:
+        def tmix(params, updated, idx, mask, n):
+            return broadcast(params, tiered_global(updated, idx, mask, n),
+                             mask)
+
+        return tmix
+
+    gather = sops.gather if sops is not None else (
+        lambda tree, safe: gather_rows(tree, safe))
+
+    def tmix_dl(params, updated, idx, mask, n, ef_dl):
+        mixed = tiered_global(updated, idx, mask, n)  # (1, W)
+        ref = gather(params, jnp.zeros((1,), jnp.int32))
+        served, new_ef = dstage(ref, mixed, ef_dl)
+        alive = jnp.any(mask)
+        ef_dl = jnp.where(alive, new_ef, ef_dl)
+        return broadcast(params, served, mask), ef_dl
+
+    return tmix_dl
+
+
 def make_fedavg_masked_round(local, *, train=None, impl=None, donate=True,
                              sops=None, upload_stage=None, layout=None,
-                             transport=None, schema=None):
+                             transport=None, schema=None, topology=None):
     """The FedAvg-family masked round (FedAvg/FedProx reuse it).
 
     ``fedavg_masked_mix`` is tree-generic, so the same mix serves the
@@ -631,6 +741,8 @@ def make_fedavg_masked_round(local, *, train=None, impl=None, donate=True,
     plain-local-SGD train closure (FedProx passes its proximal-centered
     one); it must accept ``(pc, xc, yc, keys, n, *extra)`` — the extra
     args carry the downlink EF when the schema compresses the broadcast.
+    ``topology`` routes the mix through the two-tier engine (see
+    :func:`fedavg_mix_closure`); ``None`` keeps the flat mix bit-exact.
     """
 
     if train is None:
@@ -640,7 +752,8 @@ def make_fedavg_masked_round(local, *, train=None, impl=None, donate=True,
 
     dstage = (transport_lib.make_wire_stage(schema, transport, "downlink")
               if schema is not None else None)
-    mix = fedavg_mix_closure(sops=sops, impl=impl, dstage=dstage)
+    mix = fedavg_mix_closure(sops=sops, impl=impl, dstage=dstage,
+                             topology=topology)
     return make_masked_round(train, mix, donate=donate, sops=sops,
                              upload_stage=upload_stage, layout=layout,
                              transport=transport, schema=schema)

@@ -14,6 +14,7 @@ from repro.core.baselines import common
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import topology as topology_lib
 from repro.federated import transport as transport_lib
 
 
@@ -69,6 +70,11 @@ def make_ditto(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                          k2, tree)
         return new_global, layout.ravel(new_personal)
 
+    topology_lib.unsupported(
+        cfg.topology, "ditto",
+        "the round interleaves the global FedAvg leg with a client-side "
+        "personal solver keyed to the same cohort gather — threading the "
+        "two-tier mix through both legs is future work")
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
     ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
     tstage = transport_lib.make_wire_stage(schema, cfg.transport, "uplink")

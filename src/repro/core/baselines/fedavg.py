@@ -15,6 +15,7 @@ from repro.core.baselines import common
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import topology as topology_lib
 from repro.federated import transport as transport_lib
 
 
@@ -25,6 +26,9 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
     )
+    topo = topology_lib.check_composition(
+        cfg.topology, "fedavg", shard_state=cfg.shard_state,
+        async_buffer=cfg.async_buffer)
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
     layout = flat.LayoutTable.build(params0)
     schema = transport_lib.single_delta_schema(
@@ -33,6 +37,8 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
 
     def init(key, data):
+        if topo is not None:
+            topo.check_clients(data.num_clients, "fedavg")
         state = {"params": layout.slab(params0, data.num_clients)}
         if cfg.transport is not None:
             state["ef"] = jnp.zeros(
@@ -53,7 +59,8 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                               upload_stage=ustage,
                                               layout=layout,
                                               transport=cfg.transport,
-                                              schema=schema)
+                                              schema=schema,
+                                              topology=topo)
 
     def dense(state, data, key):
         new = _round(state["params"], data.n, data.x, data.y, key)
@@ -84,7 +91,8 @@ def make_fedavg(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                         async_cfg=cfg.async_buffer,
                                         sops=sops, shard_keys=shard_keys,
                                         upload_stage=ustage,
-                                        transport=cfg.transport),
+                                        transport=cfg.transport,
+                                        topology=topo),
                     lambda s: layout.unravel(s["params"]),
                     comm_scheme="broadcast", num_streams=1,
                     injects_faults=cfg.faults is not None,

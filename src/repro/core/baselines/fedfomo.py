@@ -23,6 +23,7 @@ from repro.core.baselines import common
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import topology as topology_lib
 from repro.federated import transport as transport_lib
 from repro.federated.client import make_loss
 from repro.kernels import ops
@@ -100,6 +101,11 @@ def make_fedfomo(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                            key)
         return _fomo_mix(updated, layout.ravel(updated), x_val, y_val)
 
+    topology_lib.unsupported(
+        cfg.topology, "fedfomo",
+        "client-side first-order mixing downloads every cohort peer's "
+        "model per receiver (the m× downlink the paper prices) — there "
+        "is no PS aggregate for an edge tier to ship")
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
     ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
     tstage = transport_lib.make_wire_stage(schema, cfg.transport, "uplink")

@@ -9,6 +9,7 @@ from repro.core.baselines import common
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import topology as topology_lib
 from repro.federated import transport as transport_lib
 
 
@@ -32,6 +33,8 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         downlink=(transport_lib.Stream("model", layout.dim),))
 
     def init(key, data):
+        if cfg.topology is not None:
+            cfg.topology.check_clients(data.num_clients, "fedprox")
         state = {"params": layout.slab(params0, data.num_clients)}
         if cfg.transport is not None:
             state["ef"] = jnp.zeros(
@@ -52,12 +55,15 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         updated, _ = local(pc, xc, yc, None, pc, keys=keys)  # center = start
         return updated
 
+    topo = topology_lib.check_composition(
+        cfg.topology, "fedprox", shard_state=cfg.shard_state,
+        async_buffer=cfg.async_buffer)
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
     ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
     _masked = common.make_fedavg_masked_round(
         local, train=_train, impl=kernel_impl, sops=sops,
         upload_stage=ustage, layout=layout, transport=cfg.transport,
-        schema=schema)
+        schema=schema, topology=topo)
 
     def dense(state, data, key):
         new = _round(state["params"], data.n, data.x, data.y, key)
@@ -87,7 +93,8 @@ def make_fedprox(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
                                         async_cfg=cfg.async_buffer,
                                         sops=sops, shard_keys=shard_keys,
                                         upload_stage=ustage,
-                                        transport=cfg.transport),
+                                        transport=cfg.transport,
+                                        topology=topo),
                     lambda s: layout.unravel(s["params"]),
                     comm_scheme="broadcast", num_streams=1,
                     injects_faults=cfg.faults is not None,

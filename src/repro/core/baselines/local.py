@@ -9,6 +9,7 @@ from repro.core.baselines import common
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import topology as topology_lib
 from repro.federated import transport as transport_lib
 
 
@@ -38,6 +39,10 @@ def make_local(apply_fn, params0, cfg: FedConfig = FedConfig()):
         updated, _ = local(pc, xc, yc, None, keys=keys)
         return updated
 
+    topology_lib.unsupported(
+        cfg.topology, "local",
+        "no collaboration — each participant's upload scatters back to "
+        "its own row, so there is no aggregate for an edge tier to form")
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
     ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
     # no mixing: each participant keeps its own update (pad slots are

@@ -10,6 +10,7 @@ from repro.core.baselines.common import group_average
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import topology as topology_lib
 from repro.federated import transport as transport_lib
 
 
@@ -51,6 +52,11 @@ def make_oracle(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         updated, _ = local(pc, xc, yc, None, keys=keys)
         return updated
 
+    topology_lib.unsupported(
+        cfg.topology, "oracle",
+        "per-group FedAvg factorizes over groups, but ground-truth "
+        "group membership crosscuts the static edge assignment — a "
+        "(group × edge) partial-sum layout is future work")
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
     ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
 

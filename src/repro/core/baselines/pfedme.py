@@ -18,6 +18,7 @@ from repro.core.baselines import common
 from repro.core.strategy import FedConfig, Strategy, register
 from repro.data.loader import epoch_batches
 from repro.federated import faults as faults_lib
+from repro.federated import topology as topology_lib
 from repro.federated import transport as transport_lib
 from repro.federated.client import client_vmap, make_loss
 
@@ -92,6 +93,11 @@ def make_pfedme(apply_fn, params0,
         mixed = jax.tree.map(lambda a, b: (1 - beta) * a + beta * b, new_w, avg)
         return layout.ravel(mixed), layout.ravel(phi)
 
+    topology_lib.unsupported(
+        cfg.topology, "pfedme",
+        "the β-mix blends each participant's RAW w_i with the cohort "
+        "average CLIENT-side — the served value is per-client, not a "
+        "broadcast aggregate an edge tier could relay")
     sops = common.StateOps(cfg.mesh, cfg.shard_state)
     ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
     tstage = transport_lib.make_wire_stage(schema, cfg.transport, "uplink")

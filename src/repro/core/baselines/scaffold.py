@@ -29,6 +29,7 @@ from repro.core.strategy import FedConfig, Strategy, register
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
 from repro.federated import mesh as mesh_lib
+from repro.federated import topology as topology_lib
 from repro.federated import transport as transport_lib
 
 
@@ -56,6 +57,11 @@ def make_scaffold(apply_fn, params0, cfg: FedConfig = FedConfig(lr=0.01, momentu
                   transport_lib.Stream("control", layout.dim)),
     )
     width = layout.dim_aligned  # one stream's slab slice
+    topology_lib.unsupported(
+        cfg.topology, "scaffold",
+        "option II couples every client's control variate to ONE global "
+        "c re-averaged over all m stored c_i rows each round — per-edge "
+        "partial means of the cohort's c_i⁺ are not that update")
     ustage = faults_lib.upload_stage(cfg.faults, cfg.robust, schema)
     tstage = transport_lib.make_wire_stage(schema, cfg.transport, "uplink")
     dstage = transport_lib.make_wire_stage(schema, cfg.transport,

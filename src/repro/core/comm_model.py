@@ -45,10 +45,30 @@ module stays numpy-only): ``delta`` and ``relay`` streams compress,
 round-time/bytes function takes an optional ``schema``; the uplink AND
 the downlink terms scale by the schema's compressed/raw byte ratio, so
 a compressed broadcast (server-side EF) shrinks Tdl exactly like the
-quantized upload shrinks Tul. ``schema=None`` falls back to the scalar
-pre-schema pricing — :func:`transport_payload_bytes` /
-:func:`transport_ul_scale` on the uplink, raw downlink — which a
-single-delta-uplink schema reproduces exactly.
+quantized upload shrinks Tul. ``schema=None`` prices the payload as one
+single-delta model stream (``transport_ul_scale`` on the uplink, raw
+downlink) — exactly what the deleted scalar ``transport_payload_bytes``
+charged.
+
+Per-tier link budgets (``SystemParams.tiers``, a :class:`TierParams`):
+the two-tier topology (``FedConfig.topology``) splits every link price
+into a client↔edge tier and an edge↔PS backhaul tier. The client↔edge
+terms keep the flat ``t_dl``/``ρ·t_dl`` rates (edges are near the
+clients); the backhaul adds ``backhaul_dl·t_dl`` per model transmission
+(UL asymmetry ``backhaul_rho``), multiplied by a LOAD-DEPENDENT
+congestion factor ``1 + congestion·(e_active − 1)`` on the PS links —
+the more edges talk to the PS at once, the slower each PS link runs.
+Only ``broadcast``/``groupcast`` schemes tier (per-client ``unicast`` /
+``client_mixing`` mixes read every cohort column at the PS and do not
+factorize over edge aggregates — they raise, matching the engine's
+capability guard). The flat-equivalence contract, pinned by tests:
+``tiers=None`` leaves every price byte-identical to the single-link
+model, and so does the degenerate ``TierParams(backhaul_dl=0,
+congestion=0)`` (a free backhaul collapses the two tiers into one).
+What the topology buys is counted by :func:`ps_uplink_bytes_per_round` /
+:func:`ps_downlink_bytes_per_round`: the PS-side backhaul carries
+``e_active·k`` edge aggregates per round instead of ``c`` client
+uploads.
 
 TPU-adaptation note (DESIGN.md §2): on a pod these DL streams become ICI
 collective volume; this module keeps the paper's analytic wireless model so
@@ -67,35 +87,47 @@ def harmonic(m: int) -> float:
     return sum(1.0 / i for i in range(1, m + 1))
 
 
-def transport_payload_bytes(model_bytes: int, transport=None) -> int:
-    """Uplink bytes ONE client ships for one model under ``transport``.
+@dataclasses.dataclass(frozen=True)
+class _FallbackStream:
+    """Duck-typed single-delta stream for schema-less byte pricing.
 
-    ``transport=None`` is the raw float32 wire: ``model_bytes`` as-is.
-    With a quantized transport (``FedConfig.transport``, duck-typed on
-    its ``chunk`` attribute so this module stays numpy-only) every
-    parameter travels as one byte (int8 and fp8 are both 1 B/param) plus
-    one float32 scale per ``chunk`` parameters:
-
-        d + 4 * ceil(d / chunk)   where d = model_bytes / 4.
-
-    The scale overhead is what keeps int8 at ~3.88x (not 4x) reduction
-    for the default chunk of 128 — the honest number the Fig. 5 byte
-    frontier and the quantized-uplink replay report.
+    ``width`` may be fractional (``model_bytes / 4`` for a payload that
+    is not 4-byte aligned) so the raw price round-trips to exactly
+    ``model_bytes``; declared :class:`~repro.federated.transport.Stream`
+    widths are always integers.
     """
-    if transport is None:
-        return int(model_bytes)
-    chunk = int(transport.chunk)
-    if chunk <= 0:
-        raise ValueError(f"transport.chunk must be positive, got {chunk}")
-    d = int(model_bytes) / 4.0  # float32 params on the dense wire
-    return int(math.ceil(d + 4.0 * math.ceil(d / chunk)))
+
+    width: float
+    coding: str = "delta"
+
+
+@dataclasses.dataclass(frozen=True)
+class _FallbackSchema:
+    uplink: tuple
+    downlink: tuple = ()
+
+
+def _model_schema(model_bytes: int) -> _FallbackSchema:
+    """Price a bare ``model_bytes`` payload as one delta model stream.
+
+    Strategies without a declared wire schema upload exactly one model
+    delta and download raw models, so the schema-less fallback is the
+    single-stream schema with ``width = model_bytes/4`` float32
+    coordinates (delta up, raw down) — :func:`wire_bytes` then
+    reproduces the pre-schema scalar pricing exactly, including for
+    payloads that are not 4-byte aligned (the width stays fractional and
+    only the final byte total is ceiled).
+    """
+    w = int(model_bytes) / 4.0
+    return _FallbackSchema(uplink=(_FallbackStream(w),),
+                           downlink=(_FallbackStream(w, "raw"),))
 
 
 def wire_bytes(schema, transport=None, direction: str = "uplink") -> int:
     """Bytes ONE transmission of a direction's declared streams costs.
 
-    Replaces the scalar :func:`transport_payload_bytes` for
-    schema-declaring strategies: each stream of
+    The ONE byte-pricing primitive (schema-less payloads route through
+    it too, via :func:`_model_schema`): each stream of
     ``schema.uplink``/``schema.downlink`` is priced by its TRUE
     coordinate count and coding — ``raw`` streams (and every stream when
     ``transport`` is None) cost ``4·width`` (float32); quantized
@@ -112,9 +144,11 @@ def wire_bytes(schema, transport=None, direction: str = "uplink") -> int:
     :func:`uplink_bytes_per_round` / :func:`downlink_bytes_per_round`.
     """
     streams = schema.uplink if direction == "uplink" else schema.downlink
-    total = 0
+    total = 0.0
     for s in streams:
-        w = int(s.width)
+        # declared Stream widths are ints; the schema-less fallback may
+        # carry a fractional float32 width (unaligned model_bytes)
+        w = s.width
         if transport is None or s.coding == "raw":
             total += 4 * w
         else:
@@ -123,7 +157,7 @@ def wire_bytes(schema, transport=None, direction: str = "uplink") -> int:
                 raise ValueError(
                     f"transport.chunk must be positive, got {chunk}")
             total += w + 4 * math.ceil(w / chunk)
-    return total
+    return int(math.ceil(total))
 
 
 def _wire_scale(schema, transport, direction: str) -> float:
@@ -139,10 +173,10 @@ def _wire_scale(schema, transport, direction: str) -> float:
 def transport_ul_scale(transport=None) -> float:
     """Multiplier on UL transmission time/bytes under ``transport``.
 
-    ``(1 + 4/chunk) / 4`` — the asymptotic ratio of
-    :func:`transport_payload_bytes` to the raw float32 payload (exact
-    when ``chunk`` divides the parameter count, which the slab layout's
-    128-lane alignment guarantees for the default chunk). ``None`` = 1.
+    ``(1 + 4/chunk) / 4`` — the asymptotic compressed/raw ratio of a
+    quantized delta stream (exact when ``chunk`` divides the parameter
+    count, which the slab layout's 128-lane alignment guarantees for
+    the default chunk). ``None`` = 1.
     """
     if transport is None:
         return 1.0
@@ -153,12 +187,42 @@ def transport_ul_scale(transport=None) -> float:
 
 
 @dataclasses.dataclass(frozen=True)
+class TierParams:
+    """Edge↔PS backhaul budget for the two-tier topology.
+
+    ``backhaul_dl`` is the PS→edge transmission time of one model in
+    units of the client-tier ``t_dl`` (0 = free backhaul — the
+    flat-equivalence degenerate); ``backhaul_rho`` the backhaul's UL/DL
+    asymmetry (wired backhauls are usually symmetric, hence 1.0, unlike
+    the wireless client tier's ρ≈4); ``congestion`` the load penalty γ —
+    every PS link runs ``1 + γ·(e_active − 1)`` slower when ``e_active``
+    edges transact simultaneously.
+    """
+
+    num_edges: int
+    backhaul_dl: float = 0.25
+    backhaul_rho: float = 1.0
+    congestion: float = 0.0
+
+    def __post_init__(self):
+        if self.num_edges < 1:
+            raise ValueError(f"num_edges must be >= 1, got {self.num_edges}")
+        if self.backhaul_dl < 0 or self.backhaul_rho <= 0 or \
+                self.congestion < 0:
+            raise ValueError(
+                "need backhaul_dl >= 0, backhaul_rho > 0, congestion >= 0; "
+                f"got {self.backhaul_dl}, {self.backhaul_rho}, "
+                f"{self.congestion}")
+
+
+@dataclasses.dataclass(frozen=True)
 class SystemParams:
     m: int  # number of clients
     rho: float = 4.0  # T_ul / T_dl
     t_dl: float = 1.0  # downlink transmission time of one model
     t_min: float = 1.0  # minimum compute time (in units of t_dl)
     inv_mu: float = 1.0  # mean extra straggler delay 1/μ (0 ⇒ reliable)
+    tiers: TierParams | None = None  # edge↔PS budget; None = flat single-link
 
 
 def _active(m: int, cohort_size: int | None) -> int:
@@ -177,6 +241,42 @@ def _require_streams(num_streams, scheme: str) -> int:
             f"{scheme!r} pricing needs num_streams (the m_t downlink "
             "stream count); got None")
     return int(num_streams)
+
+
+def _tier_streams(scheme: str, num_streams, served: int) -> int:
+    """Downlink stream count k of a tiered round (broadcast/groupcast)."""
+    if scheme == "broadcast":
+        return 1
+    if scheme == "groupcast":
+        return min(_require_streams(num_streams, scheme), max(served, 1))
+    raise ValueError(
+        f"{scheme!r} does not tier: per-client unicast/client-mixing "
+        "downlinks read every cohort column at the PS and cannot "
+        "factorize over edge aggregates (SystemParams.tiers supports "
+        "broadcast and groupcast schemes only — the same capability "
+        "boundary as FedConfig.topology)")
+
+
+def _tier_terms(p: SystemParams, scheme: str, num_streams, c: int,
+                served: int, dl_scale: float, ul_scale: float):
+    """(downlink, extra backhaul-uplink) time of a tiered round.
+
+    The downlink is the PS→edge backhaul (k model streams, congested by
+    the active-edge load) plus the edge→client last hop at the flat
+    ``t_dl`` rate; the returned uplink term is the NEW edge→PS leg (k
+    aggregates per edge link, congested) that rides on top of the flat
+    client→edge upload. With ``backhaul_dl = 0`` both backhaul legs
+    vanish and the round prices exactly like the flat single-link model
+    — the flat-equivalence contract.
+    """
+    tiers = p.tiers
+    e = min(tiers.num_edges, c)
+    cf = 1.0 + tiers.congestion * max(e - 1, 0)
+    t_bh = tiers.backhaul_dl * p.t_dl
+    k = _tier_streams(scheme, num_streams, served)
+    dl = k * (t_bh * cf + p.t_dl) * dl_scale
+    ul_bh = k * tiers.backhaul_rho * t_bh * cf * ul_scale
+    return dl, ul_bh
 
 
 def expected_compute_time(p: SystemParams,
@@ -199,12 +299,21 @@ def round_time(p: SystemParams, scheme: str, num_streams: int | None = None,
     strategy's wire schema), BOTH link terms by the per-direction
     compressed/raw byte ratio of :func:`wire_bytes`; ``schema=None``
     keeps the pre-schema pricing (UL by :func:`transport_ul_scale`,
-    downlink full-precision).
+    downlink full-precision). With ``p.tiers`` the link terms split into
+    client↔edge + congested edge↔PS backhaul legs (see
+    :func:`_tier_terms`); ``tiers=None`` is byte-identical to the flat
+    single-link price.
     """
     c = _active(p.m, cohort_size)
-    t_ul = p.rho * p.t_dl * _wire_scale(schema, transport, "uplink")
-    t_dl = p.t_dl * _wire_scale(schema, transport, "downlink")
+    ul_scale = _wire_scale(schema, transport, "uplink")
+    dl_scale = _wire_scale(schema, transport, "downlink")
+    t_ul = p.rho * p.t_dl * ul_scale
+    t_dl = p.t_dl * dl_scale
     t_comp = expected_compute_time(p, cohort_size)
+    if p.tiers is not None:
+        dl, ul_bh = _tier_terms(p, scheme, num_streams, c, c,
+                                dl_scale, ul_scale)
+        return dl + t_comp + t_ul + ul_bh
     if scheme == "broadcast":
         dl = t_dl
     elif scheme == "groupcast":
@@ -260,13 +369,19 @@ def deadline_round_time(p: SystemParams, scheme: str,
         c = compute.shape[0]
     dropped = compute > deadline
     survivors = int((~dropped).sum())
-    t_ul = p.rho * p.t_dl * _wire_scale(schema, transport, "uplink")
-    t_dl = p.t_dl * _wire_scale(schema, transport, "downlink")
+    ul_scale = _wire_scale(schema, transport, "uplink")
+    dl_scale = _wire_scale(schema, transport, "downlink")
+    t_ul = p.rho * p.t_dl * ul_scale
+    t_dl = p.t_dl * dl_scale
     if survivors == 0:
         # everyone timed out: the server waits out the deadline (or the
         # fastest client under an infinite one) and serves nobody
         return float(min(deadline, compute.min())), dropped
     t_comp = float(deadline) if dropped.any() else float(compute.max())
+    if p.tiers is not None:
+        dl, ul_bh = _tier_terms(p, scheme, num_streams, c, survivors,
+                                dl_scale, ul_scale)
+        return dl + t_comp + t_ul + ul_bh, dropped
     if scheme == "broadcast":
         dl = t_dl
     elif scheme == "groupcast":
@@ -348,11 +463,17 @@ def async_round_time(p: SystemParams, scheme: str,
     # async DOWNLINK stays raw f32 (a flush rewrites arbitrary row
     # subsets — no per-receiver reference to delta-code against), so the
     # dl terms below deliberately keep the raw t_dl
-    t_ul = p.rho * p.t_dl * _wire_scale(schema, transport, "uplink")
+    ul_scale = _wire_scale(schema, transport, "uplink")
+    t_ul = p.rho * p.t_dl * ul_scale
     if applied is not None and applied <= 0:
         return expected_compute_time(p, cohort_size) + t_ul
     b = min(min(int(flush_k), c) if applied is None else int(applied), p.m)
     t_comp = expected_kth_compute_time(p, min(int(flush_k), c), cohort_size)
+    if p.tiers is not None:
+        # the raw async downlink tiers too (dl_scale 1.0); the flush's
+        # applied batch sets the served stream count on both backhaul legs
+        dl, ul_bh = _tier_terms(p, scheme, num_streams, c, b, 1.0, ul_scale)
+        return dl + t_comp + t_ul + ul_bh
     if scheme == "broadcast":
         dl = p.t_dl
     elif scheme == "groupcast":
@@ -411,18 +532,72 @@ def uplink_bytes_per_round(model_bytes: int, scheme: str, m: int,
     from these same c uploads, so refreshed and stale-W runs have
     IDENTICAL per-round uplink bytes — pinned by a regression test.
 
-    ``transport`` prices the quantized wire per client via
-    :func:`transport_payload_bytes` (dtype-aware: 1 B/param + one f32
-    scale per chunk); ``None`` is the raw float32 payload, unchanged.
-    With a ``schema`` the per-client unit is the schema's per-stream
-    :func:`wire_bytes` instead — SCAFFOLD's two-stream upload honestly
-    costs twice a model, quantized or not.
+    ``transport`` prices the quantized wire per client (1 B/param + one
+    f32 scale per chunk); ``None`` is the raw float32 payload,
+    unchanged. With a ``schema`` the per-client unit is the schema's
+    per-stream :func:`wire_bytes` — SCAFFOLD's two-stream upload
+    honestly costs twice a model, quantized or not; without one the
+    payload prices as a single delta model stream (the same
+    :func:`wire_bytes` path, see :func:`_model_schema`).
     """
     if scheme not in ("broadcast", "groupcast", "unicast", "client_mixing"):
         raise ValueError(f"unknown scheme {scheme!r}")
-    unit = (wire_bytes(schema, transport, "uplink") if schema is not None
-            else transport_payload_bytes(model_bytes, transport))
+    unit = wire_bytes(schema if schema is not None
+                      else _model_schema(model_bytes), transport, "uplink")
     return _active(m, cohort_size) * unit
+
+
+def ps_uplink_bytes_per_round(model_bytes: int, scheme: str, m: int,
+                              num_streams: int | None = None,
+                              cohort_size: int | None = None, *,
+                              num_edges: int | None = None,
+                              transport=None, schema=None) -> int:
+    """Edge↔PS uplink bytes — the backhaul the two-tier engine relieves.
+
+    Flat (``num_edges=None``): every client upload transits the PS link,
+    so this equals :func:`uplink_bytes_per_round`. Tiered: each of the
+    ``e = min(num_edges, c)`` active edges ships its tier-1 aggregates
+    once — ``k`` model-sized streams for a k-stream groupcast policy,
+    one for broadcast — so the PS ingests ``e·k`` units instead of
+    ``c``. That ``c / (e·k)`` ratio is the hierarchical replay's
+    headline metric.
+    """
+    unit = wire_bytes(schema if schema is not None
+                      else _model_schema(model_bytes), transport, "uplink")
+    c = _active(m, cohort_size)
+    if num_edges is None:
+        if scheme not in ("broadcast", "groupcast", "unicast",
+                          "client_mixing"):
+            raise ValueError(f"unknown scheme {scheme!r}")
+        return c * unit
+    e = min(int(num_edges), c)
+    return e * _tier_streams(scheme, num_streams, c) * unit
+
+
+def ps_downlink_bytes_per_round(model_bytes: int, scheme: str, m: int,
+                                num_streams: int | None = None,
+                                cohort_size: int | None = None, *,
+                                num_edges: int | None = None,
+                                transport=None, schema=None) -> int:
+    """Edge↔PS downlink bytes (PS egress over the backhaul links).
+
+    Flat: equals :func:`downlink_bytes_per_round`. Tiered: the PS sends
+    each active edge the round's ``k`` downlink streams once
+    (``e·k`` units) and the edges fan out to their clients over the
+    client tier — broadcast replication across e backhaul links can make
+    this LARGER than the flat single broadcast; the topology's win is
+    the uplink counter above, and reporting both keeps the replay
+    honest.
+    """
+    unit = wire_bytes(schema if schema is not None
+                      else _model_schema(model_bytes), transport, "downlink")
+    c = _active(m, cohort_size)
+    if num_edges is None:
+        return downlink_bytes_per_round(
+            model_bytes, scheme, m, num_streams, cohort_size,
+            transport=transport, schema=schema)
+    e = min(int(num_edges), c)
+    return e * _tier_streams(scheme, num_streams, c) * unit
 
 
 def ici_collective_bytes(model_bytes: int, scheme: str, m: int,

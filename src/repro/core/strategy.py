@@ -162,6 +162,35 @@ class FedConfig:
     :mod:`repro.federated.transport`). Requires cohort rounds (the dense
     path has no upload stage). ``None`` (the default) keeps every
     existing trajectory bit-identical.
+
+    ``topology`` (a :class:`repro.federated.topology.Topology`, or
+    ``None`` = off) opts cohort rounds into the two-tier hierarchical
+    engine: clients are statically assigned to edge aggregators, the
+    tier-1 masked mix runs per edge over fixed-shape padded per-edge
+    slots (the Cohort/sentinel trick one level up), and only the
+    ``(E, ·)`` edge-aggregate slab crosses the edge↔PS backhaul for the
+    mass-weighted tier-2 combine — an exact factorization of the flat
+    linear rules, so accuracy matches while PS-side traffic shrinks
+    from ``c`` uploads to ``E·k`` aggregates (priced by
+    ``comm_model.SystemParams.tiers``). Supported where the PS rule is
+    linear in the uploads (the FedAvg family and clustered ucfl,
+    composing with ``transport``, ``faults``/``robust``, ``w_refresh``
+    and replicated ``mesh``); per-client unicast mixes (ucfl full,
+    fedfomo, ...), ``shard_state`` and ``async_buffer`` raise
+    NotImplementedError at construction with a capability note.
+    Requires cohort rounds (the dense path has no per-edge upload
+    stage). ``None`` (the default) keeps every existing trajectory
+    bit-identical.
+
+    ``selection`` (a :class:`repro.federated.participation.SelectionConfig`,
+    or ``None`` = off) declares Pareto-biased cohort selection: per-round
+    sampling mass biased by compute speed, link quality, a
+    battery/diurnal availability trace, and data value, with a
+    deterministic round-robin fairness lane bounding every
+    positive-mass client's selection window. Drivers thread it into the
+    sampler via :func:`repro.federated.participation.with_selection`
+    (the strategy itself never draws cohorts). ``None`` keeps the
+    configured sampler untouched.
     """
     lr: float = 0.1
     momentum: float = 0.9
@@ -175,3 +204,5 @@ class FedConfig:
     faults: Any = None
     robust: Any = None
     transport: Any = None
+    topology: Any = None
+    selection: Any = None

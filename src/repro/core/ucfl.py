@@ -62,6 +62,7 @@ from repro.data.loader import fixed_partition
 from repro.federated import async_buffer
 from repro.federated import client as fedclient
 from repro.federated import faults as faults_lib
+from repro.federated import topology as topology_lib
 from repro.federated import transport as transport_lib
 from repro.kernels import ops
 
@@ -116,6 +117,14 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
     Mutually exclusive with ``w_refresh`` for now (the refresh folds the
     barrier round's uploads; buffering them too would need a second
     (B, d) pre-params slab — recorded in ROADMAP).
+
+    ``cfg.topology`` opts the CLUSTERED variant's cohort rounds into the
+    two-tier engine (see :mod:`repro.federated.topology`): edges ship
+    per-cluster partial sums, the PS normalizes once, and the centroids
+    match the flat mix up to float association. Full personalization
+    rejects the knob at construction (its Eq. 8 unicast mix does not
+    factorize over edge partials); ``w_refresh`` composes — the fresh
+    rules feed the same tiered serve.
     """
     if cfg.async_buffer is not None and cfg.w_refresh is not None:
         raise ValueError(
@@ -123,6 +132,17 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             "combined yet: the streaming refresh consumes each barrier "
             "round's (pre, post) upload pair, which the async buffer "
             "does not retain (see ROADMAP)")
+    if num_streams is None:
+        topology_lib.unsupported(
+            cfg.topology, "ucfl",
+            "full personalization's Eq. 8 mix is per-client unicast — "
+            "every receiver's row reads every cohort column, so the PS "
+            "rule has no per-edge partial-sum factorization (use the "
+            "clustered variant)")
+    topo = topology_lib.check_composition(
+        cfg.topology, f"ucfl_k{num_streams}", shard_state=cfg.shard_state,
+        async_buffer=cfg.async_buffer)
+    edge_arr = topo.edge_array() if topo is not None else None
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
@@ -158,6 +178,8 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
 
     def init(key, data):
         m = data.num_clients
+        if topo is not None:
+            topo.check_clients(m, "ucfl")
         collab = compute_collaboration(
             apply_fn, params0, data, var_batch_size=var_batch_size,
             impl=kernel_impl, chunk_size=cfg.chunk_size, mesh=cfg.mesh,
@@ -231,6 +253,31 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         ef_dl = sops.scatter(ef_dl, idx, efdc)
         return sops.scatter(params, idx, served), ef_dl
 
+    def _tiered_serve(params, w, labels, onehot, post, idx, mask, safe):
+        # Two-tier §IV-B mix. Tier 1: each edge accumulates per-cluster
+        # PARTIAL sums of its own members' uploads plus the matching
+        # rule-mass partials — the raw centroid rules of
+        # ``masked_clustered_rows`` split by edge membership. Tier 2: the
+        # PS sums the E partials and normalizes ONCE, so the centroids
+        # equal the flat renormalized mix up to float association while
+        # only E·k (partial, mass) aggregates transit the backhaul
+        # instead of c client uploads. The alive fallback (a slot whose
+        # centroid rule has no cohort mass keeps its own model) and the
+        # represented-cluster stream count match the flat path exactly.
+        fmask = mask.astype(w.dtype)
+        lc = jnp.take(labels, safe)
+        oc = jnp.take(onehot, safe, axis=0) * fmask[:, None]  # (c, k)
+        cw = oc.T @ (w[safe][:, safe] * fmask[None, :])  # (k, c) raw rules
+        eoh = topology_lib.edge_onehot(edge_arr, topo.num_edges, idx, mask)
+        part = jnp.einsum("kc,ce,cd->ekd", cw, eoh, post)  # (E, k, d)
+        pmass = jnp.einsum("kc,ce->ek", cw, eoh)  # (E, k)
+        massk = jnp.sum(pmass, axis=0)  # (k,)
+        cent = jnp.sum(part, axis=0) / jnp.maximum(massk, 1e-12)[:, None]
+        served = jnp.where((massk > 1e-12)[lc][:, None],
+                           jnp.take(cent, lc, axis=0), post)
+        n_streams = jnp.sum(jnp.max(oc, axis=0) > 0)
+        return sops.scatter(params, idx, served), n_streams
+
     @functools.partial(jax.jit, static_argnames=("streams",),
                        donate_argnums=(0, 1, 2))
     def _masked(params, ef, ef_dl, w, labels, onehot, idx, mask, x, y, key,
@@ -254,6 +301,10 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         if ustage is not None:
             post, idx, mask = ustage(pc, post, idx, mask, key, x.shape[0])
             safe = aggregation.safe_gather_index(idx, x.shape[0])
+        if topo is not None:
+            new, n_streams = _tiered_serve(params, w, labels, onehot,
+                                           post, idx, mask, safe)
+            return new, ef, ef_dl, n_streams
         rows, n_streams = _mix_rows(w, labels, onehot, idx, mask, safe,
                                     streams)
         new, ef_dl = _serve(params, pc, post, rows, idx, mask, ef_dl)
@@ -290,6 +341,12 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         refresh, w = refresh_hook(pc[..., :layout.dim],
                                   post[..., :layout.dim], refresh, idx,
                                   mask, n)
+        if topo is not None:
+            # the FRESH rules feed the same tiered serve — w_refresh and
+            # the two-tier engine compose without a second code path
+            new, n_streams = _tiered_serve(params, w, labels, onehot,
+                                           post, idx, mask, safe)
+            return new, ef, ef_dl, refresh, w, n_streams
         rows, n_streams = _mix_rows(w, labels, onehot, idx, mask, safe,
                                     streams)
         new, ef_dl = _serve(params, pc, post, rows, idx, mask, ef_dl)
@@ -430,7 +487,7 @@ def make_ucfl(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
             dense, masked, masked_jit=masked_jit, mesh=cfg.mesh,
             async_fn=amasked, async_cfg=acfg, sops=sops,
             shard_keys=shard_keys, upload_stage=ustage,
-            transport=cfg.transport),
+            transport=cfg.transport, topology=topo),
         eval_params=lambda s: layout.unravel(s["params"]),
         comm_scheme=scheme,
         num_streams=None if num_streams in (None, "auto") else num_streams,
@@ -467,6 +524,11 @@ def make_ucfl_parallel(apply_fn, params0, cfg: FedConfig = FedConfig(), *,
         "the m× per-stream update stack has no single (c, d) upload "
         "slab to quantize — the m× uplink cost is the point of this "
         "upper bound")
+    topology_lib.unsupported(
+        cfg.topology, "ucfl_parallel",
+        "the §V-E upper bound mixes EVERY stream over every cohort "
+        "column with the (m, c) column-sliced W — there are no per-edge "
+        "partial aggregates for an edge tier to ship")
     local = fedclient.make_federated_local_sgd(
         apply_fn, lr=cfg.lr, momentum=cfg.momentum, epochs=cfg.epochs,
         batch_size=cfg.batch_size, chunk_size=cfg.chunk_size, mesh=cfg.mesh,

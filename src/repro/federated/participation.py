@@ -46,6 +46,18 @@ Samplers
     (time-of-day cosine with per-client offsets) and
     :func:`battery_trace` (charge-limited duty cycles) generate
     realistic such traces.
+``pareto``
+    Pareto-biased selection (the Jung et al. 2024 line): per-round
+    sampling mass is the product of the :class:`SelectionConfig` biases
+    — compute speed, link quality, data value — sharpened by the
+    ``bias`` exponent and gated by a battery/diurnal availability trace
+    (phases reuse the generators above). Zero-mass clients are never
+    drawn; when fewer than ``cohort_size`` clients carry mass the whole
+    positive-mass set participates, availability-style. A deterministic
+    round-robin *fairness lane* reserves one slot per round for the
+    statically-positive clients in turn, so every client with positive
+    static mass is selected at least once every ``n_pos`` rounds it is
+    up — biased throughput without starvation.
 
 Full participation (``fraction=1.0``, the default) is represented by a
 ``None`` cohort so the engine can keep the legacy dense path bit-exact.
@@ -58,7 +70,7 @@ import math
 import jax
 import numpy as np
 
-SAMPLERS = ("uniform", "weighted", "round_robin", "availability")
+SAMPLERS = ("uniform", "weighted", "round_robin", "availability", "pareto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +178,135 @@ def _pad(members: np.ndarray, slots: int, m: int) -> Cohort:
 
 
 @dataclasses.dataclass(frozen=True)
+class SelectionConfig:
+    """Pareto-biased cohort selection mass for the ``pareto`` sampler.
+
+    Each knob weights one per-client utility; the per-round sampling
+    mass is their product, sharpened by ``bias`` and gated by the
+    battery trace::
+
+        mass_i(t) = (compute_i · link_i · n_i^[data_value])^bias
+                    · battery[i, t mod period]
+
+    Attributes:
+      compute: optional (m,) nonnegative relative compute speeds — bias
+        toward clients that finish local SGD fast (shrinks the
+        max-of-cohort compute term in ``comm_model.round_time``).
+      link: optional (m,) nonnegative relative link qualities — bias
+        toward clients with cheap uplinks.
+      battery: optional (m, period) boolean availability trace (see
+        :func:`battery_trace` / :func:`diurnal_trace`); a client in a
+        down phase has zero mass that round.
+      data_value: when True, multiply by the local dataset size ``n``
+        (the classic importance-sampling bias).
+      bias: exponent > 0 sharpening (>1) or flattening (<1) the static
+        mass; battery gating is applied after the exponent.
+      fairness_lane: when True (default), one cohort slot per round is
+        reserved for the statically-positive clients in deterministic
+        round-robin turn (skipped if that client is battery-gated), so
+        every positive-static-mass client is selected within a bounded
+        window instead of starving under sharp bias.
+    """
+
+    compute: np.ndarray | None = None
+    link: np.ndarray | None = None
+    battery: np.ndarray | None = None
+    data_value: bool = False
+    bias: float = 1.0
+    fairness_lane: bool = True
+
+    def __post_init__(self):
+        if not self.bias > 0.0:
+            raise ValueError(f"bias must be > 0, got {self.bias}")
+        for name in ("compute", "link"):
+            v = getattr(self, name)
+            if v is None:
+                continue
+            v = np.asarray(v, np.float64)
+            if v.ndim != 1:
+                raise ValueError(f"{name} must be 1-D (m,), got {v.shape}")
+            if np.any(v < 0) or not np.all(np.isfinite(v)):
+                raise ValueError(f"{name} must be finite and nonnegative")
+            object.__setattr__(self, name, v)
+        if self.battery is not None:
+            b = np.asarray(self.battery, bool)
+            if b.ndim != 2:
+                raise ValueError(
+                    f"battery must be an (m, period) trace, got {b.shape}")
+            object.__setattr__(self, "battery", b)
+
+    def static_mass(self, m: int, n=None) -> np.ndarray:
+        """The round-independent mass (before battery gating)."""
+        mass = np.ones(m, np.float64)
+        for name in ("compute", "link"):
+            v = getattr(self, name)
+            if v is not None:
+                if v.shape[0] != m:
+                    raise ValueError(
+                        f"{name} has {v.shape[0]} entries for m={m} clients")
+                mass = mass * v
+        if self.data_value:
+            if n is None:
+                raise ValueError(
+                    "SelectionConfig.data_value needs per-client sizes n")
+            nn = np.clip(np.asarray(jax.device_get(n), np.float64), 0.0, None)
+            if nn.shape[0] != m:
+                raise ValueError(
+                    f"n has {nn.shape[0]} entries for m={m} clients")
+            mass = mass * nn
+        return mass ** self.bias
+
+    def mass(self, rnd: int, m: int, n=None) -> np.ndarray:
+        """Round ``rnd``'s sampling mass (static mass, battery-gated)."""
+        mass = self.static_mass(m, n)
+        if self.battery is not None:
+            if self.battery.shape[0] != m:
+                raise ValueError(
+                    f"battery trace has {self.battery.shape[0]} rows for "
+                    f"m={m} clients")
+            mass = mass * self.battery[:, (rnd - 1) % self.battery.shape[1]]
+        return mass
+
+
+def _pareto_members(sel: SelectionConfig, rng, rnd: int, c: int, m: int,
+                    n=None) -> np.ndarray:
+    """Draw the ``pareto`` sampler's members for one round."""
+    mass = sel.mass(rnd, m, n)
+    pos = np.flatnonzero(mass > 0)
+    if pos.size == 0:
+        # every client gated off this phase: an all-masked cohort the
+        # engine skips, same contract as the availability sampler
+        return np.empty(0, np.int64)
+    if pos.size <= c:
+        return pos
+    picks = []
+    p = mass.copy()
+    if sel.fairness_lane:
+        static_pos = np.flatnonzero(sel.static_mass(m, n) > 0)
+        lane = int(static_pos[(rnd - 1) % static_pos.size])
+        if p[lane] > 0:  # the lane client may be battery-gated this round
+            picks.append(lane)
+            p[lane] = 0.0
+    rest = rng.choice(m, size=c - len(picks), replace=False, p=p / p.sum())
+    return np.concatenate([np.asarray(picks, np.int64), rest])
+
+
+def with_selection(pcfg: "ParticipationConfig | None",
+                   selection: SelectionConfig | None):
+    """Thread a ``FedConfig.selection`` into a participation policy.
+
+    ``None`` selection returns ``pcfg`` untouched; otherwise the policy
+    (or a fresh full-participation one) is switched to the ``pareto``
+    sampler carrying the selection config. This is the seam drivers use
+    — the strategy never draws cohorts itself.
+    """
+    if selection is None:
+        return pcfg
+    base = pcfg if pcfg is not None else ParticipationConfig()
+    return dataclasses.replace(base, sampler="pareto", selection=selection)
+
+
+@dataclasses.dataclass(frozen=True)
 class ParticipationConfig:
     """Who participates each round.
 
@@ -175,6 +316,8 @@ class ParticipationConfig:
       sampler: one of :data:`SAMPLERS`.
       availability: optional (m, period) boolean array for the
         ``availability`` sampler; column ``t % period`` gates round t.
+      selection: a :class:`SelectionConfig`, required by (and only used
+        by) the ``pareto`` sampler.
       seed: extra salt folded into the sampling key stream so the cohort
         sequence is independent of the training randomness.
     """
@@ -183,6 +326,7 @@ class ParticipationConfig:
     cohort_size: int | None = None
     sampler: str = "uniform"
     availability: np.ndarray | None = None
+    selection: SelectionConfig | None = None
     seed: int = 0
 
     def __post_init__(self):
@@ -193,6 +337,9 @@ class ParticipationConfig:
             raise ValueError(f"fraction must be in (0, 1], got {self.fraction}")
         if self.sampler == "availability" and self.availability is None:
             raise ValueError("availability sampler needs an availability trace")
+        if self.sampler == "pareto" and self.selection is None:
+            raise ValueError("pareto sampler needs a SelectionConfig "
+                             "(ParticipationConfig.selection)")
 
     def resolve_size(self, m: int) -> int:
         """Number of cohort slots for ``m`` clients.
@@ -211,7 +358,11 @@ class ParticipationConfig:
         return max(1, min(m, math.ceil(round(self.fraction * m, 9))))
 
     def is_full(self, m: int) -> bool:
-        return self.sampler != "availability" and self.resolve_size(m) == m
+        # availability/pareto can mask slots (gated clients) even at
+        # fraction 1.0, so they never take the dense full-participation
+        # fast path
+        return (self.sampler not in ("availability", "pareto")
+                and self.resolve_size(m) == m)
 
 
 def _rng(cfg: ParticipationConfig, rnd: int) -> np.random.Generator:
@@ -331,6 +482,8 @@ def sample_cohort(cfg: ParticipationConfig | None, rnd: int, m: int,
     elif cfg.sampler == "round_robin":
         start = ((rnd - 1) * c) % m
         members = (start + np.arange(c)) % m
+    elif cfg.sampler == "pareto":
+        members = _pareto_members(cfg.selection, rng, rnd, c, m, n)
     else:  # availability
         trace = np.asarray(cfg.availability, bool)
         up = np.flatnonzero(trace[:, (rnd - 1) % trace.shape[1]])

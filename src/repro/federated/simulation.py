@@ -143,8 +143,14 @@ def _check_finite_state(strategy, state, rnd):
 def run(strategy, apply_fn, data, key, *, rounds: int, eval_every: int = 1,
         verbose: bool = False, participation: part.ParticipationConfig | None
         = None, warmup: bool = True, eval_chunk: int | None = None,
-        eval_mesh=None, check_finite: bool | None = None) -> History:
+        eval_mesh=None, check_finite: bool | None = None,
+        selection=None) -> History:
     m = data.num_clients
+    if selection is not None:
+        # Pareto-biased cohort draws (FedConfig.selection): rewrite the
+        # participation policy to the pareto sampler carrying the per-
+        # client bias factors; the strategy never draws cohorts itself
+        participation = part.with_selection(participation, selection)
     key, ikey = jax.random.split(key)
     state = strategy.init(ikey, data)
     hist = History(strategy.name, [], [], [], [])
@@ -217,7 +223,8 @@ def run(strategy, apply_fn, data, key, *, rounds: int, eval_every: int = 1,
 
 
 def run_trials(make_strategy, apply_fn, data_fn, *, trials: int, rounds: int,
-               seed: int = 0, eval_every: int = 1, participation=None):
+               seed: int = 0, eval_every: int = 1, participation=None,
+               selection=None):
     """Average over independent trials (paper reports 5-trial means).
 
     The reported (avg, worst) pair comes from one model per trial — the
@@ -230,7 +237,8 @@ def run_trials(make_strategy, apply_fn, data_fn, *, trials: int, rounds: int,
         data = data_fn(dkey)
         strat = make_strategy(t)
         h = run(strat, apply_fn, data, skey, rounds=rounds,
-                eval_every=eval_every, participation=participation)
+                eval_every=eval_every, participation=participation,
+                selection=selection)
         avg, worst = h.paired_best
         finals.append(avg)
         worsts.append(worst)

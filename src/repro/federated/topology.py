@@ -1,0 +1,198 @@
+"""Static client→edge topology for the two-tier hierarchical engine.
+
+The flat round engine assumes every cohort upload lands on ONE parameter
+server.  A :class:`Topology` declares the production alternative: clients
+are statically assigned to edge aggregators (``edge_of[i]`` = the edge
+serving client ``i``), each edge runs the tier-1 masked mix over its own
+cohort members, and only the per-edge aggregates travel the edge↔PS
+backhaul for the tier-2 combine.  ``FedConfig.topology = None`` keeps the
+flat single-tier path bit-exact — the knob is strictly opt-in.
+
+Fixed-shape discipline (the Cohort/sentinel trick one level up):
+
+* every edge is padded to the same slot count ``s = slots_per_edge(c)``
+  (the static min of the cohort size and the largest edge population),
+  so the tiered round compiles exactly once per policy;
+* :func:`edge_partition` splits a padded cohort's ``(c,)`` slot arrays
+  into ``(E, s)`` per-edge slot arrays INSIDE the jitted round — a
+  stable argsort by edge id, so each edge's real slots form a prefix and
+  keep the cohort's strictly-increasing member order (the invariants the
+  per-edge masked (c, c)-row rules require);
+* pad slots carry the same sentinels as the flat engine (client index
+  ``m``, cohort-slot index ``c``) and rely on the sentinel-drop scatter
+  contract, so no gathered pad ever reaches a mix.
+
+Tiered mixes factorize the flat LINEAR rules exactly: tier-1 aggregates
+are normalized per edge together with their weight mass, tier-2
+reweights by mass — identical to the flat mix up to float association,
+which is why the hierarchical replay matches flat accuracy while the PS
+uplink shrinks from ``c`` client uploads to ``E·k`` edge aggregates.
+
+Strategies whose PS rule does NOT factorize over edge partial sums
+(per-client unicast mixes reading every cohort column: ucfl full
+personalization, fedfomo, pfedme's group payloads, ...) reject the knob
+at construction via :func:`unsupported` — the same capability-note
+discipline as ``transport.unsupported``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Static client→edge assignment for two-tier rounds.
+
+    Attributes:
+      edge_of: length-m tuple; ``edge_of[i]`` is the edge aggregator
+        serving client ``i`` (values in ``[0, num_edges)``).
+      num_edges: number of edge aggregators E (every edge may be empty
+        in a given cohort; a globally empty edge is allowed too).
+    """
+
+    edge_of: tuple
+    num_edges: int
+
+    def __post_init__(self):
+        edge_of = tuple(int(e) for e in self.edge_of)
+        object.__setattr__(self, "edge_of", edge_of)
+        if self.num_edges < 1:
+            raise ValueError(f"num_edges must be >= 1, got {self.num_edges}")
+        if not edge_of:
+            raise ValueError("edge_of must assign at least one client")
+        bad = [e for e in edge_of if not 0 <= e < self.num_edges]
+        if bad:
+            raise ValueError(
+                f"edge ids must lie in [0, {self.num_edges}), got {bad[:4]}")
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.edge_of)
+
+    @classmethod
+    def from_labels(cls, labels) -> "Topology":
+        """Build from any per-client label array (e.g. cluster labels)."""
+        lab = np.asarray(labels, dtype=np.int64).reshape(-1)
+        return cls(tuple(lab.tolist()), int(lab.max()) + 1)
+
+    @classmethod
+    def contiguous(cls, m: int, num_edges: int) -> "Topology":
+        """m clients in num_edges contiguous, near-equal blocks."""
+        return cls(tuple(np.arange(m) * num_edges // max(m, 1)), num_edges)
+
+    def slots_per_edge(self, cohort_slots: int) -> int:
+        """Static per-edge slot count s for a c-slot cohort.
+
+        A cohort draws distinct clients, so an edge can never hold more
+        cohort members than min(its population, c) — padding every edge
+        to that bound keeps the tiered round one compiled shape while
+        guaranteeing :func:`edge_partition` never overflows a block.
+        """
+        pop = np.bincount(np.asarray(self.edge_of), minlength=self.num_edges)
+        return int(min(cohort_slots, pop.max()))
+
+    def edge_array(self):
+        """The assignment as a device-ready (m,) int32 array."""
+        return jnp.asarray(self.edge_of, jnp.int32)
+
+    def check_clients(self, m: int, strategy: str) -> None:
+        if self.num_clients != m:
+            raise ValueError(
+                f"{strategy}: topology assigns {self.num_clients} clients "
+                f"but the dataset has {m}")
+
+
+def edge_ids(edge_arr, num_edges: int, idx, mask):
+    """Per-cohort-slot edge id; pads get the sentinel edge ``num_edges``."""
+    m = edge_arr.shape[0]
+    safe = jnp.minimum(idx, m - 1)
+    return jnp.where(mask, jnp.take(edge_arr, safe), num_edges)
+
+
+def edge_onehot(edge_arr, num_edges: int, idx, mask):
+    """(c, E) float32 edge membership of each cohort slot (pads all-zero)."""
+    g = edge_ids(edge_arr, num_edges, idx, mask)
+    return (g[:, None] == jnp.arange(num_edges)[None, :]).astype(jnp.float32)
+
+
+def edge_partition(edge_arr, num_edges: int, slots: int, idx, mask):
+    """Split a padded cohort into fixed-shape per-edge slot arrays.
+
+    Jit-safe: pure gather/argsort/scatter on static shapes.  Returns
+
+      eidx  (E, s) int32 — client indices per edge, sentinel m on pads
+      emask (E, s) bool  — True on real per-edge slots (prefix per edge)
+      eslot (E, s) int32 — the cohort slot each per-edge slot came from
+                           (sentinel c on pads; indexes the (c, ·) slab)
+
+    The stable argsort by edge id preserves the cohort's within-edge
+    slot order, so each edge's real members stay strictly increasing —
+    a valid Cohort one level down.  Pads sort to the sentinel edge
+    ``num_edges`` whose destinations fall past E·s and drop.
+    """
+    c = idx.shape[0]
+    m = edge_arr.shape[0]
+    g = edge_ids(edge_arr, num_edges, idx, mask)
+    order = jnp.argsort(g, stable=True)
+    gs = jnp.take(g, order)
+    pos = jnp.arange(c) - jnp.searchsorted(gs, gs, side="left")
+    dest = gs * slots + pos
+    flat = num_edges * slots
+    eidx = (jnp.full((flat,), m, jnp.int32)
+            .at[dest].set(jnp.take(idx, order).astype(jnp.int32),
+                          mode="drop"))
+    emask = (jnp.zeros((flat,), bool)
+             .at[dest].set(jnp.take(mask, order), mode="drop"))
+    eslot = (jnp.full((flat,), c, jnp.int32)
+             .at[dest].set(order.astype(jnp.int32), mode="drop"))
+    return (eidx.reshape(num_edges, slots),
+            emask.reshape(num_edges, slots),
+            eslot.reshape(num_edges, slots))
+
+
+def check_composition(topology, strategy: str, *, shard_state=False,
+                      async_buffer=None):
+    """Construction-time guards for the knob combos that cannot tier.
+
+    Returns ``topology`` (possibly None) when the combo is legal; the
+    supporting strategies call this once at build time so illegal combos
+    fail loudly with a capability note instead of silently flattening.
+    """
+    if topology is None:
+        return None
+    if not isinstance(topology, Topology):
+        raise TypeError(
+            f"FedConfig.topology must be a federated.topology.Topology, "
+            f"got {type(topology).__name__}")
+    if shard_state:
+        raise NotImplementedError(
+            f"FedConfig.topology does not compose with shard_state in "
+            f"{strategy}: the row-sharded gather/scatter owns the client "
+            "axis per device while the edge partition owns it per edge — "
+            "a joint edge×shard layout is future work (drop one knob)")
+    if async_buffer is not None:
+        raise NotImplementedError(
+            f"FedConfig.topology does not compose with async_buffer in "
+            f"{strategy}: a flush applies arrivals banked across rounds, "
+            "so no single round's edge partition covers the flushed "
+            "batch — tiering the pending buffer is future work (drop "
+            "one knob)")
+    return topology
+
+
+def unsupported(topology, strategy: str, why: str) -> None:
+    """Raise at construction when a strategy cannot tier its PS mix.
+
+    Mirrors ``transport.unsupported``: unsupported combos fail loudly
+    when the strategy is built, with a capability note, never silently
+    fall back to the flat path.
+    """
+    if topology is not None:
+        raise NotImplementedError(
+            f"FedConfig.topology is not supported by {strategy}: {why} "
+            "(supported: the fedavg family and clustered ucfl — "
+            "strategies whose PS mix factorizes over per-edge partial "
+            "aggregates)")

@@ -55,6 +55,19 @@ Buffered-async composition: the uplink stage runs before the deposit
 stays raw f32 — a flush rewrites arbitrary subsets of rows, so there is
 no per-receiver reference to delta-code against.
 
+Two-tier topology composition (``FedConfig.topology``): the transport
+stage dequantizes the cohort's uploads BEFORE the tier-1 per-edge mix,
+so the tiered engine consumes the same post-wire slab as the flat one
+and every supported (strategy, transport) pair above composes with a
+topology unchanged — the client→edge hop carries the quantized wire,
+the edge→PS hop carries f32 partial aggregates (priced per tier by
+``comm_model.SystemParams.tiers`` and the ``ps_*_bytes_per_round``
+backhaul counters). Topology itself is supported only where the PS mix
+factorizes over per-edge partial sums — fedavg, fedprox, and clustered
+ucfl; the rest raise at construction
+(:func:`repro.federated.topology.unsupported`), as do
+topology×shard_state and topology×async_buffer.
+
 Error feedback: each DIRECTION keeps one f32 accumulator slab spanning
 the concatenated aligned stream widths — ``(m, Σ dim_aligned)`` per
 client on the uplink, ``(1, Σ)`` (broadcast) or ``(m, Σ)`` (unicast) on

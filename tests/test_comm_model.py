@@ -181,3 +181,117 @@ def test_deadline_realized_compute_vector():
                                         deadline=4.0, compute=compute)
     assert list(dropped) == [False, True, False, True]
     assert t == pytest.approx(p.t_dl + 4.0 + p.rho * p.t_dl)
+
+
+# ------------------------------------------------- per-tier link budgets
+
+def test_tierparams_validates():
+    with pytest.raises(ValueError):
+        cm.TierParams(num_edges=0)
+    with pytest.raises(ValueError):
+        cm.TierParams(num_edges=2, backhaul_dl=-0.1)
+    with pytest.raises(ValueError):
+        cm.TierParams(num_edges=2, backhaul_rho=0.0)
+    with pytest.raises(ValueError):
+        cm.TierParams(num_edges=2, congestion=-1.0)
+
+
+def test_free_backhaul_is_bit_identical_to_flat():
+    """The flat-equivalence contract: tiers=None and the degenerate
+    TierParams(backhaul_dl=0, congestion=0) price every round the same
+    — a free backhaul collapses the two tiers into one."""
+    flat = cm.SystemParams(m=20, rho=4.0, inv_mu=1.0)
+    free = cm.SystemParams(m=20, rho=4.0, inv_mu=1.0,
+                           tiers=cm.TierParams(4, backhaul_dl=0.0,
+                                               congestion=0.0))
+    for scheme, k in (("broadcast", None), ("groupcast", 3)):
+        assert cm.round_time(free, scheme, k, cohort_size=8) == \
+            cm.round_time(flat, scheme, k, cohort_size=8)
+        tf, df = cm.deadline_round_time(flat, scheme, k, cohort_size=8,
+                                        deadline=3.0)
+        tt, dt = cm.deadline_round_time(free, scheme, k, cohort_size=8,
+                                        deadline=3.0)
+        assert tt == tf and list(dt) == list(df)
+        assert cm.async_round_time(free, scheme, k, cohort_size=8,
+                                   flush_k=3) == \
+            cm.async_round_time(flat, scheme, k, cohort_size=8, flush_k=3)
+
+
+def test_backhaul_budget_raises_round_price():
+    flat = cm.SystemParams(m=20, rho=4.0, inv_mu=1.0)
+    tier = cm.SystemParams(m=20, rho=4.0, inv_mu=1.0,
+                           tiers=cm.TierParams(4, backhaul_dl=0.25))
+    for scheme, k in (("broadcast", None), ("groupcast", 3)):
+        assert cm.round_time(tier, scheme, k, cohort_size=8) > \
+            cm.round_time(flat, scheme, k, cohort_size=8)
+
+
+def test_congestion_monotone_and_inert_with_one_edge():
+    def price(gamma, edges=4):
+        p = cm.SystemParams(m=20, rho=4.0, inv_mu=1.0,
+                            tiers=cm.TierParams(edges, congestion=gamma))
+        return cm.round_time(p, "groupcast", 3, cohort_size=8)
+
+    ts = [price(g) for g in (0.0, 0.5, 1.0, 2.0)]
+    assert all(a < b for a, b in zip(ts, ts[1:]))
+    # a single edge has no simultaneous PS links to congest
+    assert price(0.0, edges=1) == price(5.0, edges=1)
+
+
+def test_tiered_pricing_rejects_per_client_schemes():
+    """unicast/client_mixing PS rules read every cohort column — they do
+    not factorize over edge aggregates; pricing must refuse like the
+    engine's capability guard does."""
+    p = cm.SystemParams(m=20, rho=4.0, inv_mu=1.0,
+                        tiers=cm.TierParams(4))
+    for scheme in ("unicast", "client_mixing"):
+        with pytest.raises(ValueError, match="tier"):
+            cm.round_time(p, scheme, cohort_size=8)
+        with pytest.raises(ValueError, match="tier"):
+            cm.async_round_time(p, scheme, cohort_size=8, flush_k=3)
+
+
+def test_ps_uplink_bytes_tiered_vs_flat():
+    """The headline counter: flat ships c client uploads through the PS
+    link, tiered ships e·k edge aggregates — c/(e·k) fewer bytes."""
+    mb, m, c = 4_000, 20, 12
+    flat = cm.ps_uplink_bytes_per_round(mb, "groupcast", m, num_streams=2,
+                                        cohort_size=c)
+    assert flat == cm.uplink_bytes_per_round(mb, "groupcast", m,
+                                             cohort_size=c)
+    tier = cm.ps_uplink_bytes_per_round(mb, "groupcast", m, num_streams=2,
+                                        cohort_size=c, num_edges=2)
+    assert flat == 3 * tier  # c=12 uploads vs e·k = 4 aggregates
+    # broadcast policies ship ONE aggregate per edge
+    assert cm.ps_uplink_bytes_per_round(mb, "broadcast", m, cohort_size=c,
+                                        num_edges=2) == 2 * mb
+    # more edges than cohort members: only the active ones transact
+    assert cm.ps_uplink_bytes_per_round(mb, "broadcast", m, cohort_size=3,
+                                        num_edges=64) == 3 * mb
+
+
+def test_ps_downlink_bytes_tiered_replication():
+    """PS egress REPLICATES across edges (e·k streams) — tiered downlink
+    can exceed the flat single broadcast; the counter must say so."""
+    mb, m, c = 4_000, 20, 12
+    assert cm.ps_downlink_bytes_per_round(mb, "broadcast", m,
+                                          cohort_size=c) == mb
+    assert cm.ps_downlink_bytes_per_round(mb, "broadcast", m, cohort_size=c,
+                                          num_edges=4) == 4 * mb
+    flat_g = cm.ps_downlink_bytes_per_round(mb, "groupcast", m,
+                                            num_streams=2, cohort_size=c)
+    assert flat_g == 2 * mb
+    assert cm.ps_downlink_bytes_per_round(mb, "groupcast", m, num_streams=2,
+                                          cohort_size=c, num_edges=4) == \
+        4 * 2 * mb
+
+
+def test_ps_bytes_flat_equals_plain_counters():
+    """num_edges=None must collapse to the flat per-round counters."""
+    mb, m, c = 4_000, 20, 8
+    assert cm.ps_uplink_bytes_per_round(mb, "groupcast", m, num_streams=3,
+                                        cohort_size=c) == \
+        cm.uplink_bytes_per_round(mb, "groupcast", m, cohort_size=c)
+    assert cm.ps_downlink_bytes_per_round(mb, "unicast", m,
+                                          cohort_size=c) == \
+        cm.downlink_bytes_per_round(mb, "unicast", m, cohort_size=c)
